@@ -1,0 +1,66 @@
+"""GeMM-based convolution benchmark (the paper's application layer).
+
+Times im2col + low-bit GeMM for representative small-CNN conv layers at
+each quantization mode, and checks the eq. (5) channel guard.
+
+    PYTHONPATH=src python -m benchmarks.bench_conv [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.conv import conv2d_quantized
+from repro.kernels.ops import QuantMode
+
+LAYERS = [   # (img, c_in, c_out, kernel)
+    (32, 32, 64, 3),
+    (16, 64, 128, 3),
+    (8, 128, 256, 3),
+]
+MODES = ["bf16", "int8", "tnn", "tbn", "bnn"]
+
+
+def _time(call, reps=5):
+    call().block_until_ready()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        call().block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(quick=False):
+    key = jax.random.PRNGKey(0)
+    layers = LAYERS[:1] if quick else LAYERS
+    print("\nGeMM-based conv (im2col + low-bit GeMM), batch 4:")
+    print(f"{'layer':>20s}" + "".join(f"{m:>9s}" for m in MODES))
+    for img, ci, co, k in layers:
+        k1, k2 = jax.random.split(jax.random.fold_in(key, img))
+        x = jax.random.normal(k1, (4, img, img, ci))
+        w = jax.random.normal(k2, (k, k, ci, co)) * (k * k * ci) ** -0.5
+        row = []
+        for m in MODES:
+            mode = QuantMode(m)
+            f = jax.jit(lambda x, w, mode=mode: conv2d_quantized(
+                x, w, mode=mode))
+            row.append(_time(lambda: f(x, w), reps=3 if quick else 5))
+        base = row[0]
+        print(f"{f'{img}x{img}x{ci}->{co}':>20s}"
+              + "".join(f"{base/t:8.2f}x" for t in row))
+    print("(numbers are speedups vs bf16 on this container CPU via XLA)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Paper Table III analogue: measured speed ratios of the multiplication
+algorithms over the paper's own H x W x D grid.
+
+The paper times ARMv8 assembly microkernels on a Cortex-A73.  This repo
+targets TPU; on this CPU-only container we time the **XLA backend** of
+each algorithm (the same op mix the TPU VPU/MXU would run: xor/and/or +
+popcount + int32 adds for low-bit, int8 MXU-style dots for U8, bf16/f32
+dots for F32) through ``jax.jit``.  Absolute times mean little on a
+container CPU; the *ratio matrix* is the paper's Table III and is what
+we report.
+
+    PYTHONPATH=src python -m benchmarks.bench_matmul [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import GEMM_GRID
+from repro.core import encoding
+from repro.kernels import ops
+from repro.kernels.ops import QuantMode
+
+ALGOS = ["f32", "u8", "u4", "tnn", "tbn", "bnn"]
+
+
+def _build(algo: str, h: int, w: int, d: int, key):
+    """Returns a jitted callable() -> array for one (algo, shape)."""
+    k1, k2 = jax.random.split(key)
+    if algo == "f32":
+        a = jax.random.normal(k1, (h, d), jnp.float32)
+        b = jax.random.normal(k2, (d, w), jnp.float32)
+        f = jax.jit(lambda a, b: a @ b)
+        return lambda: f(a, b)
+    if algo in ("u8", "u4"):
+        bits = 8 if algo == "u8" else 4
+        a = jax.random.randint(k1, (h, d), 0, 2 ** bits).astype(jnp.uint8)
+        b = jax.random.randint(k2, (d, w), 0, 2 ** bits).astype(jnp.uint8)
+        fn = (ops.int8_affine_matmul if algo == "u8"
+              else ops.int4_affine_matmul)
+        f = jax.jit(lambda a, b: fn(a, b, 0, 0, d))
+        return lambda: f(a, b)
+    mode = QuantMode(algo)
+    if algo == "bnn":
+        a = encoding.random_binary(k1, (h, d))
+        b = encoding.random_binary(k2, (d, w))
+    elif algo == "tbn":
+        a = encoding.random_ternary(k1, (h, d))
+        b = encoding.random_binary(k2, (d, w))
+    else:
+        a = encoding.random_ternary(k1, (h, d))
+        b = encoding.random_ternary(k2, (d, w))
+    f = jax.jit(lambda a, b: ops.lowbit_matmul(a, b, mode, backend="xla"))
+    return lambda: f(a, b)
+
+
+def _time(call, *, reps: int = 5, inner: int = 3) -> float:
+    call().block_until_ready()                      # compile + warm
+    best = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = call()
+        out.block_until_ready()
+        best.append((time.perf_counter() - t0) / inner)
+    return float(np.median(best))
+
+
+def run(quick: bool = False) -> Dict[str, float]:
+    grid = list(itertools.product(
+        GEMM_GRID["height"][:2] if quick else GEMM_GRID["height"],
+        GEMM_GRID["width"][:2] if quick else GEMM_GRID["width"],
+        GEMM_GRID["depth"][:2] if quick else GEMM_GRID["depth"]))
+    key = jax.random.PRNGKey(0)
+    times: Dict[str, List[float]] = {a: [] for a in ALGOS}
+    for h, w, d in grid:
+        for algo in ALGOS:
+            times[algo].append(_time(_build(algo, h, w, d, key),
+                                     reps=3 if quick else 5))
+
+    mean = {a: float(np.mean(v)) for a, v in times.items()}
+    # Table III: cell (row B, col A) = E[T_B / T_A] over the grid
+    print("\nTable III analogue — efficiency ratio E[T_row / T_col] "
+          f"({len(grid)} shapes, XLA backend on container CPU):")
+    print("        " + "".join(f"{a:>8s}" for a in ALGOS))
+    ratio = {}
+    for b in ALGOS:
+        row = []
+        for a in ALGOS:
+            r = float(np.mean([tb / ta for tb, ta in
+                               zip(times[b], times[a])]))
+            row.append(r)
+            ratio[f"{b}/{a}"] = r
+        print(f"{b:>8s}" + "".join(f"{x:8.2f}" for x in row))
+    print("\nmean times (us): " +
+          ", ".join(f"{a}={mean[a]*1e6:.0f}" for a in ALGOS))
+    print("paper (ARM A73): tnn/f32=3.63 tbn/f32=3.75 bnn/f32=10.9 "
+          "tnn/u8=2.51 tnn/u4=1.44 bnn/tnn=2.99")
+    return ratio
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

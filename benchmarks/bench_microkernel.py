@@ -1,0 +1,121 @@
+"""Paper Table II analogue: per-element operation model of each
+multiplication algorithm — derived by COUNTING PRIMITIVES in the traced
+computation (the honest equivalent of the paper's hand-counted NEON
+instruction table, for our TPU formulation).
+
+For each algorithm we trace the jaxpr of one (m=16, n=8, k=256) matmul
+and count:
+
+* COM  — "computational" primitives (and/or/xor/not/popcount for the
+         low-bit modes; dot_general/multiply-add for f32/u8/u4);
+* MOV  — data-movement primitives (reshape/transpose/broadcast/convert/
+         slice/concatenate/pad);
+* INS  — (COM + MOV) / (m * n * k-words) per microkernel element, the
+         paper's efficiency figure of merit.
+
+k_max column: the overflow bound of eq. (4) in the configuration the
+algorithm actually uses on TPU (int32 accumulators; the paper's 16-bit
+bound is reported alongside as "k_max16").
+
+    PYTHONPATH=src python -m benchmarks.bench_microkernel
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding, quantize
+from repro.kernels import ops
+from repro.kernels.ops import QuantMode
+
+M, N, K = 16, 8, 256
+
+_COM = {"and", "or", "xor", "not", "population_count", "dot_general",
+        "add", "sub", "mul", "integer_pow"}
+_MOV = {"reshape", "transpose", "broadcast_in_dim", "convert_element_type",
+        "slice", "dynamic_slice", "concatenate", "pad", "squeeze",
+        "rev", "gather"}
+
+
+def _count(jaxpr) -> Dict[str, int]:
+    com = mov = other = 0
+    def walk(j):
+        nonlocal com, mov, other
+        for eqn in j.eqns:
+            name = eqn.primitive.name
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    walk(sub.jaxpr)
+            if name in _COM:
+                com += 1
+            elif name in _MOV:
+                mov += 1
+            elif name in ("scan", "while", "cond", "pjit", "custom_vjp_call",
+                          "custom_jvp_call", "remat", "closed_call"):
+                pass
+            else:
+                other += 1
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return {"COM": com, "MOV": mov, "OTH": other}
+
+
+def _trace(algo: str):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    if algo == "f32":
+        a = jax.random.normal(k1, (M, K)), jax.random.normal(k2, (K, N))
+        return jax.make_jaxpr(lambda a, b: a @ b)(*a)
+    if algo in ("u8", "u4"):
+        bits = 8 if algo == "u8" else 4
+        a = jax.random.randint(k1, (M, K), 0, 2 ** bits).astype(jnp.uint8)
+        b = jax.random.randint(k2, (K, N), 0, 2 ** bits).astype(jnp.uint8)
+        fn = (ops.int8_affine_matmul if algo == "u8"
+              else ops.int4_affine_matmul)
+        return jax.make_jaxpr(lambda a, b: fn(a, b, 0, 0, K))(a, b)
+    mode = QuantMode(algo)
+    a = (encoding.random_binary(k1, (M, K)) if algo == "bnn"
+         else encoding.random_ternary(k1, (M, K)))
+    b = (encoding.random_ternary(k2, (K, N)) if algo == "tnn"
+         else encoding.random_binary(k2, (K, N)))
+    return jax.make_jaxpr(
+        lambda a, b: ops.lowbit_matmul(a, b, mode, backend="xla"))(a, b)
+
+
+def run():
+    kmax32 = (1 << 31) - 1
+    kmax16 = quantize.k_max(1, 16, signed_unit=True)
+    rows = {
+        "f32": ("-", "-"),
+        "u8": (quantize.k_max(8, 32), quantize.k_max(8, 16)),
+        "u4": (quantize.k_max(4, 32), quantize.k_max(4, 16)),
+        "tnn": (kmax32, kmax16),
+        "tbn": (kmax32, kmax16),
+        "bnn": (kmax32, kmax16),
+    }
+    kwords = max(K // 32, 1)
+    print(f"\nTable II analogue — primitive counts for one "
+          f"{M}x{N}x{K} matmul (jaxpr of the XLA path):")
+    print(f"{'algo':>6s} {'COM':>6s} {'MOV':>6s} {'OTH':>6s} "
+          f"{'INS/elem':>9s} {'k_max(i32)':>11s} {'k_max16':>9s}")
+    for algo in ["f32", "u8", "u4", "tnn", "tbn", "bnn"]:
+        c = _count(_trace(algo))
+        ins = (c["COM"] + c["MOV"]) / (M * N * kwords)
+        km32, km16 = rows[algo]
+        print(f"{algo:>6s} {c['COM']:6d} {c['MOV']:6d} {c['OTH']:6d} "
+              f"{ins:9.4f} {km32!s:>11s} {km16!s:>9s}")
+    print("\npaper Table II (ARM NEON, per iteration): "
+          "F32 .302 | U8 .302 | U4 .180 | TNN .159 | TBN .151 | BNN .041")
+    print("note: jaxpr counts are per whole matmul (graph ops), not per "
+          "unrolled SIMD iteration — the per-element normalization makes "
+          "the *ordering* comparable, which is the paper's point.")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > experiments/report.md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES, applicable_shapes, SUBQUADRATIC
+from repro.roofline.analysis import HW, model_flops
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def _load(mesh, arch, shape):
+    p = os.path.join(DRYRUN_DIR, mesh, f"{arch}__{shape}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def dryrun_table():
+    print("| arch | shape | pod (256) | multipod (512) | GiB/dev raw | "
+          "GiB/dev corrected | compile s |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
+            if shape not in applicable_shapes(arch):
+                print(f"| {arch} | {shape} | — | — | — | — | — |"
+                      f" <!-- N/A: full attention, sub-quadratic required -->")
+                continue
+            rp = _load("pod", arch, shape)
+            rm = _load("multipod", arch, shape)
+            if rp is None:
+                continue
+            m = rp.get("memory", {})
+            raw = (m.get("argument_size_in_bytes", 0)
+                   + m.get("temp_size_in_bytes", 0)) / 2**30
+            corr = (m.get("argument_size_in_bytes", 0)
+                    + m.get("temp_corrected_bytes",
+                            m.get("temp_size_in_bytes", 0))) / 2**30
+            print(f"| {arch} | {shape} | {rp['status']} | "
+                  f"{(rm or {}).get('status', '?')} | {raw:.1f} | "
+                  f"{corr:.1f} | {rp.get('compile_s', 0):.0f} |")
+
+
+def roofline_table(mesh="pod", hw=HW()):
+    print(f"| arch | shape | compute ms | memory ms | collective ms | "
+          f"dominant | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in applicable_shapes(arch):
+            rec = _load(mesh, arch, shape)
+            if rec is None or rec.get("status") != "PASS" \
+                    or not rec.get("static"):
+                continue
+            s = rec["static"]
+            chips = rec["num_devices"]
+            pc = ARCHS[arch].param_counts()
+            sh = SHAPES[shape]
+            tokens = (sh.global_batch * sh.seq_len
+                      if sh.kind != "decode" else sh.global_batch)
+            mf = model_flops(pc["total"], pc["active"], tokens, sh.kind)
+            c = s["dot_flops"] / hw.peak_flops
+            m = s["hbm_bytes"] / hw.hbm_bw
+            n = s["collectives"]["total"] / hw.ici_bw
+            dom = max([("compute", c), ("memory", m), ("collective", n)],
+                      key=lambda t: t[1])[0]
+            step = max(c, m, n)
+            frac = (mf / chips / hw.peak_flops) / step if step else 0
+            ratio = mf / (s["dot_flops"] * chips) if s["dot_flops"] else 0
+            print(f"| {arch} | {shape} | {c*1e3:.1f} | {m*1e3:.1f} | "
+                  f"{n*1e3:.1f} | {dom} | {ratio:.2f} | {frac*100:.1f}% |")
+
+
+if __name__ == "__main__":
+    print("### §Dry-run matrix\n")
+    dryrun_table()
+    print("\n### §Roofline (single-pod, per device per step)\n")
+    roofline_table()

@@ -1,0 +1,119 @@
+"""§Roofline: the three-term table from the dry-run artifacts.
+
+    compute    = dot_flops      / peak_FLOPs          (per device)
+    memory     = hbm_bytes      / HBM_bw
+    collective = collective_byt / link_bw
+
+Terms come from the static post-SPMD HLO analysis stored by
+launch/dryrun.py (trip-count-aware, TPU-true dtypes — see
+roofline/hlo_stats.py for why the executable-level cost_analysis cannot
+be used directly).  MODEL_FLOPS = 6*N_active*D for train, 2*N_active*D
+for inference; the MODEL/HLO ratio exposes remat/padding/dispatch waste.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh pod] [--csv out]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, SHAPES, applicable_shapes
+from repro.roofline.analysis import HW, model_flops
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_cell(mesh: str, arch: str, shape: str,
+              base: str = DRYRUN_DIR) -> Optional[Dict]:
+    p = os.path.join(base, mesh, f"{arch}__{shape}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def cell_row(rec: Dict, hw: HW = HW()) -> Optional[Dict]:
+    if rec.get("status") != "PASS" or not rec.get("static"):
+        return None
+    s = rec["static"]
+    chips = rec["num_devices"]
+    cfg = ARCHS[rec["arch"]]
+    shape = SHAPES[rec["shape"]]
+    pc = cfg.param_counts()
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind != "decode" else shape.global_batch)
+    mf = model_flops(pc["total"], pc["active"], tokens, shape.kind)
+
+    compute_s = s["dot_flops"] / hw.peak_flops
+    memory_s = s["hbm_bytes"] / hw.hbm_bw
+    coll_s = s["collectives"]["total"] / hw.ici_bw
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda t: t[1])[0]
+    step_s = max(compute_s, memory_s, coll_s)
+    # roofline fraction: useful model flops vs what the dominant-term
+    # step time could have computed at peak.
+    mfu_roof = (mf / chips / hw.peak_flops) / step_s if step_s else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "step_s": step_s,
+        "model_flops": mf,
+        "hlo_flops_global": s["dot_flops"] * chips,
+        "useful_ratio": mf / (s["dot_flops"] * chips) if s["dot_flops"] else 0,
+        "roofline_frac": mfu_roof,
+        "mem_gib": (rec["memory"]["argument_size_in_bytes"]
+                    + rec["memory"]["temp_size_in_bytes"]) / 2**30,
+    }
+
+
+def run(mesh: str = "pod", csv: Optional[str] = None,
+        base: str = DRYRUN_DIR) -> List[Dict]:
+    rows = []
+    print(f"\n§Roofline — mesh={mesh} (terms in ms/step/device; "
+          f"v5e 197TF bf16, 819GB/s HBM, 50GB/s ICI)")
+    print(f"{'arch':25s} {'shape':12s} {'comp':>7s} {'mem':>7s} "
+          f"{'coll':>7s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s} "
+          f"{'GiB/dev':>8s}")
+    for arch in ARCHS:
+        for shape in applicable_shapes(arch):
+            rec = load_cell(mesh, arch, shape, base)
+            if rec is None:
+                continue
+            row = cell_row(rec)
+            if row is None:
+                print(f"{arch:25s} {shape:12s} "
+                      f"{rec.get('error', 'FAIL')[:60]}")
+                continue
+            rows.append(row)
+            print(f"{arch:25s} {shape:12s} "
+                  f"{row['compute_s']*1e3:7.1f} {row['memory_s']*1e3:7.1f} "
+                  f"{row['collective_s']*1e3:7.1f} {row['dominant']:>10s} "
+                  f"{row['useful_ratio']:7.2f} "
+                  f"{row['roofline_frac']*100:6.1f}% "
+                  f"{row['mem_gib']:8.2f}")
+    if csv and rows:
+        import csv as _csv
+        with open(csv, "w", newline="") as f:
+            w = _csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+        print(f"wrote {csv}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+    run(mesh=args.mesh, csv=args.csv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark orchestrator — one section per paper table/figure plus the
+roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is quick-ish (container CPU); --full runs the paper's whole
+H x W x D grid.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full Table III grid (slow on 1 CPU core)")
+    args = ap.parse_args()
+    quick = not args.full
+
+    t0 = time.time()
+    print("=" * 72)
+    print("repro benchmarks — fast low-bit matmul (Trusov et al. 2022) on TPU")
+    print("=" * 72)
+
+    print("\n[1/4] Table II analogue — microkernel operation model")
+    from benchmarks import bench_microkernel
+    bench_microkernel.run()
+
+    print("\n[2/4] Table III analogue — matmul speed-ratio matrix")
+    from benchmarks import bench_matmul
+    bench_matmul.run(quick=quick)
+
+    print("\n[3/4] GeMM-based convolution")
+    from benchmarks import bench_conv
+    bench_conv.run(quick=quick)
+
+    print("\n[4/4] Roofline report (from dry-run artifacts, if present)")
+    from benchmarks import roofline
+    try:
+        rows = roofline.run(mesh="pod")
+        if not rows:
+            print("  (no dry-run artifacts yet — run "
+                  "`python -m repro.launch.dryrun` first)")
+    except Exception as e:
+        print(f"  roofline skipped: {e}")
+
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

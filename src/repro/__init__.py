@@ -1,0 +1,5 @@
+"""repro — low-bit (binary/ternary/ternary-binary) GeMM, adapted from ARM
+NEON to TPU Pallas, as a first-class feature of a multi-pod JAX LM
+framework.  See DESIGN.md."""
+
+__version__ = "0.1.0"

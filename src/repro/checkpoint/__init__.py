@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpointer import (Checkpointer, CheckpointConfig,
+                                           save_tree, restore_tree)
+
+__all__ = ["Checkpointer", "CheckpointConfig", "save_tree", "restore_tree"]

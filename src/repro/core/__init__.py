@@ -1,0 +1,7 @@
+"""Core of the reproduction: low-bit encodings, quantizers, the
+QuantLinear/conv primitives and quantization policies."""
+
+from repro.core import encoding, quantize, policy
+from repro.core.qlinear import QuantLinear, linear_init, linear_apply
+from repro.core.conv import conv2d_quantized, im2col, check_conv_depth
+from repro.core.policy import QuantPolicy, POLICIES

@@ -1,0 +1,86 @@
+"""GeMM-based convolution — the paper's CNN deployment path (§I, §II).
+
+``im2col`` unrolls the feature map so a conv becomes C = A @ B with
+A = patches (B*OH*OW, Hk*Wk*Cin) and B = filters (Hk*Wk*Cin, Cout); the
+low-bit GeMM kernels then apply unchanged.  This is exactly how the paper
+runs TNN/TBN/BNN conv layers on ARM, and eq. (5)'s input-channel bound is
+enforced here for the int16-fidelity mode.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize
+from repro.kernels import ops
+from repro.kernels.ops import QuantMode
+
+__all__ = ["im2col", "conv2d_quantized", "check_conv_depth"]
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1,
+           padding: str = "SAME") -> Tuple[jnp.ndarray, Tuple[int, int, int]]:
+    """x (B, H, W, C) -> (B*OH*OW, kh*kw*C), plus (B, OH, OW).
+
+    Built from kh*kw static slices (differentiable, fusion-friendly); the
+    column order is (dy, dx, c), matching the filter reshape below.
+    """
+    b, h, w, c = x.shape
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-w // stride)
+        ph = max((oh - 1) * stride + kh - h, 0)
+        pw = max((ow - 1) * stride + kw - w, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+    elif padding == "VALID":
+        oh = (h - kh) // stride + 1
+        ow = (w - kw) // stride + 1
+    else:
+        raise ValueError(padding)
+
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = jax.lax.slice(
+                x, (0, dy, dx, 0),
+                (b, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1))
+            cols.append(patch)                       # (B, OH, OW, C)
+    patches = jnp.concatenate(cols, axis=-1)          # (B, OH, OW, kh*kw*C)
+    return patches.reshape(b * oh * ow, kh * kw * c), (b, oh, ow)
+
+
+def check_conv_depth(c_in: int, kh: int, kw: int, *, accum_bits: int = 16,
+                     lowbit: bool = True) -> None:
+    """Raise if the GeMM depth would overflow the paper's accumulator
+    (eq. (4)-(5)).  Only binding for the int16-fidelity configuration."""
+    kmax = quantize.k_max(1 if lowbit else 8, accum_bits, signed_unit=lowbit)
+    if c_in * kh * kw > kmax:
+        raise ValueError(
+            f"conv depth {c_in}*{kh}*{kw} = {c_in * kh * kw} exceeds "
+            f"k_max={kmax} for {accum_bits}-bit accumulation (paper eq. (5))")
+
+
+def conv2d_quantized(x: jnp.ndarray, filters: jnp.ndarray,
+                     mode: QuantMode = QuantMode.TNN, *,
+                     stride: int = 1, padding: str = "SAME",
+                     backend: str = ops.DEFAULT_BACKEND,
+                     paper_accum_i16: bool = False) -> jnp.ndarray:
+    """Quantized conv: x (B,H,W,Cin), filters (kh,kw,Cin,Cout) fp master.
+
+    Forward = im2col + quantized GeMM (with STE grads), i.e. the paper's
+    deployment recipe verbatim.
+    """
+    kh, kw, cin, cout = filters.shape
+    if paper_accum_i16 and mode.is_lowbit:
+        check_conv_depth(cin, kh, kw)
+    a, (b, oh, ow) = im2col(x, kh, kw, stride, padding)
+    w2 = filters.reshape(kh * kw * cin, cout)
+    if mode in (QuantMode.F32, QuantMode.BF16):
+        y = jnp.dot(a, w2)
+    else:
+        y = ops.quantized_matmul(a, w2, mode, backend, True)
+    return y.reshape(b, oh, ow, cout)

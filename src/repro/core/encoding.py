@@ -1,0 +1,134 @@
+"""Bit-plane encodings for binary and ternary tensors (paper §III-A).
+
+The paper packs 8 consecutive values of the reduction (depth) axis into one
+byte and streams those bytes through 128-bit NEON registers.  On TPU the
+natural word is the 32-bit lane, so we pack 32 consecutive depth elements
+into one ``uint32`` word; a row of words then maps onto the (8, 128) VREG /
+VMEM tiling.
+
+Encodings
+---------
+binary   x in {-1, +1}   ->  1 bit  :  +1 -> 0,  -1 -> 1          (eq. 6)
+ternary  x in {-1, 0, +1} -> 2 bits :  +1 -> (1,0), 0 -> (0,0), -1 -> (0,1)
+                                        (the (1,1) code is invalid; Table I)
+
+Padding
+-------
+The depth axis is padded to a multiple of 32 (and the callers may pad the
+*word* axis further, to a multiple of the kernel's lane block).  Pad
+positions encode:
+
+* binary:  bit 0 (== value +1) on *both* operands, so each pad position
+  contributes ``xor == 0`` to the popcount and eq. (6) evaluated with the
+  *valid* depth ``k`` stays exact;
+* ternary: plane bits (0,0) (== value 0), whose product with anything is 0
+  by Table I, so no correction is needed at all.
+
+All functions are pure ``jnp`` and shard trivially along the row axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+_WORD_DTYPE = jnp.uint32
+
+__all__ = [
+    "WORD_BITS",
+    "packed_width",
+    "pack_bits",
+    "unpack_bits",
+    "pack_binary",
+    "unpack_binary",
+    "pack_ternary",
+    "unpack_ternary",
+]
+
+
+def packed_width(k: int, multiple: int = 1) -> int:
+    """Number of uint32 words needed for depth ``k``, rounded up so the word
+    count is a multiple of ``multiple`` (kernels want lane-aligned widths)."""
+    words = -(-k // WORD_BITS)
+    return -(-words // multiple) * multiple
+
+
+def _pad_last(x: jnp.ndarray, to: int) -> jnp.ndarray:
+    pad = to - x.shape[-1]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths)
+
+
+def pack_bits(bits: jnp.ndarray, *, word_multiple: int = 1) -> jnp.ndarray:
+    """Pack a {0,1} integer/bool array along its last axis, LSB-first.
+
+    ``bits`` of shape (..., k) -> uint32 of shape (..., packed_width(k)).
+    Element ``k = w * 32 + i`` lands in bit ``i`` of word ``w``.
+    """
+    k = bits.shape[-1]
+    kw = packed_width(k, word_multiple)
+    b = _pad_last(bits.astype(_WORD_DTYPE), kw * WORD_BITS)
+    b = b.reshape(*b.shape[:-1], kw, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=_WORD_DTYPE)
+    # Distinct powers of two: a sum is a bitwise OR here.
+    return jnp.sum(b << shifts, axis=-1, dtype=_WORD_DTYPE)
+
+
+def unpack_bits(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`; returns int32 {0,1} of shape (..., k)."""
+    shifts = jnp.arange(WORD_BITS, dtype=_WORD_DTYPE)
+    bits = (words[..., None] >> shifts) & _WORD_DTYPE(1)
+    bits = bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS)
+    return bits[..., :k].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Binary: {-1, +1}
+# ---------------------------------------------------------------------------
+
+def pack_binary(x: jnp.ndarray, *, word_multiple: int = 1) -> jnp.ndarray:
+    """Encode x in {-1,+1} (any real dtype; sign decides, 0 counts as +1)
+    into uint32 bit planes along the last axis.  +1 -> 0, -1 -> 1."""
+    bits = (x < 0)
+    return pack_bits(bits, word_multiple=word_multiple)
+
+
+def unpack_binary(words: jnp.ndarray, k: int, dtype=jnp.float32) -> jnp.ndarray:
+    bits = unpack_bits(words, k)
+    return (1 - 2 * bits).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ternary: {-1, 0, +1}
+# ---------------------------------------------------------------------------
+
+def pack_ternary(x: jnp.ndarray, *, word_multiple: int = 1):
+    """Encode x in {-1,0,+1} into (plus, minus) uint32 planes (paper 2-bit
+    encoding).  Values are classified by sign; |x| is ignored."""
+    plus = pack_bits(x > 0, word_multiple=word_multiple)
+    minus = pack_bits(x < 0, word_multiple=word_multiple)
+    return plus, minus
+
+
+def unpack_ternary(plus: jnp.ndarray, minus: jnp.ndarray, k: int,
+                   dtype=jnp.float32) -> jnp.ndarray:
+    p = unpack_bits(plus, k)
+    m = unpack_bits(minus, k)
+    return (p - m).astype(dtype)
+
+
+def random_binary(key, shape, dtype=jnp.float32) -> jnp.ndarray:
+    """Test helper: uniform random {-1,+1} tensor."""
+    return (1 - 2 * jax.random.bernoulli(key, 0.5, shape)).astype(dtype)
+
+
+def random_ternary(key, shape, p_zero: float = 1 / 3, dtype=jnp.float32) -> jnp.ndarray:
+    """Test helper: random {-1,0,+1} tensor."""
+    k1, k2 = jax.random.split(key)
+    nz = jax.random.bernoulli(k1, 1.0 - p_zero, shape)
+    sign = 1 - 2 * jax.random.bernoulli(k2, 0.5, shape)
+    return (nz * sign).astype(dtype)

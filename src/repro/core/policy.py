@@ -1,0 +1,49 @@
+"""Per-layer quantization policy.
+
+Low-bit networks never quantize everything: embeddings, norms, routers,
+SSM recurrence parameters and usually the first/last layers stay in high
+precision (XNOR-Net, TWN, TBN papers all do this).  ``QuantPolicy`` maps
+projection *classes* to :class:`QuantMode` so a single flag can turn an
+assigned LM architecture into its TNN/TBN/BNN variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.ops import QuantMode
+
+__all__ = ["QuantPolicy", "POLICIES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    name: str
+    attn_proj: QuantMode = QuantMode.BF16   # Q/K/V/O projections
+    ffn_proj: QuantMode = QuantMode.BF16    # FFN / expert up,gate,down
+    ssm_proj: QuantMode = QuantMode.BF16    # Mamba in/out/x projections
+    head: QuantMode = QuantMode.BF16        # LM head (often kept fp)
+    backend: str = "xla"
+
+    def for_class(self, cls: str) -> QuantMode:
+        return getattr(self, cls)
+
+
+def _uniform(name: str, mode: QuantMode, head: QuantMode = QuantMode.BF16,
+             backend: str = "xla") -> QuantPolicy:
+    return QuantPolicy(name=name, attn_proj=mode, ffn_proj=mode,
+                       ssm_proj=mode, head=head, backend=backend)
+
+
+POLICIES = {
+    "bf16": _uniform("bf16", QuantMode.BF16),
+    "f32": _uniform("f32", QuantMode.F32),
+    "int8": _uniform("int8", QuantMode.INT8),
+    "int4": _uniform("int4", QuantMode.INT4),
+    "tnn": _uniform("tnn", QuantMode.TNN),
+    "tbn": _uniform("tbn", QuantMode.TBN),
+    "bnn": _uniform("bnn", QuantMode.BNN),
+    # dense-proxy beyond-paper variants (packed storage, MXU compute)
+    "tnn_dense": _uniform("tnn_dense", QuantMode.TNN, backend="dense"),
+    "bnn_dense": _uniform("bnn_dense", QuantMode.BNN, backend="dense"),
+}

@@ -1,0 +1,122 @@
+"""Quantizers and overflow guards (paper §II-B, eq. (1)-(5)).
+
+Linear (affine) quantization for the u8/u4 baselines, sign/threshold
+quantizers for binary/ternary values, and the accumulator-overflow depth
+bound ``k_max`` of eq. (4) that the paper uses to limit reduction depth
+(and, through eq. (5), the input-channel count of a conv layer).
+
+Note on eq. (1): the paper prints ``clamp(floor(x/s - z), Q, 0)``; for the
+dequantization in eq. (2) — ``x ~= s * (x_hat - z)`` — to hold, the
+quantizer must be ``x_hat = clamp(round(x/s) + z, 0, Q)``.  We implement
+the latter (this is also what gemmlowp [29] does) and treat the sign in the
+paper as a typo.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AffineQuant",
+    "affine_calibrate",
+    "affine_quantize",
+    "affine_dequantize",
+    "binarize",
+    "ternarize",
+    "ternary_threshold",
+    "k_max",
+    "max_conv_in_channels",
+    "ACCUM_BITS_PAPER",
+]
+
+# The paper accumulates TNN/TBN/BNN products in signed 16-bit lanes.
+ACCUM_BITS_PAPER = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineQuant:
+    """scale / zero-point pair for n-bit affine quantization."""
+    scale: jnp.ndarray        # f32 scalar (per-tensor) or (n,) per-channel
+    zero_point: jnp.ndarray   # int32, same rank as scale
+    bits: int
+
+    @property
+    def qmax(self) -> int:
+        return (1 << self.bits) - 1
+
+
+def affine_calibrate(x: jnp.ndarray, bits: int, *, axis=None) -> AffineQuant:
+    """Min/max calibration: choose (s, z) so [min(x), max(x)] maps onto
+    [0, 2^bits - 1], always covering 0 (gemmlowp convention)."""
+    qmax = (1 << bits) - 1
+    lo = jnp.minimum(jnp.min(x, axis=axis), 0.0)
+    hi = jnp.maximum(jnp.max(x, axis=axis), 0.0)
+    scale = jnp.maximum(hi - lo, 1e-8) / qmax
+    zero_point = jnp.clip(jnp.round(-lo / scale), 0, qmax).astype(jnp.int32)
+    return AffineQuant(scale=scale, zero_point=zero_point, bits=bits)
+
+
+def affine_quantize(x: jnp.ndarray, q: AffineQuant) -> jnp.ndarray:
+    """eq. (1) (sign-corrected): x_hat = clamp(round(x/s) + z, 0, Q)."""
+    v = jnp.round(x / q.scale) + q.zero_point
+    return jnp.clip(v, 0, q.qmax).astype(jnp.int32)
+
+
+def affine_dequantize(x_hat: jnp.ndarray, q: AffineQuant) -> jnp.ndarray:
+    return (x_hat.astype(jnp.float32) - q.zero_point) * q.scale
+
+
+# ---------------------------------------------------------------------------
+# Binary / ternary quantizers
+# ---------------------------------------------------------------------------
+
+def binarize(x: jnp.ndarray):
+    """XNOR-Net-style binarization: sign(x) with a single fp scale
+    alpha = mean|x| so that ``alpha * sign(x)`` approximates x.
+    Returns (b in {-1,+1} float32, alpha scalar)."""
+    alpha = jnp.mean(jnp.abs(x))
+    b = jnp.where(x < 0, -1.0, 1.0).astype(jnp.float32)
+    return b, alpha
+
+
+def ternary_threshold(x: jnp.ndarray) -> jnp.ndarray:
+    """TWN heuristic threshold: 0.7 * mean|x|."""
+    return 0.7 * jnp.mean(jnp.abs(x))
+
+
+def ternarize(x: jnp.ndarray, threshold: Optional[jnp.ndarray] = None):
+    """Ternary-Weight-Network quantizer: t = sign(x) * 1[|x| > thr], with
+    fp scale alpha = E[|x| ; |x| > thr].  Returns (t, alpha)."""
+    thr = ternary_threshold(x) if threshold is None else threshold
+    mask = jnp.abs(x) > thr
+    t = jnp.sign(x) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    alpha = jnp.sum(jnp.abs(x) * mask) / denom
+    return t.astype(jnp.float32), alpha
+
+
+# ---------------------------------------------------------------------------
+# Overflow guards — eq. (4), (5)
+# ---------------------------------------------------------------------------
+
+def k_max(p_bits: int, q_bits: int = ACCUM_BITS_PAPER, *, signed_unit: bool = False) -> int:
+    """Maximum reduction depth with no accumulator overflow, eq. (4):
+    ``k_max = floor((2^q - 1) / (2^p - 1)^2)`` for p-bit operands
+    accumulated in q-bit registers.
+
+    For binary/ternary operands the per-step product is in {-1, 0, 1}
+    (``signed_unit=True``) and the bound is simply the largest magnitude a
+    signed q-bit register holds: 2^(q-1) - 1 (the paper's 32767 for q=16).
+    """
+    if signed_unit:
+        return (1 << (q_bits - 1)) - 1
+    return ((1 << q_bits) - 1) // (((1 << p_bits) - 1) ** 2)
+
+
+def max_conv_in_channels(kmax: int, kernel_h: int, kernel_w: int) -> int:
+    """eq. (5): the deepest GeMM a conv can produce is C_in * Hk * Wk."""
+    return kmax // (kernel_h * kernel_w)

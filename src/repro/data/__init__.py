@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataState, SyntheticLM, make_pipeline,
+                                 global_batch_spec)
+
+__all__ = ["DataState", "SyntheticLM", "make_pipeline", "global_batch_spec"]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels (+ XLA production paths and jnp oracles) for
+binary / ternary / ternary-binary / u8 / u4 matrix multiplication."""
+
+from repro.kernels import ref
+from repro.kernels.ops import (
+    QuantMode,
+    quantized_matmul,
+    lowbit_matmul,
+    packed_matmul,
+    pack_weights,
+    quantize_activations,
+    int8_affine_matmul,
+    int4_affine_matmul,
+)
+from repro.kernels.bnn_matmul import bnn_matmul_pallas
+from repro.kernels.tnn_matmul import tnn_matmul_pallas
+from repro.kernels.tbn_matmul import tbn_matmul_pallas
+from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.int4_matmul import int4_matmul_pallas

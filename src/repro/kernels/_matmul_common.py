@@ -1,0 +1,120 @@
+"""Shared plumbing for the low-bit Pallas matmul kernels.
+
+TPU mapping of the paper's blocked GeMM (Algorithm 2):
+
+* the 16x8 register microkernel becomes a (block_m x block_n) int32
+  accumulator tile that lives in VMEM and is revisited across the k grid
+  dimension (k is the innermost grid axis, so Pallas keeps the output
+  block resident while the reduction streams through);
+* PackNRowsA / PackNColsB become the uint32 bit-plane layout of
+  ``encoding.py`` plus ``BlockSpec.index_map`` tiling — the Pallas
+  pipeline's HBM->VMEM double buffering plays the role of the paper's
+  L1/L2 cache blocking (k_blk/m_blk/n_blk);
+* the paper's k-step of 8 bytes per loop iteration becomes ``word_chunk``
+  uint32 words per inner step: the (bm, bn, word_chunk) broadcast is the
+  VPU analogue of the NEON register outer product.
+
+Inputs are padded to block multiples here (pad words are all-zero, which
+is exact for every encoding — see encoding.py) and the output is sliced
+back.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pad2d(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def lowbit_matmul_call(
+    kernel_body,
+    a_operands: Sequence[jnp.ndarray],   # each (m, kw) uint32
+    b_operands: Sequence[jnp.ndarray],   # each (n, kw) uint32  (B transposed)
+    *,
+    block_m: int,
+    block_n: int,
+    block_kw: int,
+    word_chunk: int,
+    interpret: bool,
+    acc_dtype=jnp.int32,
+):
+    """Run ``kernel_body`` over a (m/bm, n/bn, kw/bkw) grid.
+
+    ``kernel_body(pid_k, num_k, a_refs, b_refs, o_ref)`` must initialize
+    o_ref at pid_k == 0, accumulate, and finalize at pid_k == num_k - 1.
+    Returns the un-padded (m, n) result.
+    """
+    m, kw = a_operands[0].shape
+    n = b_operands[0].shape[0]
+
+    # The inner loop consumes word_chunk words per step: the k block must
+    # be a chunk multiple or trailing words would be silently dropped.
+    block_kw = ceil_to(min(block_kw, max(word_chunk, kw)), word_chunk)
+
+    mp, np_, kwp = ceil_to(m, block_m), ceil_to(n, block_n), ceil_to(kw, block_kw)
+    a_ops = [pad2d(a, mp, kwp) for a in a_operands]
+    b_ops = [pad2d(b, np_, kwp) for b in b_operands]
+
+    grid = (mp // block_m, np_ // block_n, kwp // block_kw)
+    num_k = grid[2]
+
+    a_spec = pl.BlockSpec((block_m, block_kw), lambda i, j, s: (i, s))
+    b_spec = pl.BlockSpec((block_n, block_kw), lambda i, j, s: (j, s))
+    o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j))
+
+    def _kernel(*refs):
+        a_refs = refs[: len(a_ops)]
+        b_refs = refs[len(a_ops): len(a_ops) + len(b_ops)]
+        o_ref = refs[-1]
+        kernel_body(pl.program_id(2), num_k, a_refs, b_refs, o_ref)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[a_spec] * len(a_ops) + [b_spec] * len(b_ops),
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), acc_dtype),
+        interpret=interpret,
+    )(*a_ops, *b_ops)
+    return out[:m, :n]
+
+
+def popcount_i32(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.population_count(x).astype(jnp.int32)
+
+
+def chunked_reduce(a_refs, b_refs, product_fn, *, word_chunk: int, acc_dtype):
+    """The inner k loop of a low-bit microkernel.
+
+    Slices ``word_chunk`` uint32 words at a time out of the VMEM tiles,
+    forms the (bm, bn, wc) broadcast product via ``product_fn`` (which
+    returns the per-word signed contribution, already int32) and sums into
+    a (bm, bn) accumulator.
+    """
+    bm, bkw = a_refs[0].shape
+    bn = b_refs[0].shape[0]
+    steps = bkw // word_chunk
+
+    def body(i, acc):
+        s = i * word_chunk
+        a_sl = [r[:, pl.ds(s, word_chunk)][:, None, :] for r in a_refs]
+        b_sl = [r[:, pl.ds(s, word_chunk)][None, :, :] for r in b_refs]
+        contrib = product_fn(a_sl, b_sl)          # (bm, bn, wc) int32
+        return acc + jnp.sum(contrib, axis=-1).astype(acc_dtype)
+
+    acc0 = jnp.zeros((bm, bn), acc_dtype)
+    return jax.lax.fori_loop(0, steps, body, acc0)

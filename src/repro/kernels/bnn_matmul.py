@@ -1,0 +1,69 @@
+"""Binary (BNN) matmul Pallas kernel — paper §III-B adapted to TPU.
+
+ARM original: 16x8 microkernel; per k-step load one 8-bit column strip of
+A (two 128-bit regs) and one 8-bit row strip of B (64-bit reg), EOR + CNT
++ SADDW into 16 int16 accumulators.
+
+TPU version: (block_m x block_n) int32 VMEM accumulator; per inner step
+XOR a (bm, 1, wc) uint32 slice of A against a (1, bn, wc) slice of B,
+popcount on the VPU, reduce the wc axis.  eq. (6) finalization
+``c = k_valid - 2 * sum(popcount)`` happens on the last k grid step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._matmul_common import (
+    lowbit_matmul_call,
+    chunked_reduce,
+    popcount_i32,
+)
+
+__all__ = ["bnn_matmul_pallas"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k_valid", "block_m", "block_n", "block_kw", "word_chunk", "interpret",
+    ),
+)
+def bnn_matmul_pallas(
+    a_bits: jnp.ndarray,       # (m, kw) uint32
+    b_bits_t: jnp.ndarray,     # (n, kw) uint32
+    k_valid: int,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_kw: int = 512,
+    word_chunk: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+
+    def product(a_sl, b_sl):
+        x = jnp.bitwise_xor(a_sl[0], b_sl[0])
+        return popcount_i32(x)
+
+    def body(pid_k, num_k, a_refs, b_refs, o_ref):
+        @pl.when(pid_k == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        acc = chunked_reduce(a_refs, b_refs, product,
+                             word_chunk=word_chunk, acc_dtype=jnp.int32)
+        o_ref[...] += acc
+
+        @pl.when(pid_k == num_k - 1)
+        def _finalize():
+            o_ref[...] = jnp.int32(k_valid) - 2 * o_ref[...]
+
+    return lowbit_matmul_call(
+        body, [a_bits], [b_bits_t],
+        block_m=block_m, block_n=block_n, block_kw=block_kw,
+        word_chunk=word_chunk, interpret=interpret,
+    )

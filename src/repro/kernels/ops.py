@@ -1,0 +1,348 @@
+"""Public entry points for the low-bit matmul kernels.
+
+Three backends per mode:
+
+* ``pallas``  — the TPU kernels of this package, validated on CPU in
+  interpret mode (the TARGET implementation);
+* ``xla``     — a production pure-jnp path with the same popcount
+  formulation, written as a k-chunked ``lax.scan`` so the (m, n, chunk)
+  broadcast never exceeds a VMEM-sized working set.  This is what the LM
+  models use in multi-pod lowering (it shards under pjit like any jnp
+  code, and its HLO carries the true xor/popcount op mix for roofline
+  accounting);
+* ``dense``   — a beyond-paper TPU alternative: keep the *storage* packed
+  (the memory win) but unpack to ±1/0 bf16 at use and ride the MXU.  On
+  ARM this would be absurd; on TPU it trades VPU popcount ops for MXU
+  FLOPs and is the natural hillclimb hypothesis for compute-bound cells.
+
+Plus the float-in/float-out ``quantized_matmul`` with straight-through
+(STE) gradients for QAT, and weight pre-packing (the paper's Algorithm 2
+PackedB: weights are packed once, offline).
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding, quantize
+from repro.kernels import ref as kref
+from repro.kernels.bnn_matmul import bnn_matmul_pallas
+from repro.kernels.tnn_matmul import tnn_matmul_pallas
+from repro.kernels.tbn_matmul import tbn_matmul_pallas
+from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.int4_matmul import (
+    int4_matmul_pallas, pack_nibbles_rows, pack_nibbles_cols,
+)
+
+__all__ = [
+    "QuantMode", "pack_weights", "quantize_activations", "packed_matmul",
+    "quantized_matmul", "lowbit_matmul", "int8_affine_matmul",
+    "int4_affine_matmul", "DEFAULT_BACKEND",
+]
+
+DEFAULT_BACKEND = "xla"
+_WORD_CHUNK = 8  # uint32 words per scan step on the xla path (256 k-elems)
+
+
+class QuantMode(str, enum.Enum):
+    F32 = "f32"
+    BF16 = "bf16"
+    INT8 = "int8"
+    INT4 = "int4"
+    TNN = "tnn"    # ternary activations x ternary weights
+    TBN = "tbn"    # ternary activations x binary weights
+    BNN = "bnn"    # binary  activations x binary weights
+
+    @property
+    def is_lowbit(self) -> bool:
+        return self in (QuantMode.TNN, QuantMode.TBN, QuantMode.BNN)
+
+    @property
+    def is_float(self) -> bool:
+        return self in (QuantMode.F32, QuantMode.BF16)
+
+
+# ---------------------------------------------------------------------------
+# XLA production paths (k-chunked popcount scans)
+# ---------------------------------------------------------------------------
+
+def _chunked_bitwise_matmul(product_fn, a_ops, b_ops, *, word_chunk=_WORD_CHUNK):
+    """acc[m, n] = sum over kw-chunks of product_fn(a_chunk, b_chunk).
+
+    a_ops: list of (m, kw) uint32; b_ops: list of (n, kw) uint32.
+    Scans the word axis so the broadcast intermediate is (m, n, wc).
+    """
+    m, kw = a_ops[0].shape
+    n = b_ops[0].shape[0]
+    wc = min(word_chunk, kw)
+    kwp = -(-kw // wc) * wc
+    a_ops = [jnp.pad(a, ((0, 0), (0, kwp - kw))) for a in a_ops]
+    b_ops = [jnp.pad(b, ((0, 0), (0, kwp - kw))) for b in b_ops]
+    steps = kwp // wc
+
+    # (steps, m/n, wc) views so scan slices are contiguous loads.
+    a_sc = [a.reshape(m, steps, wc).transpose(1, 0, 2) for a in a_ops]
+    b_sc = [b.reshape(n, steps, wc).transpose(1, 0, 2) for b in b_ops]
+
+    def step(acc, ops):
+        a_ch, b_ch = ops
+        contrib = product_fn([x[:, None, :] for x in a_ch],
+                             [x[None, :, :] for x in b_ch])
+        return acc + jnp.sum(contrib, axis=-1), None
+
+    acc0 = jnp.zeros((m, n), jnp.int32)
+    acc, _ = jax.lax.scan(step, acc0, (a_sc, b_sc))
+    return acc
+
+
+def _pc(x):
+    return jax.lax.population_count(x).astype(jnp.int32)
+
+
+def _bnn_product(a_sl, b_sl):
+    return _pc(jnp.bitwise_xor(a_sl[0], b_sl[0]))
+
+
+def _tnn_product(a_sl, b_sl):
+    ap, am = a_sl
+    bp, bm = b_sl
+    return _pc((ap & bp) | (am & bm)) - _pc((ap & bm) | (am & bp))
+
+
+def _tbn_product(a_sl, b_sl):
+    ap, am = a_sl
+    (bb,) = b_sl
+    nbb = jnp.bitwise_not(bb)
+    return _pc((ap | bb) & (am | nbb)) - _pc((ap | nbb) & (am | bb))
+
+
+def bnn_matmul_xla(a_bits, b_bits_t, k_valid: int):
+    pc = _chunked_bitwise_matmul(_bnn_product, [a_bits], [b_bits_t])
+    return jnp.int32(k_valid) - 2 * pc
+
+
+def tnn_matmul_xla(a_plus, a_minus, b_plus_t, b_minus_t, k_valid: int = 0):
+    del k_valid
+    return _chunked_bitwise_matmul(_tnn_product, [a_plus, a_minus],
+                                   [b_plus_t, b_minus_t])
+
+
+def tbn_matmul_xla(a_plus, a_minus, b_bits_t, k_valid: int = 0):
+    del k_valid
+    return _chunked_bitwise_matmul(_tbn_product, [a_plus, a_minus], [b_bits_t])
+
+
+# ---------------------------------------------------------------------------
+# Affine (u8/u4) full pipelines: kernel + eq. (3) correction
+# ---------------------------------------------------------------------------
+
+def int8_affine_matmul(a_q, b_q, za, zb, k_valid: int, *,
+                       backend: str = DEFAULT_BACKEND,
+                       interpret: bool = True):
+    """c~ per eq. (3).  a_q (m,k) u8-valued, b_q (k,n) u8-valued."""
+    if backend == "pallas":
+        # gemmlowp's operands are *unsigned* 8-bit; widen from uint8 so the
+        # 0..255 range survives (an int8 cast would wrap 128..255).
+        acc = int8_matmul_pallas(a_q.astype(jnp.uint8), b_q.astype(jnp.uint8),
+                                 interpret=interpret)
+        a32 = a_q.astype(jnp.int32)
+        b32 = b_q.astype(jnp.int32)
+        rows = jnp.sum(a32, axis=1)
+        cols = jnp.sum(b32, axis=0)
+        za = jnp.asarray(za, jnp.int32)
+        zb = jnp.asarray(zb, jnp.int32)
+        return acc - zb * rows[:, None] - za * cols[None, :] + jnp.int32(k_valid) * za * zb
+    return kref.int8_matmul_ref(a_q, b_q, za, zb, k_valid)
+
+
+def int4_affine_matmul(a_q, b_q, za, zb, k_valid: int, *,
+                       backend: str = DEFAULT_BACKEND,
+                       interpret: bool = True):
+    if backend == "pallas":
+        acc = int4_matmul_pallas(pack_nibbles_rows(a_q),
+                                 pack_nibbles_cols(b_q), interpret=interpret)
+        rows = jnp.sum(a_q.astype(jnp.int32), axis=1)
+        cols = jnp.sum(b_q.astype(jnp.int32), axis=0)
+        za = jnp.asarray(za, jnp.int32)
+        zb = jnp.asarray(zb, jnp.int32)
+        return acc - zb * rows[:, None] - za * cols[None, :] + jnp.int32(k_valid) * za * zb
+    return kref.int4_matmul_ref(a_q, b_q, za, zb, k_valid)
+
+
+# ---------------------------------------------------------------------------
+# Packed containers
+# ---------------------------------------------------------------------------
+
+def pack_weights(w: jnp.ndarray, mode: QuantMode, *,
+                 per_channel: bool = True) -> Dict[str, Any]:
+    """Offline weight packing (Algorithm 2's PackedB).
+
+    ``w`` is (k, n) float.  Returns a pytree of device arrays:
+      tnn:  {plus (n,kw), minus (n,kw), scale (n,) or ()}
+      bnn/tbn (binary weights): {bits (n,kw), scale}
+      int8/int4: {q (k,n) int32-valued, scale (), zero ()}
+      f32/bf16:  {w}
+    """
+    if mode in (QuantMode.F32, QuantMode.BF16):
+        return {"w": w.astype(jnp.float32 if mode == QuantMode.F32 else jnp.bfloat16)}
+    if mode == QuantMode.TNN:
+        axis = 0 if per_channel else None
+        thr = 0.7 * jnp.mean(jnp.abs(w), axis=axis, keepdims=True)
+        mask = jnp.abs(w) > thr
+        t = jnp.sign(w) * mask
+        denom = jnp.maximum(jnp.sum(mask, axis=axis), 1)
+        scale = jnp.sum(jnp.abs(w) * mask, axis=axis) / denom        # (n,)
+        plus, minus = encoding.pack_ternary(t.T)                      # (n, kw)
+        return {"plus": plus, "minus": minus, "scale": scale}
+    if mode in (QuantMode.TBN, QuantMode.BNN):
+        axis = 0 if per_channel else None
+        scale = jnp.mean(jnp.abs(w), axis=axis)                       # (n,)
+        bits = encoding.pack_binary(w.T)                              # (n, kw)
+        return {"bits": bits, "scale": scale}
+    if mode in (QuantMode.INT8, QuantMode.INT4):
+        bits = 8 if mode == QuantMode.INT8 else 4
+        q = quantize.affine_calibrate(w, bits)
+        return {"q": quantize.affine_quantize(w, q),
+                "scale": q.scale, "zero": q.zero_point}
+    raise ValueError(mode)
+
+
+def quantize_activations(x: jnp.ndarray, mode: QuantMode) -> Dict[str, Any]:
+    """Runtime activation quantization.  ``x`` is (m, k) float."""
+    if mode in (QuantMode.F32, QuantMode.BF16):
+        return {"x": x}
+    if mode in (QuantMode.TNN, QuantMode.TBN):
+        t, scale = quantize.ternarize(x)
+        plus, minus = encoding.pack_ternary(t)
+        return {"plus": plus, "minus": minus, "scale": scale}
+    if mode == QuantMode.BNN:
+        b, scale = quantize.binarize(x)
+        return {"bits": encoding.pack_binary(b), "scale": scale}
+    if mode in (QuantMode.INT8, QuantMode.INT4):
+        bits = 8 if mode == QuantMode.INT8 else 4
+        q = quantize.affine_calibrate(x, bits)
+        return {"q": quantize.affine_quantize(x, q),
+                "scale": q.scale, "zero": q.zero_point}
+    raise ValueError(mode)
+
+
+def packed_matmul(xa: Dict[str, Any], wb: Dict[str, Any], mode: QuantMode,
+                  k_valid: int, *, backend: str = DEFAULT_BACKEND,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Integer core: packed activations x packed weights -> int32 (m, n)."""
+    if mode == QuantMode.BNN:
+        if backend == "pallas":
+            return bnn_matmul_pallas(xa["bits"], wb["bits"], k_valid,
+                                     interpret=interpret)
+        if backend == "dense":
+            a = encoding.unpack_binary(xa["bits"], k_valid, jnp.bfloat16)
+            b = encoding.unpack_binary(wb["bits"], k_valid, jnp.bfloat16)
+            return jnp.dot(a, b.T, preferred_element_type=jnp.float32).astype(jnp.int32)
+        return bnn_matmul_xla(xa["bits"], wb["bits"], k_valid)
+    if mode == QuantMode.TNN:
+        if backend == "pallas":
+            return tnn_matmul_pallas(xa["plus"], xa["minus"],
+                                     wb["plus"], wb["minus"], k_valid,
+                                     interpret=interpret)
+        if backend == "dense":
+            a = encoding.unpack_ternary(xa["plus"], xa["minus"], k_valid, jnp.bfloat16)
+            b = encoding.unpack_ternary(wb["plus"], wb["minus"], k_valid, jnp.bfloat16)
+            return jnp.dot(a, b.T, preferred_element_type=jnp.float32).astype(jnp.int32)
+        return tnn_matmul_xla(xa["plus"], xa["minus"], wb["plus"], wb["minus"])
+    if mode == QuantMode.TBN:
+        if backend == "pallas":
+            return tbn_matmul_pallas(xa["plus"], xa["minus"], wb["bits"],
+                                     k_valid, interpret=interpret)
+        if backend == "dense":
+            a = encoding.unpack_ternary(xa["plus"], xa["minus"], k_valid, jnp.bfloat16)
+            b = encoding.unpack_binary(wb["bits"], k_valid, jnp.bfloat16)
+            return jnp.dot(a, b.T, preferred_element_type=jnp.float32).astype(jnp.int32)
+        return tbn_matmul_xla(xa["plus"], xa["minus"], wb["bits"])
+    raise ValueError(f"packed_matmul only handles low-bit modes, got {mode}")
+
+
+# ---------------------------------------------------------------------------
+# Float-facing quantized matmul with STE gradients (QAT)
+# ---------------------------------------------------------------------------
+
+def _qmm_fwd_value(x, w, mode: QuantMode, backend: str, interpret: bool):
+    k = x.shape[-1]
+    if mode == QuantMode.F32:
+        return jnp.dot(x, w)
+    if mode == QuantMode.BF16:
+        return jnp.dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    if mode.is_lowbit:
+        xa = quantize_activations(x, mode)
+        wb = pack_weights(w, mode)
+        acc = packed_matmul(xa, wb, mode, k, backend=backend,
+                            interpret=interpret)
+        return acc.astype(jnp.float32) * xa["scale"] * wb["scale"][None, :]
+    # affine u8/u4
+    bits = 8 if mode == QuantMode.INT8 else 4
+    qa = quantize.affine_calibrate(x, bits)
+    qb = quantize.affine_calibrate(w, bits)
+    a_q = quantize.affine_quantize(x, qa)
+    b_q = quantize.affine_quantize(w, qb)
+    fn = int8_affine_matmul if mode == QuantMode.INT8 else int4_affine_matmul
+    c = fn(a_q, b_q, qa.zero_point, qb.zero_point, k,
+           backend=backend, interpret=interpret)
+    return c.astype(jnp.float32) * qa.scale * qb.scale     # eq. (2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def quantized_matmul(x, w, mode: QuantMode = QuantMode.TNN,
+                     backend: str = DEFAULT_BACKEND, interpret: bool = True):
+    """y ~= x @ w computed through the selected quantized pipeline.
+
+    Gradients are straight-through at matmul granularity (standard for
+    BNN/TNN QAT): backward treats the whole pipeline as ``x @ w``, with a
+    hard-tanh clip mask on x for the binary/ternary modes (XNOR-Net).
+    """
+    return _qmm_fwd_value(x, w, mode, backend, interpret)
+
+
+def _qmm_fwd(x, w, mode, backend, interpret):
+    y = _qmm_fwd_value(x, w, mode, backend, interpret)
+    return y, (x, w)
+
+
+def _qmm_bwd(mode, backend, interpret, res, g):
+    x, w = res
+    g = g.astype(jnp.float32)
+    gx = jnp.dot(g, w.T.astype(jnp.float32))
+    gw = jnp.dot(x.T.astype(jnp.float32), g)
+    if mode.is_lowbit:
+        gx = gx * (jnp.abs(x) <= 1.0)      # clip-range STE
+    return gx.astype(x.dtype), gw.astype(w.dtype)
+
+
+quantized_matmul.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+def lowbit_matmul(a: jnp.ndarray, b: jnp.ndarray, mode: QuantMode, *,
+                  backend: str = DEFAULT_BACKEND,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Exact integer matmul of {-1,0,1}-valued dense matrices through the
+    packed pipeline (test/bench entry; no scales)."""
+    k = a.shape[-1]
+    if mode == QuantMode.BNN:
+        xa = {"bits": encoding.pack_binary(a)}
+        wb = {"bits": encoding.pack_binary(b.T)}
+    elif mode == QuantMode.TNN:
+        p, m_ = encoding.pack_ternary(a)
+        wp, wm = encoding.pack_ternary(b.T)
+        xa = {"plus": p, "minus": m_}
+        wb = {"plus": wp, "minus": wm}
+    elif mode == QuantMode.TBN:
+        p, m_ = encoding.pack_ternary(a)
+        xa = {"plus": p, "minus": m_}
+        wb = {"bits": encoding.pack_binary(b.T)}
+    else:
+        raise ValueError(mode)
+    return packed_matmul(xa, wb, mode, k, backend=backend, interpret=interpret)

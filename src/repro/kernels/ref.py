@@ -1,0 +1,140 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the *specification*: simple, obviously-correct, small-shape
+implementations that the Pallas kernels and the production XLA paths are
+tested against (``tests/test_kernels_*``).
+
+Layout convention used across the whole repo
+--------------------------------------------
+``C = A @ B`` with A of shape (m, k) and B of shape (k, n).  Packed
+operands pack the *depth* (k) axis into uint32 words:
+
+* A is packed row-major:      a_*      of shape (m, kw)
+* B is packed **transposed**: b_*_t    of shape (n, kw)
+
+i.e. the right matrix is stored column-packed, mirroring the paper's
+PackNColsB ("8 columns of B, bits along the column").  ``k_valid`` is the
+true (unpadded) depth; pad positions encode +1 for binary planes and 0 for
+ternary planes, which keeps every formula below exact (see encoding.py).
+
+The ``*_i16`` variants reproduce the paper's 16-bit accumulation exactly
+(eq. (4) overflow semantics) and are used by the fidelity tests only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+
+__all__ = [
+    "matmul_f32_ref",
+    "bnn_matmul_ref",
+    "tnn_matmul_ref",
+    "tbn_matmul_ref",
+    "int8_matmul_ref",
+    "int4_matmul_ref",
+    "bnn_matmul_dense_ref",
+    "tnn_matmul_dense_ref",
+    "tbn_matmul_dense_ref",
+]
+
+
+def matmul_f32_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Dense-value oracles: take {-1,0,1} float matrices, return exact int32.
+# These are the ground truth that the packed oracles must match.
+# ---------------------------------------------------------------------------
+
+def bnn_matmul_dense_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+tnn_matmul_dense_ref = bnn_matmul_dense_ref
+tbn_matmul_dense_ref = bnn_matmul_dense_ref
+
+
+# ---------------------------------------------------------------------------
+# Packed oracles
+# ---------------------------------------------------------------------------
+
+def _popcount(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.population_count(x).astype(jnp.int32)
+
+
+def bnn_matmul_ref(a_bits: jnp.ndarray, b_bits_t: jnp.ndarray,
+                   k_valid: int, acc_dtype=jnp.int32) -> jnp.ndarray:
+    """Binary GeMM, eq. (6): c = k - 2 * sum_w popcount(a_w XOR b_w).
+
+    a_bits (m, kw) uint32, b_bits_t (n, kw) uint32 -> (m, n) acc_dtype.
+    """
+    x = jnp.bitwise_xor(a_bits[:, None, :], b_bits_t[None, :, :])
+    pc = jnp.sum(_popcount(x).astype(acc_dtype), axis=-1)
+    return (jnp.asarray(k_valid, acc_dtype) - 2 * pc).astype(acc_dtype)
+
+
+def tnn_matmul_ref(a_plus, a_minus, b_plus_t, b_minus_t,
+                   k_valid: int = 0, acc_dtype=jnp.int32) -> jnp.ndarray:
+    """Ternary GeMM, Table I + eq. (7):
+    z+ = (x+ & y+) | (x- & y-);  z- = (x+ & y-) | (x- & y+);
+    c  = sum popcount(z+) - popcount(z-).     (k_valid unused: pads are 0.)
+    """
+    ap, am = a_plus[:, None, :], a_minus[:, None, :]
+    bp, bm = b_plus_t[None, :, :], b_minus_t[None, :, :]
+    zp = (ap & bp) | (am & bm)
+    zm = (ap & bm) | (am & bp)
+    acc = _popcount(zp).astype(acc_dtype) - _popcount(zm).astype(acc_dtype)
+    return jnp.sum(acc, axis=-1).astype(acc_dtype)
+
+
+def tbn_matmul_ref(a_plus, a_minus, b_bits_t,
+                   k_valid: int = 0, acc_dtype=jnp.int32) -> jnp.ndarray:
+    """Ternary x binary GeMM, Table I:
+    z+ = (x+ | y_b) & (x- | ~y_b);  z- = (x+ | ~y_b) & (x- | y_b).
+
+    Pad positions have (x+, x-) == (0, 0) which forces z+ == z- == 0, so
+    b's pad bits are irrelevant and no k correction is needed.
+    """
+    ap, am = a_plus[:, None, :], a_minus[:, None, :]
+    bb = b_bits_t[None, :, :]
+    nbb = jnp.bitwise_not(bb)
+    zp = (ap | bb) & (am | nbb)
+    zm = (ap | nbb) & (am | bb)
+    acc = _popcount(zp).astype(acc_dtype) - _popcount(zm).astype(acc_dtype)
+    return jnp.sum(acc, axis=-1).astype(acc_dtype)
+
+
+# ---------------------------------------------------------------------------
+# u8 / u4 baselines (gemmlowp-style, eq. (3))
+# ---------------------------------------------------------------------------
+
+def _affine_matmul_ref(a_q, b_q, za, zb, k_valid, acc_dtype):
+    """c~ = A_q B_q - zb * rowsum(A_q) - za * colsum(B_q) + k za zb (eq. 3).
+
+    a_q (m, k) and b_q (k, n) hold unsigned quantized values (possibly
+    zero-padded along k; the k_valid constant keeps the result exact).
+    """
+    a32 = a_q.astype(acc_dtype)
+    b32 = b_q.astype(acc_dtype)
+    acc = jnp.dot(a32, b32)
+    rows = jnp.sum(a32, axis=1, dtype=acc_dtype)        # O(mk)
+    cols = jnp.sum(b32, axis=0, dtype=acc_dtype)        # O(nk)
+    za = jnp.asarray(za, acc_dtype)
+    zb = jnp.asarray(zb, acc_dtype)
+    k = jnp.asarray(k_valid, acc_dtype)
+    return acc - zb * rows[:, None] - za * cols[None, :] + k * za * zb
+
+
+def int8_matmul_ref(a_q, b_q, za, zb, k_valid: int, acc_dtype=jnp.int32):
+    """u8 x u8 -> i32 with zero-point correction (gemmlowp [29])."""
+    return _affine_matmul_ref(a_q, b_q, za, zb, k_valid, acc_dtype)
+
+
+def int4_matmul_ref(a_q, b_q, za, zb, k_valid: int, acc_dtype=jnp.int32):
+    """u4 x u4 with correction.  The paper's U4 accumulates in int16 with
+    k_max = 291 (eq. 4); pass acc_dtype=jnp.int16 to reproduce that."""
+    return _affine_matmul_ref(a_q, b_q, za, zb, k_valid, acc_dtype)

@@ -1,0 +1,71 @@
+"""Ternary-binary (TBN) matmul Pallas kernel — paper §III-D adapted to TPU.
+
+A is ternary (two planes, packed like TNN); B is binary (one plane,
+packed like BNN).  Products use the OR/AND/ORN identities of Table I:
+
+    z+ = (a+ | b) & (a- | ~b)
+    z- = (a+ | ~b) & (a- | b)
+    acc += popcount(z+) - popcount(z-)
+
+A's pad words are (0,0) which force z+ == z- == 0 regardless of B's pad
+bits, so the result is exact with no k correction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._matmul_common import (
+    lowbit_matmul_call,
+    chunked_reduce,
+    popcount_i32,
+)
+
+__all__ = ["tbn_matmul_pallas"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k_valid", "block_m", "block_n", "block_kw", "word_chunk", "interpret",
+    ),
+)
+def tbn_matmul_pallas(
+    a_plus: jnp.ndarray, a_minus: jnp.ndarray,   # (m, kw) uint32
+    b_bits_t: jnp.ndarray,                       # (n, kw) uint32
+    k_valid: int = 0,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_kw: int = 256,
+    word_chunk: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    del k_valid
+
+    def product(a_sl, b_sl):
+        ap, am = a_sl
+        (bb,) = b_sl
+        nbb = jnp.bitwise_not(bb)
+        zp = (ap | bb) & (am | nbb)
+        zm = (ap | nbb) & (am | bb)
+        return popcount_i32(zp) - popcount_i32(zm)
+
+    def body(pid_k, num_k, a_refs, b_refs, o_ref):
+        @pl.when(pid_k == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += chunked_reduce(a_refs, b_refs, product,
+                                     word_chunk=word_chunk,
+                                     acc_dtype=jnp.int32)
+
+    return lowbit_matmul_call(
+        body, [a_plus, a_minus], [b_bits_t],
+        block_m=block_m, block_n=block_n, block_kw=block_kw,
+        word_chunk=word_chunk, interpret=interpret,
+    )

@@ -1,0 +1,3 @@
+# NOTE: do not import jax at package import time with any device-count
+# side effects; launch modules are imported by tests under a 1-device
+# runtime and by dryrun.py under a 512-device runtime.

@@ -1,0 +1,337 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + (f"--xla_dump_to={os.environ['REPRO_DRYRUN_DUMP']} "
+       f"--xla_dump_hlo_pass_re=spmd-partitioning "
+       if os.environ.get("REPRO_DRYRUN_DUMP") else "")
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The XLA_FLAGS assignment above runs before ANY other import (jax locks
+the device count on first init): this process sees 512 placeholder CPU
+devices so ``make_production_mesh`` can build the 16x16 single-pod mesh
+(256 chips) and the 2x16x16 multi-pod mesh (512 chips).
+
+Per cell (in a subprocess, so each compile gets a clean dump dir and
+jax state):
+
+    with use_mesh(mesh, rules):
+        art = cell_artifacts(cfg, shape)        # ShapeDtypeStructs only
+        lowered  = jax.jit(art.step_fn, in_shardings=..., donate...).lower(*shapes)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective parse
+
+Collective bytes are parsed from TWO places:
+
+* the **post-SPMD-partitioning dump** (``collectives``) — this carries
+  the TPU-true dtypes.  The final CPU executable is useless for dtype
+  accounting because XLA:CPU's float-normalization pass rewrites every
+  bf16 op to f32 (we verified a bf16 weight all-gather shows up as f32
+  in the CPU executable but bf16 in the post-SPMD module);
+* the optimized CPU executable (``collectives_optimized``) — correct op
+  *count/schedule* after CSE/combining, f32-inflated byte sizes.
+
+Records land in experiments/dryrun/<mesh>/<arch>__<shape>.json —
+EXPERIMENTS.md §Dry-run / §Roofline are generated from these files.
+
+Usage:
+    python -m repro.launch.dryrun                      # every cell, both meshes
+    python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k
+    python -m repro.launch.dryrun --mesh pod           # single-pod only
+    python -m repro.launch.dryrun --force              # ignore cached JSON
+"""
+
+import argparse
+import glob
+import json
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+import traceback
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# --------------------------------------------------------------------------
+# single-cell worker (runs in its own process)
+# --------------------------------------------------------------------------
+
+def run_cell_here(arch: str, shape_name: str, mesh_name: str,
+                  out_path: str, quant: str = None,
+                  ruleset: str = None) -> dict:
+    import jax
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import cell_artifacts
+    from repro.parallel import sharding
+    from repro.roofline.analysis import collective_bytes
+
+    over = {}
+    for tok in (quant.split("+") if quant else []):
+        if tok == "kv8":
+            over["kv_cache_dtype"] = "int8"
+        elif tok == "noremat":
+            over["remat"] = False
+        elif tok:
+            over["quant_policy"] = tok
+    cfg = get_config(arch, **over)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    rules = {"train": sharding.TRAIN_RULES,
+             "prefill": sharding.PREFILL_RULES,
+             "decode": sharding.SERVE_RULES}[shape.kind]
+    if shape.kind == "decode" and cfg.num_experts:
+        rules = sharding.SERVE_RULES_MOE     # expert weights must fit
+    if ruleset:
+        rules = sharding.RULESETS[ruleset]
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "quant": quant or cfg.quant_policy,
+        "ruleset": ruleset or shape.kind,
+        "mesh_shape": list(mesh.devices.shape),
+        "num_devices": int(mesh.devices.size),
+        "kind": shape.kind, "status": "FAIL",
+    }
+    t0 = time.time()
+    try:
+        with sharding.use_mesh(mesh, rules):
+            art = cell_artifacts(cfg, shape)
+            jitted = jax.jit(art.step_fn, in_shardings=art.in_shardings,
+                             donate_argnums=art.donate)
+            lowered = jitted.lower(*art.arg_shapes)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo_opt = compiled.as_text()
+            artifact_bytes = _cpu_f32_artifact_bytes(
+                os.environ.get("REPRO_DRYRUN_DUMP"))
+
+            # TPU-true dtypes: the post-SPMD-partitioning module, analyzed
+            # statically (trip-count-aware flops/bytes/collectives).
+            coll = None
+            static = None
+            dump = os.environ.get("REPRO_DRYRUN_DUMP")
+            if dump:
+                cands = sorted(
+                    glob.glob(os.path.join(
+                        dump, "*after_spmd-partitioning*.txt")),
+                    key=os.path.getmtime)
+                if cands:
+                    from repro.roofline.hlo_stats import analyze_module
+                    with open(cands[-1]) as f:
+                        txt = f.read()
+                    stats = analyze_module(txt)
+                    static = stats.as_dict()
+                    coll = static["collectives"]
+            coll_opt = collective_bytes(hlo_opt)
+
+            rec.update({
+                "status": "PASS",
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "memory": {
+                    **{k: int(getattr(mem, k))
+                       for k in ("argument_size_in_bytes",
+                                 "output_size_in_bytes",
+                                 "temp_size_in_bytes",
+                                 "generated_code_size_in_bytes")
+                       if hasattr(mem, k)},
+                    # XLA:CPU float-normalization materializes f32
+                    # copies of bf16/s8 parameters (hoisted out of the
+                    # layer scan); these buffers do not exist on TPU.
+                    "cpu_f32_artifact_bytes": artifact_bytes,
+                    "temp_corrected_bytes": max(
+                        0, int(getattr(mem, "temp_size_in_bytes", 0))
+                        - artifact_bytes),
+                },
+                "cost": {k: float(v) for k, v in (cost or {}).items()
+                         if isinstance(v, (int, float))},
+                "static": static,
+                "collectives": coll or coll_opt,
+                "collectives_optimized": coll_opt,
+                "collective_ops": _collective_schedule(hlo_opt),
+            })
+    except Exception as e:   # recorded, not raised: the matrix must finish
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _cpu_f32_artifact_bytes(dump_dir) -> int:
+    """Bytes of temp buffers that are f32 'convert' copies of (bf16/s8)
+    parameters — pure XLA:CPU float-normalization artifacts (TPU runs
+    bf16 natively and never materializes these).  Parsed from the
+    buffer-assignment dump; used to report a TPU-honest temp size."""
+    import re
+    if not dump_dir:
+        return 0
+    cands = glob.glob(os.path.join(dump_dir, "*buffer-assignment.txt"))
+    if not cands:
+        return 0
+    with open(max(cands, key=os.path.getmtime)) as f:
+        txt = f.read()
+    param_dims = set(re.findall(
+        r"parameter \d+, shape \|(?:bf16|s8|u8)\[([0-9,]+)\]", txt))
+    # scan bodies consume per-period *slices* of stacked params: their
+    # f32 upcasts drop the leading stack dim.
+    sliced = {d.split(",", 1)[1] for d in param_dims if "," in d}
+    param_dims |= sliced
+    total = 0
+    for name, size, dims in re.findall(
+            r"value: <\d+ ([\w.\-]+) @?\d*>? ?\(size=(\d+),offset=\d+\): "
+            r"f32\[([0-9,]+)\]", txt):
+        if dims not in param_dims:
+            continue
+        if "convert" in name:
+            total += int(size)        # no f32 copy exists on TPU at all
+        elif "gather" in name:
+            total += int(size) // 2   # the gather itself is real, in bf16
+    return total
+
+
+def _collective_schedule(hlo: str, limit: int = 40) -> list:
+    """Ordered list of collective ops (kind + shape) — the schedule."""
+    import re
+    out = []
+    for line in hlo.splitlines():
+        m = re.match(r"\s*%?[\w.\-]+\s*=\s*(\S+)\s+((?:all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)[\w.\-]*)\(",
+                     line)
+        if m:
+            out.append(f"{m.group(2)} {m.group(1)}")
+    if len(out) > limit:
+        out = out[:limit] + [f"... (+{len(out) - limit} more)"]
+    return out
+
+
+# --------------------------------------------------------------------------
+# orchestrator
+# --------------------------------------------------------------------------
+
+def _cell_path(out_dir: str, mesh: str, arch: str, shape: str,
+               quant: str = None, ruleset: str = None) -> str:
+    suffix = (f"__{quant}" if quant else "") + \
+        (f"__{ruleset}" if ruleset else "")
+    return os.path.join(out_dir, mesh, f"{arch}__{shape}{suffix}.json")
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             force: bool = False, timeout: int = 3600,
+             quant: str = None, ruleset: str = None) -> dict:
+    out_path = _cell_path(out_dir, mesh_name, arch, shape_name, quant,
+                          ruleset)
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "PASS":
+            return rec
+
+    dump_dir = tempfile.mkdtemp(prefix="repro_dryrun_")
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DUMP"] = dump_dir
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", ".."),
+         env.get("PYTHONPATH", "")])
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--single",
+           "--arch", arch, "--shape", shape_name, "--mesh", mesh_name,
+           "--out", out_dir] + (["--quant", quant] if quant else []) \
+        + (["--rules", ruleset] if ruleset else [])
+    try:
+        proc = subprocess.run(cmd, env=env, timeout=timeout,
+                              capture_output=True, text=True)
+        if not os.path.exists(out_path):
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                   "status": "FAIL",
+                   "error": f"worker died rc={proc.returncode}: "
+                            f"{proc.stderr[-1500:]}"}
+            os.makedirs(os.path.dirname(out_path), exist_ok=True)
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1)
+        with open(out_path) as f:
+            return json.load(f)
+    except subprocess.TimeoutExpired:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "FAIL", "error": f"timeout after {timeout}s"}
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    finally:
+        shutil.rmtree(dump_dir, ignore_errors=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--quant", default=None,
+                    help="override quant_policy (tnn|tbn|bnn|int8|...)")
+    ap.add_argument("--rules", default=None,
+                    help="override ruleset (train_fsdp|...)")
+    ap.add_argument("--single", action="store_true",
+                    help="worker mode: compile one cell in this process")
+    args = ap.parse_args()
+
+    if args.single:
+        rec = run_cell_here(args.arch, args.shape, args.mesh,
+                            _cell_path(args.out, args.mesh, args.arch,
+                                       args.shape, args.quant,
+                                       args.rules),
+                            quant=args.quant, ruleset=args.rules)
+        sys.exit(0 if rec["status"] == "PASS" else 1)
+
+    from repro.configs import applicable_shapes, list_archs
+
+    archs = [args.arch] if args.arch else list_archs()
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    n_pass = n_fail = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            shapes = ([args.shape] if args.shape
+                      else applicable_shapes(arch))
+            for shape_name in shapes:
+                t0 = time.time()
+                rec = run_cell(arch, shape_name, mesh_name, args.out,
+                               force=args.force, timeout=args.timeout,
+                               quant=args.quant, ruleset=args.rules)
+                ok = rec["status"] == "PASS"
+                n_pass += ok
+                n_fail += (not ok)
+                mem = rec.get("memory", {})
+                per_dev = (mem.get("argument_size_in_bytes", 0)
+                           + mem.get("temp_size_in_bytes", 0)) / 2**30
+                print(f"[{mesh_name:8s}] {arch:25s} {shape_name:12s} "
+                      f"{rec['status']:4s} "
+                      f"{per_dev:6.2f} GiB/dev  "
+                      f"flops/dev {rec.get('cost', {}).get('flops', 0):.3g}  "
+                      f"coll {rec.get('collectives', {}).get('total', 0):.3g}B "
+                      f"({time.time()-t0:.0f}s)",
+                      flush=True)
+                if not ok:
+                    print("    " + str(rec.get("error", "?"))[:300], flush=True)
+
+    print(f"\ndry-run: {n_pass} PASS, {n_fail} FAIL", flush=True)
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``cell_artifacts(cfg, shape)`` returns everything ``dryrun.py`` needs to
+lower one (architecture x input-shape) cell on the active mesh:
+
+    step_fn       the function the cell lowers (train_step / prefill /
+                  serve_step per the shape's kind)
+    arg_shapes    pytree of ShapeDtypeStructs (no allocation, ever)
+    in_shardings  matching pytree of NamedShardings
+    donate        argnums to donate
+
+Train cells lower the full production step: fwd + bwd + chunked loss +
+EF-compressed grads + AdamW(int8 moments).  Decode cells lower
+``serve_step`` — one token against a seq_len-deep KV cache.  Prefill
+cells lower ``prefill`` (prompt -> caches + last logits).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as model_mod
+from repro.models.common import ModelConfig, ShardLayout
+from repro.models.kvcache import cache_logical_axes, init_caches
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import sharding
+from repro.configs.base import ShapeSpec
+from repro.serving.engine import (make_serve_step, make_serve_step_embeddings)
+from repro.train.train_step import (TrainStepConfig, init_train_state,
+                                    make_train_step)
+
+__all__ = ["CellArtifacts", "cell_artifacts", "make_layout",
+           "default_train_config"]
+
+
+@dataclasses.dataclass
+class CellArtifacts:
+    step_fn: Any
+    arg_shapes: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    donate: Tuple[int, ...]
+    kind: str
+
+
+def make_layout() -> ShardLayout:
+    ctx = sharding.active()
+    tp = ctx.axis_sizes.get("model", 1) if ctx else 1
+    return ShardLayout(tp=tp)
+
+
+def default_train_config(cfg: ModelConfig) -> TrainStepConfig:
+    """Production defaults: int8 moments (4x optimizer memory win —
+    that's what fits jamba-398B's ZeRO-3 shards in HBM alongside f32
+    master weights).  EF gradient compression is OFF by default (its
+    error buffers cost a full f32 param copy; it is the §Perf lever for
+    the collective-bound cell, enabled there explicitly).
+
+    Microbatching scales with model size: grad accumulation keeps the
+    global batch while dividing activation memory — exactly how a 398B
+    hybrid trains on 16 GB/chip pods (the per-microbatch FSDP re-gather
+    is the price, visible in the roofline's collective term)."""
+    import os
+    total = cfg.param_counts()["total"]
+    micro = 8 if total > 100e9 else 4 if total > 20e9 else \
+        2 if total > 5e9 else 1
+    if os.environ.get("REPRO_MICROBATCH"):
+        micro = int(os.environ["REPRO_MICROBATCH"])
+    return TrainStepConfig(
+        optimizer=AdamWConfig(moments_dtype="int8"),
+        ef_compression=False,
+        microbatch=micro,
+    )
+
+
+def _ns(spec: P) -> NamedSharding:
+    return NamedSharding(sharding.active().mesh, spec)
+
+
+def _cache_dtype(cfg: ModelConfig):
+    return jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+
+
+def _serve_params_shapes(cfg: ModelConfig, layout: ShardLayout):
+    """Inference param ShapeDtypeStructs; low-bit policies get the
+    offline-PACKED tree (models/packing.py) — the paper's Algorithm 2,
+    so decode cells lower against 8-16x smaller weights."""
+    from repro.models.packing import pack_lm_params
+
+    def build():
+        p = model_mod.init_lm(jax.random.PRNGKey(0), cfg, layout,
+                              dtype=jnp.bfloat16)
+        pol = cfg.policy
+        if any(pol.for_class(c).is_lowbit
+               for c in ("attn_proj", "ffn_proj", "ssm_proj")):
+            p = pack_lm_params(p, cfg, pol)
+        return p
+
+    return jax.eval_shape(build)
+
+
+def _batch_shapes(cfg: ModelConfig, shape: ShapeSpec, *, with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.input_kind == "embeddings":
+        out["embeddings"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                 jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+    return out
+
+
+def _batch_shardings(batch_shapes) -> Dict[str, NamedSharding]:
+    out = {}
+    for k, v in batch_shapes.items():
+        axes = ("batch", "seq", None) if v.ndim == 3 else ("batch", "seq")
+        out[k] = _ns(sharding.spec_for(v.shape, axes))
+    return out
+
+
+def _state_shardings(state_shapes):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _ns(sharding.param_spec(path, leaf)), state_shapes)
+
+
+def _cache_shardings(cache_shapes, cfg: ModelConfig):
+    axes = cache_logical_axes(cfg)
+    return [
+        {k: _ns(sharding.spec_for(shapes[k].shape, ax[k])) for k in shapes}
+        for shapes, ax in zip(cache_shapes, axes)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# cells
+# ---------------------------------------------------------------------------
+
+def _train_cell(cfg: ModelConfig, shape: ShapeSpec,
+                tcfg: Optional[TrainStepConfig]) -> CellArtifacts:
+    layout = make_layout()
+    tcfg = tcfg or default_train_config(cfg)
+    step = make_train_step(cfg, layout, tcfg)
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, layout, tcfg))
+    batch_shapes = _batch_shapes(cfg, shape, with_labels=True)
+    return CellArtifacts(
+        step_fn=step,
+        arg_shapes=(state_shapes, batch_shapes),
+        in_shardings=(_state_shardings(state_shapes),
+                      _batch_shardings(batch_shapes)),
+        donate=(0,),
+        kind="train",
+    )
+
+
+def _prefill_cell(cfg: ModelConfig, shape: ShapeSpec) -> CellArtifacts:
+    layout = make_layout()
+    b, s = shape.global_batch, shape.seq_len
+
+    def prefill_fn(params, caches, batch):
+        return model_mod.prefill(params, batch, caches, cfg, layout)
+
+    params_shapes = _serve_params_shapes(cfg, layout)
+    cache_shapes = jax.eval_shape(
+        lambda: init_caches(cfg, layout, b, s, dtype=_cache_dtype(cfg)))
+    batch_shapes = _batch_shapes(cfg, shape, with_labels=False)
+    return CellArtifacts(
+        step_fn=prefill_fn,
+        arg_shapes=(params_shapes, cache_shapes, batch_shapes),
+        in_shardings=(_state_shardings(params_shapes),
+                      _cache_shardings(cache_shapes, cfg),
+                      _batch_shardings(batch_shapes)),
+        donate=(1,),
+        kind="prefill",
+    )
+
+
+def _decode_cell(cfg: ModelConfig, shape: ShapeSpec) -> CellArtifacts:
+    layout = make_layout()
+    b, s = shape.global_batch, shape.seq_len
+    serve = (make_serve_step_embeddings(cfg, layout)
+             if cfg.input_kind == "embeddings"
+             else make_serve_step(cfg, layout))
+
+    params_shapes = _serve_params_shapes(cfg, layout)
+    cache_shapes = jax.eval_shape(
+        lambda: init_caches(cfg, layout, b, s, dtype=_cache_dtype(cfg)))
+    if cfg.input_kind == "embeddings":
+        tok_shapes = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
+        tok_shard = _ns(sharding.spec_for(tok_shapes.shape,
+                                          ("batch", None, None)))
+    else:
+        tok_shapes = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok_shard = _ns(sharding.spec_for(tok_shapes.shape, ("batch", None)))
+    step_shapes = jax.ShapeDtypeStruct((b,), jnp.int32)
+    key_shapes = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return CellArtifacts(
+        step_fn=serve,
+        arg_shapes=(params_shapes, cache_shapes, tok_shapes, step_shapes,
+                    key_shapes),
+        in_shardings=(_state_shardings(params_shapes),
+                      _cache_shardings(cache_shapes, cfg),
+                      tok_shard,
+                      _ns(sharding.spec_for((b,), ("batch",))),
+                      _ns(P())),
+        donate=(1,),
+        kind="decode",
+    )
+
+
+def cell_artifacts(cfg: ModelConfig, shape: ShapeSpec,
+                   tcfg: Optional[TrainStepConfig] = None) -> CellArtifacts:
+    """Build (inside use_mesh) the lowering artifacts for one cell."""
+    if shape.kind == "train":
+        return _train_cell(cfg, shape, tcfg)
+    if shape.kind == "prefill":
+        return _prefill_cell(cfg, shape)
+    if shape.kind == "decode":
+        return _decode_cell(cfg, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,9 @@
+"""Model zoo: decoder LMs covering dense / MoE / SSM / hybrid families
+with quantized (binary/ternary/ternary-binary/int8/int4) projections."""
+
+from repro.models.common import ModelConfig, ShardLayout
+from repro.models.model import (
+    init_lm, forward, forward_hidden, logits_from_hidden,
+    prefill, decode_step,
+)
+from repro.models.kvcache import init_caches, cache_logical_axes

@@ -1,0 +1,100 @@
+"""Residual blocks: (mixer, ffn) pairs per the config's layer pattern."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_mod
+from repro.models.attention import attention, decode_attention, init_attention
+from repro.models.common import ModelConfig, ShardLayout, layer_norm, rms_norm
+from repro.models.ffn import ffn, init_ffn
+from repro.models.moe import init_moe, moe_ffn
+from repro.parallel import sharding
+
+__all__ = ["init_block", "block_forward", "norm_params", "apply_norm"]
+
+
+def norm_params(cfg: ModelConfig, dim: int, dtype=jnp.float32) -> Dict[str, Any]:
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(p: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def init_block(key, cfg: ModelConfig, layout: ShardLayout, mixer: str,
+               ffn_kind: str, dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    p: Dict[str, Any] = {"pre_mixer_norm": norm_params(cfg, cfg.d_model, dtype)}
+    if mixer in ("A", "AL"):
+        p["mixer"] = init_attention(ks[0], cfg, layout, dtype)
+    elif mixer == "M":
+        p["mixer"] = ssm_mod.init_ssm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    if cfg.post_block_norm:
+        p["post_mixer_norm"] = norm_params(cfg, cfg.d_model, dtype)
+
+    if ffn_kind == "D":
+        p["pre_ffn_norm"] = norm_params(cfg, cfg.d_model, dtype)
+        p["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif ffn_kind == "E":
+        p["pre_ffn_norm"] = norm_params(cfg, cfg.d_model, dtype)
+        p["ffn"] = init_moe(ks[1], cfg, dtype)
+    elif ffn_kind != "-":
+        raise ValueError(ffn_kind)
+    if ffn_kind != "-" and cfg.post_block_norm:
+        p["post_ffn_norm"] = norm_params(cfg, cfg.d_model, dtype)
+    return p
+
+
+def block_forward(p: Dict[str, Any], x: jnp.ndarray,
+                  positions: Optional[jnp.ndarray], cfg: ModelConfig,
+                  layout: ShardLayout, mixer: str, ffn_kind: str, *,
+                  cache=None, step=None, decode: bool = False,
+                  ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    """Returns (x, new_cache_or_None, aux_loss)."""
+    h = apply_norm(p["pre_mixer_norm"], x, cfg)
+    new_cache = None
+    if mixer in ("A", "AL"):
+        window = cfg.sliding_window if mixer == "AL" else 0
+        if decode:
+            h, new_cache = decode_attention(p["mixer"], h, cfg, layout,
+                                            cache, step, window=window)
+        else:
+            h, new_cache = attention(p["mixer"], h, positions, cfg, layout,
+                                     window=window, cache_update=cache)
+    else:
+        if decode:
+            h, new_cache = ssm_mod.ssm_decode(p["mixer"], h, cfg,
+                                              cfg.policy, cache)
+        elif cache is not None:   # prefill: capture the post-prefix state
+            h, new_cache = ssm_mod.ssm_forward(p["mixer"], h, cfg,
+                                               cfg.policy, return_state=True)
+        else:
+            h = ssm_mod.ssm_forward(p["mixer"], h, cfg, cfg.policy)
+    if cfg.post_block_norm:
+        h = apply_norm(p["post_mixer_norm"], h, cfg)
+    x = x + h
+
+    aux = jnp.zeros((), jnp.float32)
+    if ffn_kind != "-":
+        h = apply_norm(p["pre_ffn_norm"], x, cfg)
+        if ffn_kind == "E":
+            h, aux = moe_ffn(p["ffn"], h, cfg, cfg.policy)
+        else:
+            h = ffn(p["ffn"], h, cfg.policy)
+        if cfg.post_block_norm:
+            h = apply_norm(p["post_ffn_norm"], h, cfg)
+        x = x + h
+
+    x = sharding.constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux

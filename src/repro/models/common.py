@@ -1,0 +1,211 @@
+"""Model configuration schema + shared layers (norms, RoPE, activations).
+
+One :class:`ModelConfig` describes every assigned architecture — dense,
+MoE, SSM and hybrid — through a per-period ``layer_pattern``:  each entry
+is ``(mixer, ffn)`` with mixer in {"A": attention, "AL": local/SWA
+attention, "M": Mamba2/SSD} and ffn in {"D": dense FFN, "E": MoE FFN,
+"-": none}.  The full network is the pattern repeated ``num_layers /
+period`` times and is *scanned* over the repeats, so HLO size and compile
+time are O(period), not O(num_layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import POLICIES, QuantPolicy
+
+__all__ = ["ModelConfig", "ShardLayout", "rms_norm", "layer_norm",
+           "apply_rope", "rope_freqs", "softcap", "ceil_to", "NORM_INIT"]
+
+NORM_INIT = 1.0
+
+
+def ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardLayout:
+    """Physical layout decisions that depend on the mesh, not the arch.
+
+    tp: model-axis size used for head/ffn sharding (1 on a laptop, 16 on
+    the production pod).  Head counts that don't divide tp are padded up
+    with zero-initialized heads (output-exact; FLOP waste is reported in
+    the roofline's useful-FLOPs ratio).
+    """
+    tp: int = 1
+
+    def pad_heads(self, h: int) -> int:
+        return ceil_to(h, self.tp)
+
+    def pad_vocab(self, v: int) -> int:
+        # multiple of 128 shards over any mesh axis we use and keeps the
+        # lane dim aligned.
+        return ceil_to(v, 128 * math.gcd(self.tp, 128))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # --- layer pattern (one period) ---
+    layer_pattern: Tuple[Tuple[str, str], ...] = (("A", "D"),)
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    shared_expert_d_ff: int = 0      # qwen2-moe style always-on experts
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01
+    # --- attention ---
+    sliding_window: int = 0          # used by "AL" mixers (and mixtral "A")
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    rope_theta: float = 10000.0
+    qk_norm: bool = False            # chameleon
+    post_block_norm: bool = False    # gemma2 sandwich norms
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm (starcoder2)
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 128
+    # --- frontend ---
+    input_kind: str = "tokens"       # tokens | embeddings (audio/vlm stubs)
+    # --- numerics / quantization ---
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    quant_policy: str = "bf16"
+    kv_cache_dtype: str = "bf16"     # "bf16" | "int8" (quantized KV)
+    dtype: Any = jnp.bfloat16
+    # --- distribution defaults (overridable by the launcher) ---
+    remat: bool = True
+    # nested remat: checkpoint each block inside the period body too, so
+    # the backward of a period holds ONE layer's internals at a time
+    # (matters for period-8 jamba: 8 layers of MoE buffers + SSD chunk
+    # states would otherwise be live simultaneously).
+    remat_block: bool = True
+
+    # ---------------- derived -----------------
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def period(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def num_periods(self) -> int:
+        assert self.num_layers % self.period == 0, (
+            f"{self.name}: num_layers={self.num_layers} not a multiple of "
+            f"pattern period {self.period}")
+        return self.num_layers // self.period
+
+    @property
+    def policy(self) -> QuantPolicy:
+        return POLICIES[self.quant_policy]
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.ssm_d_inner // self.ssm_headdim
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Parameter counting (for 6ND roofline accounting) ------------------
+
+    def param_counts(self) -> Dict[str, int]:
+        """Returns {"total": N, "active": N_active} (embedding included)."""
+        d, dh = self.d_model, self.head_dim_
+        h, kv = self.num_heads, self.num_kv_heads
+        attn = d * (h * dh) + 2 * d * (kv * dh) + (h * dh) * d
+        dense_ffn = 3 * d * self.d_ff                    # gate, up, down
+        expert_ffn = 3 * d * self.d_ff                   # per expert
+        shared_ffn = 3 * d * self.shared_expert_d_ff
+        din, nstate, ng = self.ssm_d_inner, self.ssm_state, self.ssm_ngroups
+        nh = self.ssm_nheads
+        ssm = (d * (2 * din + 2 * ng * nstate + nh)      # in_proj (z,x,B,C,dt)
+               + din * self.ssm_conv + nh                # conv + A_log
+               + nh + din * d)                           # D + out_proj
+
+        total = active = 0
+        for mixer, ffn in self.layer_pattern:
+            if mixer in ("A", "AL"):
+                total += attn; active += attn
+            elif mixer == "M":
+                total += ssm; active += ssm
+            if ffn == "D":
+                total += dense_ffn; active += dense_ffn
+            elif ffn == "E":
+                total += self.num_experts * expert_ffn + d * self.num_experts
+                active += self.num_experts_per_tok * expert_ffn + d * self.num_experts
+                total += shared_ffn; active += shared_ffn
+        total *= self.num_periods
+        active *= self.num_periods
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return {"total": total + emb, "active": active + emb}
+
+
+# ---------------------------------------------------------------------------
+# Shared layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x (..., S, H, dh); positions (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., S, 1, dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

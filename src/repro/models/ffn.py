@@ -1,0 +1,38 @@
+"""Gated FFN (SwiGLU/GeGLU) with quantized projections."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.models.attention import project
+from repro.models.common import ModelConfig
+from repro.parallel import sharding
+
+__all__ = ["init_ffn", "ffn"]
+
+
+def init_ffn(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in = d_model ** -0.5
+    std_out = d_ff ** -0.5
+    return {
+        "gate": {"w": (jax.random.normal(k1, (d_model, d_ff)) * std_in).astype(dtype)},
+        "up": {"w": (jax.random.normal(k2, (d_model, d_ff)) * std_in).astype(dtype)},
+        "down": {"w": (jax.random.normal(k3, (d_ff, d_model)) * std_out).astype(dtype)},
+    }
+
+
+def ffn(params: Dict[str, Any], x: jnp.ndarray, policy: QuantPolicy,
+        activation=jax.nn.silu) -> jnp.ndarray:
+    mode, backend = policy.ffn_proj, policy.backend
+    g = project(params["gate"], x, mode, backend)
+    u = project(params["up"], x, mode, backend)
+    h = (activation(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
+    # TP inside the FFN: hidden sharded over "ffn" (model axis); the
+    # down-projection's contraction then reduces over the sharded dim.
+    h = sharding.constrain(h, ("batch", None, "ffn"))
+    return project(params["down"], h, mode, backend)

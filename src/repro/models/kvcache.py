@@ -1,0 +1,79 @@
+"""Decode-time state containers: KV caches (full + ring/windowed) and SSM
+recurrent states, stacked over scan periods.
+
+Layout per pattern entry (leading dim = num_periods, consumed by the
+layer scan):
+
+* "A"  (global attention):  k/v (P, B, L, KVp, dh), pos (P, B, L), L = max_len
+* "AL" (sliding window):    same with L = min(window, max_len) — a ring
+  buffer indexed ``step % L`` (this is what makes mixtral's long_500k
+  decode O(window) instead of O(seq));
+* "M"  (SSD):               conv (P, B, K-1, conv_dim), h (P, B, G, Hg, N, Pd)
+
+``pos`` starts at INVALID (2^30) so unwritten slots never pass the
+``pos <= step`` mask.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import head_layout
+from repro.models.common import ModelConfig, ShardLayout
+from repro.models import ssm as ssm_mod
+
+__all__ = ["init_caches", "cache_logical_axes", "INVALID_POS"]
+
+INVALID_POS = 2 ** 30
+
+
+def _attn_cache_shape(cfg: ModelConfig, layout: ShardLayout, batch: int,
+                      length: int):
+    hl = head_layout(cfg.num_heads, cfg.num_kv_heads, layout.tp)
+    return (cfg.num_periods, batch, length, hl.kvp, cfg.head_dim_)
+
+
+def init_caches(cfg: ModelConfig, layout: ShardLayout, batch: int,
+                max_len: int, dtype=jnp.bfloat16) -> List[Dict[str, Any]]:
+    caches = []
+    for mixer, _ in cfg.layer_pattern:
+        if mixer in ("A", "AL"):
+            length = max_len
+            if mixer == "AL" and cfg.sliding_window:
+                length = min(cfg.sliding_window, max_len)
+            shape = _attn_cache_shape(cfg, layout, batch, length)
+            caches.append({
+                "k": jnp.zeros(shape, dtype),
+                "v": jnp.zeros(shape, dtype),
+                "pos": jnp.full((cfg.num_periods, batch, length),
+                                INVALID_POS, jnp.int32),
+            })
+        elif mixer == "M":
+            st = ssm_mod.init_ssm_state(cfg, batch, dtype=jnp.float32)
+            caches.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (cfg.num_periods,) + x.shape).copy(), st))
+        else:
+            raise ValueError(mixer)
+    return caches
+
+
+def cache_logical_axes(cfg: ModelConfig) -> List[Dict[str, Any]]:
+    """Logical axes per cache leaf (leading period dim replicated)."""
+    out = []
+    for mixer, _ in cfg.layer_pattern:
+        if mixer in ("A", "AL"):
+            out.append({
+                "k": (None, "batch", None, "kv_heads", None),
+                "v": (None, "batch", None, "kv_heads", None),
+                "pos": (None, "batch", None),
+            })
+        else:
+            out.append({
+                "conv": (None, "batch", None, "conv_dim"),
+                "h": (None, "batch", None, "ssm_heads", None, None),
+            })
+    return out

@@ -1,0 +1,159 @@
+"""The decoder LM: embeddings -> scanned layer periods -> head.
+
+* layers are stacked per pattern *period* and scanned (compile time and
+  HLO size are O(period), not O(num_layers));
+* remat (jax.checkpoint) wraps the scan body for training;
+* the vocab is padded to a shardable multiple (ShardLayout.pad_vocab) and
+  masked in the loss;
+* ``input_kind == "embeddings"`` (musicgen EnCodec frames, chameleon VQ
+  patches if used that way) bypasses the token embedding — the modality
+  frontend is a stub per the assignment.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import apply_norm, block_forward, init_block, norm_params
+from repro.models.common import ModelConfig, ShardLayout, softcap
+from repro.models.kvcache import init_caches
+from repro.parallel import sharding
+
+__all__ = ["init_lm", "forward_hidden", "logits_from_hidden", "forward",
+           "prefill", "decode_step", "init_caches"]
+
+
+def init_lm(key, cfg: ModelConfig, layout: ShardLayout,
+            dtype=jnp.float32) -> Dict[str, Any]:
+    vp = layout.pad_vocab(cfg.vocab_size)
+    d = cfg.d_model
+    keys = jax.random.split(key, cfg.num_periods + 3)
+
+    blocks: List[Any] = []
+    for i, (mixer, ffn_kind) in enumerate(cfg.layer_pattern):
+        per_period = [
+            init_block(jax.random.fold_in(keys[r], i), cfg, layout, mixer,
+                       ffn_kind, dtype)
+            for r in range(cfg.num_periods)
+        ]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_period))
+
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[-1], (vp, d)) * d ** -0.5).astype(dtype),
+        "blocks": blocks,
+        "final_norm": norm_params(cfg, d, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": (jax.random.normal(keys[-2], (d, vp)) * d ** -0.5).astype(dtype)}
+    return params
+
+
+def _embed(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.input_kind == "embeddings":
+        x = batch["embeddings"]
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return x.astype(cfg.dtype)
+
+
+def _period_fn(cfg: ModelConfig, layout: ShardLayout, *, decode: bool,
+               with_cache: bool):
+    """Builds the scan body over one period of the layer pattern."""
+
+    def body(carry, xs):
+        x, step = carry
+        pp = xs[0] if with_cache else xs
+        caches = xs[1] if with_cache else [None] * len(cfg.layer_pattern)
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        new_caches = []
+        aux = jnp.zeros((), jnp.float32)
+        for i, (mixer, ffn_kind) in enumerate(cfg.layer_pattern):
+            def fwd(p, x, cache, *, m=mixer, f=ffn_kind):
+                return block_forward(p, x, positions, cfg, layout, m, f,
+                                     cache=cache, step=step, decode=decode)
+            # nested remat: one layer's internals live at a time in the
+            # period's backward (see ModelConfig.remat_block).
+            if (cfg.remat and cfg.remat_block and not decode
+                    and cfg.period > 1):
+                fwd = jax.checkpoint(fwd)
+            x, nc, a = fwd(pp[i], x, caches[i])
+            new_caches.append(nc)
+            aux = aux + a
+        outs = (tuple(new_caches), aux) if with_cache else aux
+        return (x, step), outs
+
+    return body
+
+
+def forward_hidden(params, batch, cfg: ModelConfig, layout: ShardLayout
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (hidden (B,S,D) after final norm, aux loss)."""
+    x = _embed(params, batch, cfg)
+    x = sharding.constrain(x, ("batch", "seq", "embed"))
+    body = _period_fn(cfg, layout, decode=False, with_cache=False)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, _), auxs = jax.lax.scan(body, (x, jnp.zeros((), jnp.int32)),
+                                tuple(params["blocks"]))
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, jnp.sum(auxs)
+
+
+def logits_from_hidden(params, x: jnp.ndarray, cfg: ModelConfig,
+                       layout: ShardLayout) -> jnp.ndarray:
+    """Head projection (+ final softcap).  Output fp32 (B, S?, Vp)."""
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]["w"]
+    logits = jnp.einsum("...d,dv->...v", x.astype(jnp.bfloat16),
+                        w.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return sharding.constrain(logits, ("batch", "seq", "vocab"))
+
+
+def forward(params, batch, cfg: ModelConfig, layout: ShardLayout):
+    """Full forward -> (logits (B,S,Vp) fp32, aux)."""
+    x, aux = forward_hidden(params, batch, cfg, layout)
+    return logits_from_hidden(params, x, cfg, layout), aux
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch, caches, cfg: ModelConfig, layout: ShardLayout):
+    """Run the prompt, fill caches.  -> (last-position logits, caches)."""
+    x = _embed(params, batch, cfg)
+    x = sharding.constrain(x, ("batch", "seq", "embed"))
+    body = _period_fn(cfg, layout, decode=False, with_cache=True)
+    (x, _), (new_caches, _aux) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.int32)),
+        (tuple(params["blocks"]), tuple(caches)))
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params, x[:, -1:], cfg, layout)
+    return logits, list(new_caches)
+
+
+def decode_step(params, batch, caches, step, cfg: ModelConfig,
+                layout: ShardLayout):
+    """One token for every sequence.
+
+    batch: {"tokens": (B,1)} or {"embeddings": (B,1,D)}; step: scalar
+    int32 (current position).  -> (logits (B,1,Vp), new caches).
+    """
+    x = _embed(params, batch, cfg)
+    x = sharding.constrain(x, ("batch", None, "embed"))
+    body = _period_fn(cfg, layout, decode=True, with_cache=True)
+    (x, _), (new_caches, _aux) = jax.lax.scan(
+        body, (x, step), (tuple(params["blocks"]), tuple(caches)))
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params, x, cfg, layout)
+    return logits, list(new_caches)

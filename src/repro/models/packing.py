@@ -1,0 +1,93 @@
+"""Offline weight packing for LM serving — the paper's Algorithm 2
+(pack B once, offline) applied to a whole parameter tree.
+
+``pack_lm_params`` walks the tree by path and replaces every projection
+leaf ``{"w": (k, n)}`` whose quantization class is low-bit with the
+bit-plane representation from kernels/ops.pack_weights:
+
+    tnn:      {plus (n, kw), minus (n, kw), scale (n,)}   8x smaller
+    tbn/bnn:  {bits (n, kw), scale (n,)}                  16x smaller
+
+Stacked (period-scanned) and expert tensors keep their leading dims via
+vmap.  Embeddings, norms, routers, SSM scan parameters and the LM head
+stay exactly as they are (QuantPolicy classes; standard QNN practice).
+
+At serve time, ``attention.project`` / ``moe._expert_matmul`` detect a
+packed leaf (no "w" key) and run: runtime activation quantization ->
+integer popcount core -> per-channel rescale.  This is the technique's
+headline TPU win: decode streams 1/16th (binary) or 1/8th (ternary) of
+the weight bytes every token.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.kernels import ops
+from repro.kernels.ops import QuantMode
+from repro.models.common import ModelConfig
+
+__all__ = ["pack_lm_params", "packed_matmul_any", "PACKED_KEYS"]
+
+PACKED_KEYS = ("plus", "minus", "bits")
+
+# path -> projection class (mirror of the modules' own policy usage)
+_CLASS_OF = (
+    (r"(wq|wk|wv|wo)$", "attn_proj"),
+    (r"(gate|up|down|shared/(gate|up|down))$", "ffn_proj"),
+    (r"(in_proj|out_proj)$", "ssm_proj"),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+def _pack_leaf(w: jnp.ndarray, mode: QuantMode) -> Dict[str, jnp.ndarray]:
+    """w (..., k, n) float -> packed planes with leading dims preserved."""
+    if w.ndim == 2:
+        return ops.pack_weights(w.astype(jnp.float32), mode)
+    return jax.vmap(lambda ww: _pack_leaf(ww, mode))(w)
+
+
+def pack_lm_params(params: Dict[str, Any], cfg: ModelConfig,
+                   policy: QuantPolicy | None = None) -> Dict[str, Any]:
+    policy = policy or cfg.policy
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict) and "w" in tree and tree["w"].ndim >= 2:
+            for pat, cls in _CLASS_OF:
+                if re.search(pat, prefix):
+                    mode = policy.for_class(cls)
+                    if mode.is_lowbit:
+                        packed = _pack_leaf(tree["w"], mode)
+                        if "b" in tree:
+                            packed["b"] = tree["b"]
+                        return packed
+                    break
+            return tree
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [walk(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+        return tree
+
+    return walk(params)
+
+
+def packed_matmul_any(packed: Dict[str, Any], x2: jnp.ndarray,
+                      mode: QuantMode, backend: str) -> jnp.ndarray:
+    """x2 (m, k) float x packed (n, kw) planes -> (m, n) float."""
+    k = x2.shape[-1]
+    xa = ops.quantize_activations(x2.astype(jnp.float32), mode)
+    acc = ops.packed_matmul(xa, packed, mode, k, backend=backend)
+    y = acc.astype(jnp.float32) * xa["scale"] * packed["scale"][None, :]
+    return y

@@ -1,0 +1,212 @@
+"""Mamba2 / SSD (state-space duality) mixer — chunked train scan + O(1)
+recurrent decode.
+
+This is the attention-free mixer for mamba2-1.3b and the "M" layers of
+jamba.  The SSD scan core (A, dt, B, C recurrence) is elementwise/scan
+math, *not* a GeMM, so the paper's low-bit technique does not apply to it
+(DESIGN.md §Arch-applicability); the large in/out projections around it
+do run through QuantLinear.
+
+Chunked SSD (Mamba2 paper, §6): split the sequence into chunks of Q
+steps.  Within a chunk the recurrence is expanded into a (Q x Q) masked
+"attention" form (quadratic in Q only); across chunks a scan carries the
+(H, P, N) state.  Decode is the plain one-step recurrence.
+
+Sharding: heads (G groups x Hg heads/group) shard over the model axis;
+the inter-chunk scan carry is head-sharded too, so the scan is local.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.models.attention import project
+from repro.models.common import ModelConfig, rms_norm
+
+__all__ = ["init_ssm", "ssm_forward", "ssm_decode", "init_ssm_state"]
+
+
+def _dims(cfg: ModelConfig):
+    din = cfg.ssm_d_inner
+    g, n, p = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+    h = cfg.ssm_nheads
+    assert h % g == 0, "ssm heads must split into groups"
+    conv_dim = din + 2 * g * n
+    return din, g, n, p, h, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    d = cfg.d_model
+    din, g, n, p, h, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * din + 2 * g * n + h          # z, xBC, dt
+    std = d ** -0.5
+    return {
+        "in_proj": {"w": (jax.random.normal(ks[0], (d, d_in_proj)) * std).astype(dtype)},
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim)) *
+                   (cfg.ssm_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (h,), minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))).astype(jnp.float32),
+        "norm": jnp.ones((din,), dtype),
+        "out_proj": {"w": (jax.random.normal(ks[3], (din, d)) * din ** -0.5).astype(dtype)},
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via K static shifts. x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :x.shape[1]]
+        out = out + shifted * w[k - 1 - i]
+    return out + b
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    din, g, n, p, h, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + conv_dim]
+    dt = zxbcdt[..., din + conv_dim:]
+    return z, xbc, dt
+
+
+def ssm_forward(params, x: jnp.ndarray, cfg: ModelConfig,
+                policy: QuantPolicy, *, return_state: bool = False):
+    """x (B, S, D) -> (B, S, D) via chunked SSD.
+
+    With ``return_state`` also returns the decode state after position
+    S-1 ({"conv", "h"}), so a prefill can seed subsequent decoding.
+    """
+    b, s, d = x.shape
+    din, g, n, p, h, conv_dim = _dims(cfg)
+    hg = h // g
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, f"seq {s} must be a multiple of ssm_chunk {q}"
+    nc = s // q
+    mode, backend = policy.ssm_proj, policy.backend
+
+    zxbcdt = project(params["in_proj"], x, mode, backend)
+    z, xbc_raw, dt = _split_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw.astype(jnp.float32),
+                                   params["conv_w"].astype(jnp.float32),
+                                   params["conv_b"].astype(jnp.float32)))
+    xin = xbc[..., :din].reshape(b, s, g, hg, p)
+    bmat = xbc[..., din:din + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., din + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])                                     # (H,)
+    da = dt * a                                                       # (B,S,H)
+
+    # chunk views
+    def chunk(t, *shape):
+        return t.reshape(b, nc, q, *shape)
+    xin_c = chunk(xin, g, hg, p)
+    b_c = chunk(bmat, g, n)
+    c_c = chunk(cmat, g, n)
+    dt_c = chunk(dt, g, hg)            # heads laid out as (g, hg)
+    da_c = chunk(da, g, hg)
+    cum = jnp.cumsum(da_c, axis=2)                                    # (B,nc,Q,G,Hg)
+
+    # ---- intra-chunk (quadratic in Q only) ----
+    cb = jnp.einsum("bcign,bcjgn->bcgij", c_c, b_c)                   # (B,nc,G,Q,Q)
+    # (B,nc,G,Hg,Q,Q) decay = exp(cum_i - cum_j) for i >= j
+    ci = cum.transpose(0, 1, 3, 4, 2)                                 # (B,nc,G,Hg,Q)
+    decay = jnp.exp(jnp.clip(ci[..., :, None] - ci[..., None, :], -60.0, 0.0))
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    scores = cb[:, :, :, None] * decay * jnp.where(mask, 1.0, 0.0)
+    dtj = dt_c.transpose(0, 1, 3, 4, 2)                               # (B,nc,G,Hg,Q)
+    scores = scores * dtj[..., None, :]                               # weight by dt_j
+    y_intra = jnp.einsum("bcghij,bcjghp->bcighp", scores, xin_c)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(jnp.clip(ci[..., -1:] - ci, -60.0, 0.0))   # (B,nc,G,Hg,Q)
+    xw = xin_c * (dt_c * decay_to_end.transpose(0, 1, 4, 2, 3))[..., None]
+    s_c = jnp.einsum("bcjgn,bcjghp->bcghnp", b_c, xw)                 # (B,nc,G,Hg,N,P)
+
+    # ---- inter-chunk scan ----
+    chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1], -60.0, None))       # (B,nc,G,Hg)
+
+    def step(hprev, inp):
+        dec, snew = inp
+        hnew = hprev * dec[..., None, None] + snew
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, g, hg, n, p), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        step, h0,
+        (chunk_decay.transpose(1, 0, 2, 3), s_c.transpose(1, 0, 2, 3, 4, 5)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4, 5)                     # (B,nc,G,Hg,N,P)
+
+    decay_from_start = jnp.exp(jnp.clip(cum, -60.0, None))            # (B,nc,Q,G,Hg)
+    y_inter = jnp.einsum("bcign,bcghnp->bcighp", c_c, h_prevs)
+    y_inter = y_inter * decay_from_start[..., None]
+
+    y = (y_intra + y_inter).reshape(b, s, g, hg, p)
+    y = y + xin * params["D"].reshape(g, hg)[None, None, :, :, None]
+    y = y.reshape(b, s, din)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y, params["norm"].astype(jnp.float32), cfg.norm_eps)
+    out = project(params["out_proj"], y.astype(x.dtype), mode, backend)
+    if return_state:
+        kc = cfg.ssm_conv - 1
+        state = {"conv": xbc_raw[:, s - kc:].astype(jnp.float32),
+                 "h": h_last}
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent)
+# ---------------------------------------------------------------------------
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    din, g, n, p, h, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "h": jnp.zeros((batch, g, h // g, n, p), jnp.float32),
+    }
+
+
+def ssm_decode(params, x: jnp.ndarray, cfg: ModelConfig,
+               policy: QuantPolicy, state) -> Tuple[jnp.ndarray, Dict]:
+    """x (B, 1, D) -> (y (B, 1, D), new state).  One-step recurrence."""
+    b, s1, d = x.shape
+    din, g, n, p, h, conv_dim = _dims(cfg)
+    hg = h // g
+    mode, backend = policy.ssm_proj, policy.backend
+
+    zxbcdt = project(params["in_proj"], x, mode, backend)
+    z, xbc, dt = _split_proj(zxbcdt[:, 0], cfg)                    # (B, ...)
+
+    window = jnp.concatenate(
+        [state["conv"], xbc[:, None, :].astype(state["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xbc_t = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    new_conv = window[:, 1:]
+
+    xin = xbc_t[:, :din].reshape(b, g, hg, p)
+    bmat = xbc_t[:, din:din + g * n].reshape(b, g, n)
+    cmat = xbc_t[:, din + g * n:].reshape(b, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    dec = jnp.exp((dt * a).reshape(b, g, hg))                         # (B,G,Hg)
+
+    dbx = jnp.einsum("bgn,bghp->bghnp", bmat,
+                     xin * dt.reshape(b, g, hg)[..., None])
+    h_new = state["h"] * dec[..., None, None] + dbx
+    y = jnp.einsum("bgn,bghnp->bghp", cmat, h_new)                    # (B,G,Hg,P)
+    y = y + xin * params["D"].reshape(g, hg)[None, :, :, None]
+    y = y.reshape(b, din) * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y, params["norm"].astype(jnp.float32), cfg.norm_eps)
+    y = project(params["out_proj"], y[:, None, :].astype(x.dtype), mode, backend)
+    return y, {"conv": new_conv, "h": h_new}

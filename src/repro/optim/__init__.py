@@ -1,0 +1,8 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule, global_norm, clip_by_global_norm)
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     ef_compress_update, ef_state_init)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "clip_by_global_norm", "compress_int8",
+           "decompress_int8", "ef_compress_update", "ef_state_init"]

@@ -1,0 +1,165 @@
+"""AdamW + cosine schedule + global-norm clipping, pure-functional.
+
+Beyond-paper tie-in: ``moments_dtype="int8"`` applies the paper's low-bit
+idea to *optimizer state* — first and second moments are stored
+block-quantized to int8 (dynamic per-block absmax scales, 8-bit-Adam
+style), cutting optimizer memory 4x.  At 398B params (jamba) that is
+~3.2 TB -> 0.8 TB of moments across the pod, which is the difference
+between fitting and not fitting ZeRO-3 shards in HBM alongside weights.
+
+Everything is jax.tree-based; no optax dependency (none is installed —
+the assignment says build the substrate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "Q8", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm", "clip_by_global_norm"]
+
+_BLOCK = 256  # int8 moment quantization block (over the flattened tensor)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    moments_dtype: str = "f32"       # "f32" | "int8"
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# int8 block-quantized moment storage
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_with_keys_class
+class Q8:
+    """Blockwise-absmax int8 tensor.
+
+    ``q`` keeps the *parameter's own shape* (int8) and ``scale`` has the
+    last dim replaced by the per-256-block count — so both leaves shard
+    under the parameter's sharding rules (parallel/sharding.py strips the
+    trailing ``/q`` / ``/scale`` path key and reuses the parameter spec).
+    A ZeRO-3 sharded moment never needs a realignment collective.
+    """
+
+    def __init__(self, q: jnp.ndarray, scale: jnp.ndarray):
+        self.q, self.scale = q, scale
+
+    def tree_flatten_with_keys(self):
+        GA = jax.tree_util.GetAttrKey
+        return ((GA("q"), self.q), (GA("scale"), self.scale)), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, children):
+        return cls(*children)
+
+    @staticmethod
+    def quantize(x: jnp.ndarray) -> "Q8":
+        xf = x.astype(jnp.float32)
+        last = x.shape[-1] if x.ndim else 1
+        bs = _BLOCK if last % _BLOCK == 0 else last
+        xb = xf.reshape(*x.shape[:-1], max(last // bs, 1), bs)
+        scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+        q = jnp.round(xb / jnp.maximum(scale[..., None], 1e-12))
+        return Q8(q.reshape(x.shape).astype(jnp.int8),
+                  scale.astype(jnp.float32))
+
+    def dequantize(self) -> jnp.ndarray:
+        shape = self.q.shape
+        last = shape[-1] if shape else 1
+        bs = _BLOCK if last % _BLOCK == 0 else last
+        xb = self.q.astype(jnp.float32).reshape(
+            *shape[:-1], max(last // bs, 1), bs)
+        return (xb * self.scale[..., None]).reshape(shape)
+
+
+def _store(x: jnp.ndarray, dtype: str):
+    return Q8.quantize(x) if dtype == "int8" else x
+
+
+def _load(s, dtype: str) -> jnp.ndarray:
+    return s.dequantize() if dtype == "int8" else s
+
+
+def adamw_init(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(
+            lambda p: _store(jnp.zeros(p.shape, jnp.float32), cfg.moments_dtype),
+            params),
+        "v": jax.tree.map(
+            lambda p: _store(jnp.zeros(p.shape, jnp.float32), cfg.moments_dtype),
+            params),
+    }
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """-> (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_s, v_s):
+        m = b1 * _load(m_s, cfg.moments_dtype) + (1 - b1) * g
+        v = b2 * _load(v_s, cfg.moments_dtype) + (1 - b2) * g * g
+        mh, vh = m / c1, v / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, _store(m, cfg.moments_dtype), _store(v, cfg.moments_dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "step": step,
+        "m": tdef.unflatten([o[1] for o in out]),
+        "v": tdef.unflatten([o[2] for o in out]),
+    }
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (HW, RooflineTerms, collective_bytes,
+                                     roofline_from_artifact, model_flops)
+
+__all__ = ["HW", "RooflineTerms", "collective_bytes",
+           "roofline_from_artifact", "model_flops"]

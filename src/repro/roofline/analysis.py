@@ -1,0 +1,147 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs        / (chips * peak_FLOPs)
+    memory     = HLO_bytes        / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` supplies flops and bytes accessed.  Collective bytes
+are NOT in cost_analysis: ``collective_bytes`` parses the
+post-partitioning HLO text and sums operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants (TPU v5e, per assignment): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+
+Caveat recorded in DESIGN.md §6: cost_analysis flops on the forced-CPU
+backend count the *scalar* op mix of the partitioned module (one
+device's shard), and the low-bit popcount path runs on the VPU whose
+peak is below the MXU's 197 TF — compute terms for low-bit cells are
+optimistic lower bounds; the memory term is the honest roofline for
+weight-streaming-bound decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, Optional
+
+__all__ = ["HW", "RooflineTerms", "collective_bytes", "model_flops",
+           "roofline_from_artifact", "DTYPE_BYTES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link
+
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,512,1024]{2,1,0}   or  f32[]   or  u32[4096]
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9a-z]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of *output* shape bytes per collective kind in an HLO module.
+
+    Output-shape accounting: for all-gather the output is the gathered
+    tensor (bytes that actually cross links, x(n-1)/n), for all-reduce
+    the reduced tensor (2x(n-1)/n on a ring), reduce-scatter the shard.
+    We report raw output bytes per op; the ring factors are applied by
+    the caller via per-op counts if needed (we fold them into the
+    conservative estimate: bytes as reported).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match '<shape> <op-name>(' with op at the defining position:
+        # %name = bf16[...]{...} all-gather(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        shape_s, op = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-") or op.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        total = 0
+        for dtype, dims in _SHAPE_RE.findall(shape_s):
+            total += _shape_bytes(dtype, dims)
+        out[kind] += total
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def model_flops(total_params: int, active_params: int, tokens: int,
+                kind: str) -> float:
+    """6*N*D for train (fwd+bwd), 2*N*D for inference, N = active."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active_params * tokens
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time model: overlapped execution -> max of terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_from_artifact(art: Dict, hw: Optional[HW] = None,
+                           ) -> RooflineTerms:
+    """art: one dry-run JSON record (see launch/dryrun.py)."""
+    hw = hw or HW()
+    chips = int(art["num_devices"])
+    # cost_analysis on the partitioned module is per-shard; flops/bytes
+    # are whole-module totals divided across chips already when XLA
+    # reports the partitioned program. We treat them as PER-DEVICE.
+    flops = float(art["cost"].get("flops", 0.0))
+    bytes_accessed = float(art["cost"].get("bytes accessed", 0.0))
+    coll = float(art["collectives"]["total"])
+    return RooflineTerms(
+        compute_s=flops / hw.peak_flops,
+        memory_s=bytes_accessed / hw.hbm_bw,
+        collective_s=coll / hw.ici_bw,
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        coll_bytes=coll,
+        chips=chips,
+    )

@@ -1,0 +1,371 @@
+"""Static analyzer for post-SPMD-partitioning HLO text.
+
+Why this exists (and why ``compiled.cost_analysis()`` is not enough for
+the roofline):
+
+1. **while loops count once.**  Our models scan over layer periods
+   (compile time O(period)), so an executable-level cost analysis
+   undercounts flops/bytes/collectives by the trip count (22x for
+   tinyllama, 23x for gemma2...).  This analyzer multiplies each while
+   body by its statically-known trip count (JAX scans lower to
+   ``while(lt(i, N))`` with a literal N).
+2. **XLA:CPU float-normalization rewrites bf16 to f32**, doubling every
+   byte count in the final executable.  The post-SPMD module still has
+   TPU-true dtypes.
+3. **reduce-scatter formation happens late** (or never, on CPU): the
+   partitioner emits ``all-reduce`` + per-shard ``dynamic-slice`` for
+   ZeRO-3 gradient reductions; TPU's reduce-scatter-creator turns that
+   into a reduce-scatter with 1/shards the bytes.  The analyzer
+   reclassifies an all-reduce whose only non-trivial consumers are
+   dynamic-slices.
+
+What it reports per module (entry totals, children folded in):
+
+* ``dot_flops``    — 2 * prod(out) * prod(contracted dims) per dot/conv
+                     (the MXU term);
+* ``vpu_ops``      — output elements of and/or/xor/not/popcnt + selects
+                     (the paper's low-bit path runs here, not the MXU);
+* ``hbm_bytes``    — HBM-traffic estimate: operand+output bytes of
+                     memory-relevant ops (dot, conv, reduce, scatter,
+                     gather, dynamic-slice/update, sort, collectives),
+                     elementwise/broadcast/reshape ops are assumed fused
+                     (they do not round-trip HBM on TPU);
+* ``collective_bytes`` — per kind, output-shape bytes (x trip counts,
+                     after AR->RS reclassification).
+
+This is a *structural* model — no wall clock exists on this container.
+Numbers are per-device (the module is the per-partition program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline.analysis import DTYPE_BYTES
+
+__all__ = ["HloStats", "analyze_module", "parse_computations"]
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][0-9a-z]*)\[([0-9,]*)\]")
+# shape may be a tuple containing '/*index=N*/' comments (which contain
+# '='), so match lazily up to the first ' opcode(' after the '='.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+([a-z][\w\-]*)\((.*)$")
+# computation def: '%name (args...) -> ret { ' — args may nest parens
+# (tuple-typed params), so just anchor on the name and the trailing '{'.
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+_VPU_OPS = frozenset({"and", "or", "xor", "not", "popcnt", "select",
+                      "shift-left", "shift-right-logical",
+                      "shift-right-arithmetic"})
+# ops whose tensors round-trip HBM on TPU.  Elementwise chains,
+# broadcasts, reshapes, transposes, pads and iotas are assumed fused
+# into their producers/consumers (XLA:TPU does this); parameters are
+# counted at their consuming dot/collective, not at definition.
+_MEM_OPS = frozenset({"dot", "convolution", "reduce", "scatter", "gather",
+                      "dynamic-slice", "dynamic-update-slice", "sort",
+                      "concatenate"}) | set(_COLLECTIVES)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    total = 0
+    for _dtype, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(shape_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return "", []
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str          # raw text after the opening paren
+    operands: List[str]
+
+
+def _parse_operands(rest: str) -> List[str]:
+    # operands are up to the matching close paren at depth 0
+    out, depth, cur = [], 0, []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+            cur.append(ch)
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    names = []
+    for o in out:
+        m = re.match(r"%([\w.\-]+)", o)
+        names.append(m.group(1) if m else o)
+    return names
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            s = line.strip()
+            if s.endswith("{") and ") -> " in s:
+                m = _COMP_RE.match(s)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape, op, rest = m.groups()
+            comps[cur].append(
+                Instr(name, shape.strip(), op, rest, _parse_operands(rest)))
+    return comps
+
+
+def _attr(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _attr_list(rest: str, key: str) -> List[int]:
+    m = re.search(key + r"=\{([0-9, ]*)\}", rest)
+    if not m or not m.group(1).strip():
+        return []
+    return [int(x) for x in m.group(1).split(",")]
+
+
+def _group_size(rest: str) -> int:
+    # replica_groups=[G,S]<=... -> size S ; or explicit {{0,1},{2,3}}
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _const_value(i: Instr) -> Optional[int]:
+    # 'constant(22)' parses as op='constant', rest='22), ...'
+    m = re.match(r"\s*(\d+)\s*\)", i.rest)
+    return int(m.group(1)) if m else None
+
+
+def _trip_count(cond: List[Instr]) -> int:
+    """JAX scan conds: ROOT = pred[] compare(iter, const), LT."""
+    consts = {i.name: i for i in cond if i.op == "constant"}
+    for i in cond:
+        if i.op == "compare":
+            for op in i.operands:
+                if op in consts:
+                    v = _const_value(consts[op])
+                    if v is not None:
+                        return v
+    for i in cond:   # fall back: any s32 constant in the cond
+        if i.op == "constant" and i.shape.startswith("s32"):
+            v = _const_value(i)
+            if v is not None:
+                return v
+    return 1
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    vpu_ops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Optional[Dict[str, float]] = None
+    while_trips: Optional[List[int]] = None
+
+    def as_dict(self) -> Dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "vpu_ops": self.vpu_ops,
+            "hbm_bytes": self.hbm_bytes,
+            "collectives": dict(self.collective_bytes or {}),
+            "while_trips": list(self.while_trips or []),
+        }
+
+
+def analyze_module(hlo: str) -> HloStats:
+    comps = parse_computations(hlo)
+    shapes: Dict[str, str] = {}
+    for instrs in comps.values():
+        for i in instrs:
+            shapes[i.name] = i.shape
+
+    # consumers (per computation) for the AR->RS reclassification
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float]]] = {}
+    trips: List[int] = []
+
+    def comp_cost(name: str) -> Tuple[float, float, float, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        memo[name] = (0.0, 0.0, 0.0, {})   # cycle guard
+        instrs = comps.get(name, [])
+        consumers: Dict[str, List[Instr]] = defaultdict(list)
+        for i in instrs:
+            for op in i.operands:
+                consumers[op].append(i)
+
+        flops = vpu = hbm = 0.0
+        coll: Dict[str, float] = defaultdict(float)
+
+        for i in instrs:
+            out_bytes = _shape_bytes(i.shape)
+            # ---- nested computations ------------------------------------
+            if i.op == "while":
+                body = _attr(i.rest, "body")
+                cond = _attr(i.rest, "condition")
+                n = _trip_count(comps.get(cond, [])) if cond else 1
+                trips.append(n)
+                bf, bv, bh, bc = comp_cost(body) if body else (0, 0, 0, {})
+                cf, cv, ch, cc = comp_cost(cond) if cond else (0, 0, 0, {})
+                flops += n * (bf + cf)
+                vpu += n * (bv + cv)
+                hbm += n * (bh + ch)
+                for k, v in {**bc}.items():
+                    coll[k] += n * v
+                for k, v in {**cc}.items():
+                    coll[k] += n * v
+                continue
+            called = (_attr(i.rest, "calls") or _attr(i.rest, "to_apply"))
+            if called and i.op in ("fusion", "call", "map", "reduce",
+                                   "reduce-window", "scatter", "sort",
+                                   "all-reduce", "reduce-scatter"):
+                cf, cv, ch, cc = comp_cost(called)
+                # fusion bodies: count their dot/vpu work, not their bytes
+                flops += cf
+                vpu += cv
+                if i.op == "call":
+                    hbm += ch
+                    for k, v in cc.items():
+                        coll[k] += v
+            if i.op == "conditional":
+                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%([\w.\-]+))",
+                                      i.rest)
+                names = []
+                for a, b in branches:
+                    if a:
+                        names += [x.strip().lstrip("%") for x in a.split(",")]
+                    if b:
+                        names.append(b)
+                if names:
+                    costs = [comp_cost(n) for n in names]
+                    f, v, h, c = max(costs, key=lambda t: t[0] + t[2])
+                    flops += f
+                    vpu += v
+                    hbm += h
+                    for k, vv in c.items():
+                        coll[k] += vv
+                continue
+
+            # ---- leaf ops -----------------------------------------------
+            if i.op == "dot":
+                lcd = _attr_list(i.rest, "lhs_contracting_dims")
+                lhs = shapes.get(i.operands[0], "") if i.operands else ""
+                _dt, ldims = _first_shape_dims(lhs)
+                k = 1
+                for d in lcd:
+                    if d < len(ldims):
+                        k *= ldims[d]
+                flops += 2.0 * _shape_elems(i.shape) * k
+                hbm += out_bytes + sum(
+                    _shape_bytes(shapes.get(o, "")) for o in i.operands)
+            elif i.op == "convolution":
+                win = re.findall(r"size=([0-9x]+)", i.rest)
+                ksz = 1
+                if win:
+                    for d in win[0].split("x"):
+                        ksz *= int(d)
+                flops += 2.0 * _shape_elems(i.shape) * ksz
+                hbm += out_bytes + sum(
+                    _shape_bytes(shapes.get(o, "")) for o in i.operands)
+            elif i.op in _VPU_OPS:
+                vpu += _shape_elems(i.shape)
+            elif i.op in _COLLECTIVES or any(
+                    i.op.startswith(c) for c in _COLLECTIVES):
+                kind = next(c for c in _COLLECTIVES if i.op.startswith(c))
+                bytes_ = out_bytes
+                if kind == "all-reduce":
+                    # ZeRO-3: AR consumed only by dynamic-slice == RS.
+                    use = [c for c in consumers.get(i.name, [])
+                           if c.op not in ("get-tuple-element",)]
+                    gs = _group_size(i.rest)
+                    if use and all(c.op == "dynamic-slice" for c in use):
+                        kind = "reduce-scatter"
+                        bytes_ = out_bytes / max(gs, 1)
+                coll[kind] += bytes_
+                hbm += out_bytes
+            elif i.op == "dynamic-update-slice":
+                # in-place: read-modify-write of the *slice* region only
+                upd = (_shape_bytes(shapes.get(i.operands[1], ""))
+                       if len(i.operands) > 1 else 0)
+                hbm += 2 * upd
+            elif i.op in _MEM_OPS:
+                hbm += out_bytes
+                if i.op in ("reduce", "sort", "scatter", "gather"):
+                    hbm += sum(_shape_bytes(shapes.get(o, ""))
+                               for o in i.operands)
+
+        memo[name] = (flops, vpu, hbm, dict(coll))
+        return memo[name]
+
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.MULTILINE)
+    if m:
+        entry = m.group(1)
+    else:   # fall back: computation named like the module/main
+        for n in comps:
+            if "main" in n:
+                entry = n
+                break
+    if entry is None and comps:
+        entry = max(comps, key=lambda n: len(comps[n]))
+
+    f, v, h, c = comp_cost(entry) if entry else (0, 0, 0, {})
+    c = {**{k: 0.0 for k in _COLLECTIVES}, **c}
+    c["total"] = sum(c[k] for k in _COLLECTIVES)
+    return HloStats(dot_flops=f, vpu_ops=v, hbm_bytes=h,
+                    collective_bytes=c, while_trips=trips)

@@ -1,0 +1,6 @@
+from repro.runtime.fault_tolerance import (Watchdog, WatchdogConfig,
+                                           StragglerReport)
+from repro.runtime.elastic import ElasticPlan, plan_restart
+
+__all__ = ["Watchdog", "WatchdogConfig", "StragglerReport", "ElasticPlan",
+           "plan_restart"]

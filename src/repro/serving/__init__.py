@@ -1,0 +1,6 @@
+from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.engine import (ServeConfig, Engine, Request, Result,
+                                  make_serve_step, make_prefill_fn)
+
+__all__ = ["SamplerConfig", "sample", "ServeConfig", "Engine", "Request",
+           "Result", "make_serve_step", "make_prefill_fn"]

@@ -1,0 +1,233 @@
+"""Batched serving engine: slot scheduler + prefill + lockstep decode.
+
+The jitted units are what the decode dry-run cells lower:
+
+* ``make_serve_step``  — one new token for every live slot against the
+  full KV cache (this is the ``serve_step`` of decode_32k / long_500k);
+* ``make_prefill_fn``  — run a prompt through the model, filling caches
+  (the prefill_32k cells lower the closely-related ``forward``).
+
+The Engine around them is a small continuous-batching scheduler
+(vLLM-style, static slots instead of paged blocks — TPU-friendly since
+shapes must be static):
+
+* fixed ``num_slots`` decode lanes, each with a KV/SSM-state slice;
+* requests queue up, are admitted into free slots, prefilled one at a
+  time (prompt padded to a bucket), then decode advances *all* live
+  slots in one jitted step per token;
+* finished slots (EOS or max_len) free immediately and are refilled
+  without stopping the others — the decode batch never drains.
+
+Per-slot cache insertion uses a batch-axis dynamic_update_slice on the
+stacked caches, so admission is also a jitted op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_mod
+from repro.models.common import ModelConfig, ShardLayout
+from repro.models.kvcache import INVALID_POS, init_caches
+from repro.serving.sampler import SamplerConfig, sample
+
+__all__ = ["ServeConfig", "Request", "Result", "Engine",
+           "make_serve_step", "make_prefill_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    num_slots: int = 8
+    max_len: int = 512
+    prefill_bucket: int = 128     # prompts padded up to a multiple of this
+    eos_id: int = -1              # -1: only stop at max_new_tokens
+    sampler: SamplerConfig = dataclasses.field(default_factory=SamplerConfig)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32 token ids
+    max_new_tokens: int = 32
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: List[int]
+
+
+# --------------------------------------------------------------------------
+# jitted units
+# --------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig, layout: ShardLayout,
+                    scfg: Optional[ServeConfig] = None):
+    """serve_step(params, caches, tokens (B,1), step) ->
+    (next_tokens (B,), logits (B,Vp), caches)."""
+    scfg = scfg or ServeConfig()
+
+    def serve_step(params, caches, tokens, step, key):
+        logits, caches = model_mod.decode_step(
+            params, {"tokens": tokens}, caches, step, cfg, layout)
+        nxt = sample(logits[:, -1, :], key,
+                     dataclasses.replace(scfg.sampler,
+                                         vocab_size=cfg.vocab_size))
+        return nxt, logits[:, -1, :], caches
+
+    return serve_step
+
+
+def make_serve_step_embeddings(cfg: ModelConfig, layout: ShardLayout,
+                               scfg: Optional[ServeConfig] = None):
+    """Variant for input_kind='embeddings' archs (musicgen): the decode
+    input is the previous frame embedding, provided by the (stubbed)
+    modality frontend."""
+    scfg = scfg or ServeConfig()
+
+    def serve_step(params, caches, embeddings, step, key):
+        logits, caches = model_mod.decode_step(
+            params, {"embeddings": embeddings}, caches, step, cfg, layout)
+        nxt = sample(logits[:, -1, :], key,
+                     dataclasses.replace(scfg.sampler,
+                                         vocab_size=cfg.vocab_size))
+        return nxt, logits[:, -1, :], caches
+
+    return serve_step
+
+
+def make_prefill_fn(cfg: ModelConfig, layout: ShardLayout):
+    """prefill(params, caches, batch) -> (last logits (B,1,Vp), caches)."""
+
+    def prefill_fn(params, caches, batch):
+        return model_mod.prefill(params, batch, caches, cfg, layout)
+
+    return prefill_fn
+
+
+# --------------------------------------------------------------------------
+# slot scheduler
+# --------------------------------------------------------------------------
+
+def _tree_set_row(tree, row_tree, b: int):
+    """Write row_tree (batch size 1 on axis 1-after-period) into slot b.
+
+    Cache leaves are (P, B, ...); row leaves are (P, 1, ...).
+    """
+    return jax.tree.map(
+        lambda full, row: jax.lax.dynamic_update_slice(
+            full, row.astype(full.dtype),
+            (0, b) + (0,) * (full.ndim - 2)),
+        tree, row_tree)
+
+
+class Engine:
+    """Continuous-batching inference engine over static decode slots."""
+
+    def __init__(self, params, cfg: ModelConfig, layout: ShardLayout,
+                 scfg: ServeConfig, seed: int = 0):
+        self.params, self.cfg, self.layout, self.scfg = params, cfg, layout, scfg
+        b, L = scfg.num_slots, scfg.max_len
+        self.caches = init_caches(cfg, layout, b, L)
+        self._prefill_caches = {
+            s: init_caches(cfg, layout, 1, L)
+            for s in self._buckets()}
+        self.serve_step = jax.jit(make_serve_step(cfg, layout, scfg))
+        self.prefill = jax.jit(make_prefill_fn(cfg, layout))
+        self.key = jax.random.PRNGKey(seed)
+
+        self.queue: deque = deque()
+        self.slot_uid = [-1] * b          # -1 = free
+        self.slot_pos = np.zeros(b, np.int32)     # next position to write
+        self.slot_remaining = np.zeros(b, np.int32)
+        self.slot_tokens: List[List[int]] = [[] for _ in range(b)]
+        self.last_token = np.zeros(b, np.int32)
+        self.results: Dict[int, Result] = {}
+
+    def _buckets(self):
+        out, s = [], self.scfg.prefill_bucket
+        while s <= self.scfg.max_len:
+            out.append(s)
+            s *= 2
+        return out or [self.scfg.max_len]
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ---------------------------------------------------------- admission
+
+    def _admit(self):
+        for b in range(self.scfg.num_slots):
+            if self.slot_uid[b] != -1 or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = np.asarray(req.prompt, np.int32)
+            bucket = next(s for s in self._buckets() if s >= len(prompt))
+            padded = np.zeros(bucket, np.int32)
+            padded[-len(prompt):] = prompt      # right-aligned, left pad 0s
+            batch = {"tokens": jnp.asarray(padded[None, :])}
+            logits, row_caches = self.prefill(
+                self.params, self._prefill_caches[bucket], batch)
+            # Left-pad slots must never be attended: poison their cache
+            # positions so the `pos <= step` mask rejects them.  (SSM
+            # archs have no position mask — serve those with exact-length
+            # prompts / bucket == prompt length.)
+            pad = bucket - len(prompt)
+            if pad:
+                row_caches = [
+                    {**c, "pos": c["pos"].at[:, :, :pad].set(INVALID_POS)}
+                    if isinstance(c, dict) and "pos" in c else c
+                    for c in row_caches]
+            self.caches = [
+                _tree_set_row(full, row, b)
+                for full, row in zip(self.caches, row_caches)]
+            self.slot_uid[b] = req.uid
+            self.slot_pos[b] = bucket
+            self.slot_remaining[b] = min(
+                req.max_new_tokens, self.scfg.max_len - bucket)
+            first = int(np.argmax(np.asarray(logits)[0, -1]))
+            self.slot_tokens[b] = [first]
+            self.last_token[b] = first
+
+    # ------------------------------------------------------------- decode
+
+    def _decode_once(self):
+        live = [b for b in range(self.scfg.num_slots) if self.slot_uid[b] != -1]
+        if not live:
+            return
+        step = jnp.asarray(self.slot_pos, jnp.int32)   # per-slot positions
+        toks = jnp.asarray(self.last_token[:, None])
+        self.key, sub = jax.random.split(self.key)
+        nxt, _, self.caches = self.serve_step(
+            self.params, self.caches, toks, step, sub)
+        nxt = np.asarray(nxt)
+        for b in live:
+            self.slot_tokens[b].append(int(nxt[b]))
+            self.last_token[b] = nxt[b]
+            self.slot_pos[b] += 1
+            self.slot_remaining[b] -= 1
+            done = (self.slot_remaining[b] <= 0
+                    or int(nxt[b]) == self.scfg.eos_id
+                    or self.slot_pos[b] >= self.scfg.max_len)
+            if done:
+                self.results[self.slot_uid[b]] = Result(
+                    self.slot_uid[b], self.slot_tokens[b])
+                self.slot_uid[b] = -1
+                self.slot_tokens[b] = []
+
+    # --------------------------------------------------------------- run
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Result]:
+        steps = 0
+        while (self.queue or any(u != -1 for u in self.slot_uid)) \
+                and steps < max_steps:
+            self._admit()
+            self._decode_once()
+            steps += 1
+        return self.results

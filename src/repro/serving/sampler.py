@@ -1,0 +1,31 @@
+"""Token sampling: greedy / temperature / top-k, jit-friendly."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplerConfig", "sample"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0      # 0 -> greedy
+    top_k: int = 0                # 0 -> no truncation
+    vocab_size: int = 0           # mask padded vocab columns if set
+
+
+def sample(logits: jnp.ndarray, key, cfg: SamplerConfig) -> jnp.ndarray:
+    """logits (B, V) fp32 -> token ids (B,) int32."""
+    if cfg.vocab_size:
+        valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+        logits = jnp.where(valid[None, :], logits, -1e30)
+    if cfg.temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

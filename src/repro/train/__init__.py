@@ -1,0 +1,6 @@
+from repro.train.loss import xent_loss
+from repro.train.train_step import TrainStepConfig, make_train_step, init_train_state
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["xent_loss", "TrainStepConfig", "make_train_step",
+           "init_train_state", "Trainer", "TrainerConfig"]

@@ -1,0 +1,78 @@
+"""Sequence-chunked, vocab-sharded softmax cross-entropy.
+
+Full logits for (B=256, S=4096, V=256k) are 1 TB fp32 — never
+materialized.  The head projection + log-sum-exp run inside a
+``lax.scan`` over sequence chunks, so peak logits memory is
+(B, chunk, V/tp) per device and the HLO the dry-run sees is the real
+production loss.  The correct-class logit uses ``take_along_axis``
+(one scalar per token; the SPMD partitioner turns it into a masked
+partial gather + all-reduce over the vocab-sharded axis).
+
+Padded vocab columns (ShardLayout.pad_vocab) are masked to -inf before
+the lse.  Optional z-loss (PaLM) regularizes the partition function.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ShardLayout, softcap
+from repro.parallel import sharding
+
+__all__ = ["xent_loss"]
+
+
+def _head_weight(params, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]["w"]
+
+
+def xent_loss(params, hidden: jnp.ndarray, batch: Dict[str, jnp.ndarray],
+              cfg: ModelConfig, layout: ShardLayout, *,
+              seq_chunk: int = 1024, z_loss: float = 0.0,
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """hidden (B, S, D) post-final-norm -> (mean token nll, metrics)."""
+    w = _head_weight(params, cfg)                       # (D, Vp)
+    vp = w.shape[1]
+    b, s, d = hidden.shape
+    labels, mask = batch["labels"], batch["mask"]
+
+    chunk = min(seq_chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    def body(carry, xs):
+        total, zsum = carry
+        h, y, m = xs                                    # (B,chunk,D) ...
+        logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.bfloat16),
+                            w.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        logits = softcap(logits, cfg.final_logit_softcap)
+        valid = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(valid[None, None, :], logits, -1e30)
+        logits = sharding.constrain(logits, ("batch", None, "vocab"))
+        mx = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        lse = mx[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - mx), axis=-1))
+        correct = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (lse - correct) * m
+        total = total + jnp.sum(nll)
+        zsum = zsum + jnp.sum(jnp.square(lse) * m)
+        return (total, zsum), None
+
+    hs = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    ys = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+    ms = mask.reshape(b, nc, chunk).swapaxes(0, 1)
+    (total, zsum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ys, ms))
+
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = total / denom
+    if z_loss:
+        loss = loss + z_loss * zsum / denom
+    return loss, {"nll": total / denom, "tokens": denom}

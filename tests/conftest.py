@@ -1,0 +1,21 @@
+"""Shared test config.
+
+Deliberately does NOT set --xla_force_host_platform_device_count: smoke
+tests and benchmarks must see the real single CPU device.  Only
+launch/dryrun.py (and the distribution tests that spawn subprocesses)
+create the 512-device placeholder topology.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    # The repo targets 32-bit lanes everywhere; keep default.
+    yield
+
+
+@pytest.fixture()
+def rng():
+    return jax.random.PRNGKey(1234)

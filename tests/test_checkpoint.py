@@ -1,0 +1,96 @@
+"""Checkpointing: atomic roundtrip, async, retention, elastic restore."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointConfig, Checkpointer
+from repro.optim.adamw import Q8
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (16, 8)),
+                   "b": jnp.zeros((8,))},
+        "opt": {"step": jnp.asarray(3),
+                "m": {"w": Q8.quantize(jax.random.normal(k, (16, 8)))}},
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(CheckpointConfig(str(tmp_path), async_save=False))
+    tree = _tree()
+    ck.save(7, tree, extra={"data_state": {"step": 7, "seed": 0}})
+    ck.wait()
+    assert ck.latest_step() == 7
+    restored, extra = ck.restore(7, jax.eval_shape(lambda: tree))
+    assert extra["data_state"]["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_then_wait(tmp_path):
+    ck = Checkpointer(CheckpointConfig(str(tmp_path), async_save=True))
+    ck.save(1, _tree())
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_atomic_no_partial_latest(tmp_path):
+    """A .tmp directory is never reported as latest."""
+    ck = Checkpointer(CheckpointConfig(str(tmp_path), async_save=False))
+    os.makedirs(tmp_path / "step_000099.tmp")
+    assert ck.latest_step() is None
+    ck.save(5, _tree())
+    ck.wait()
+    assert ck.latest_step() == 5
+
+
+def test_retention_gc(tmp_path):
+    ck = Checkpointer(CheckpointConfig(str(tmp_path), keep=2,
+                                       async_save=False))
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree())
+        ck.wait()
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_000003", "step_000004"]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(CheckpointConfig(str(tmp_path), async_save=False))
+    ck.save(1, {"w": jnp.zeros((4, 4))})
+    ck.wait()
+    with pytest.raises(ValueError):
+        ck.restore(1, {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)})
+
+
+def test_elastic_restore_new_shardings(tmp_path):
+    """Restore device_puts onto explicitly provided (new-mesh)
+    shardings — the elastic path.  Single-device here, but the code path
+    is identical."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",), devices=jax.devices()[:1])
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck = Checkpointer(CheckpointConfig(str(tmp_path), async_save=False))
+    ck.save(1, tree)
+    ck.wait()
+    shardings = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = ck.restore(1, jax.eval_shape(lambda: tree),
+                             shardings=shardings)
+    assert restored["w"].sharding == shardings["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_missing_leaf_raises(tmp_path):
+    ck = Checkpointer(CheckpointConfig(str(tmp_path), async_save=False))
+    ck.save(1, {"w": jnp.zeros(3)})
+    ck.wait()
+    with pytest.raises(KeyError):
+        ck.restore(1, {"w": jax.ShapeDtypeStruct((3,), jnp.float32),
+                       "extra_leaf": jax.ShapeDtypeStruct((2,), jnp.float32)})

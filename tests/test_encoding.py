@@ -1,0 +1,65 @@
+"""Encoding round-trips and padding exactness (hypothesis property tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding as enc
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+@given(st.integers(1, 200), st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_binary_roundtrip(k, seed):
+    key = jax.random.PRNGKey(seed % (2**31))
+    x = enc.random_binary(key, (3, k))
+    words = enc.pack_binary(x)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (3, enc.packed_width(k))
+    y = enc.unpack_binary(words, k)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(st.integers(1, 200), st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_ternary_roundtrip(k, seed):
+    key = jax.random.PRNGKey(seed % (2**31))
+    x = enc.random_ternary(key, (2, k))
+    plus, minus = enc.pack_ternary(x)
+    # (1,1) is the invalid code — planes must be disjoint (Table I).
+    assert not np.any(np.asarray(plus) & np.asarray(minus))
+    y = enc.unpack_ternary(plus, minus, k)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(st.integers(1, 100), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_word_multiple_padding(k, mult):
+    key = jax.random.PRNGKey(k * 31 + mult)
+    x = enc.random_ternary(key, (2, k))
+    plus, minus = enc.pack_ternary(x, word_multiple=mult)
+    assert plus.shape[-1] % mult == 0
+    # pad words are all-zero == ternary 0: contributes nothing to products
+    base = enc.packed_width(k)
+    assert not np.any(np.asarray(plus)[:, base:])
+    y = enc.unpack_ternary(plus, minus, k)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_bit_order_lsb_first():
+    # element t = w*32 + i sits in bit i of word w
+    x = np.full((1, 33), 1.0, np.float32)
+    x[0, 0] = -1.0   # bit 0 of word 0
+    x[0, 32] = -1.0  # bit 0 of word 1
+    words = np.asarray(enc.pack_binary(jnp.array(x)))
+    assert words[0, 0] == 1 and words[0, 1] == 1
+
+
+def test_packed_width():
+    assert enc.packed_width(1) == 1
+    assert enc.packed_width(32) == 1
+    assert enc.packed_width(33) == 2
+    assert enc.packed_width(33, multiple=128) == 128

@@ -1,0 +1,105 @@
+"""u8/u4 (gemmlowp-style) kernels: eq. (1)-(4) semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as q
+from repro.kernels import ops, ref
+from repro.kernels.int4_matmul import (
+    pack_nibbles_rows, pack_nibbles_cols, int4_matmul_pallas,
+)
+
+
+def _quantize_pair(x, w, bits):
+    qa = q.affine_calibrate(x, bits)
+    qb = q.affine_calibrate(w, bits)
+    return (q.affine_quantize(x, qa), qa), (q.affine_quantize(w, qb), qb)
+
+
+@pytest.mark.parametrize("bits,backend", [(8, "xla"), (8, "pallas"),
+                                          (4, "xla"), (4, "pallas")])
+@pytest.mark.parametrize("shape", [(12, 64, 8), (23, 65, 17), (100, 300, 40)])
+def test_affine_matmul_integer_exact(bits, backend, shape, rng):
+    m, k, n = shape
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (m, k))
+    w = jax.random.normal(k2, (k, n))
+    (aq, qa), (bq, qb) = _quantize_pair(x, w, bits)
+    fn = ops.int8_affine_matmul if bits == 8 else ops.int4_affine_matmul
+    c = fn(aq, bq, qa.zero_point, qb.zero_point, k, backend=backend)
+    gt = (np.asarray(aq) - int(qa.zero_point)) @ (np.asarray(bq) - int(qb.zero_point))
+    np.testing.assert_array_equal(np.asarray(c), gt)
+
+
+@given(st.integers(2, 30), st.integers(2, 80), st.integers(2, 20),
+       st.sampled_from([8, 4]), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_property_dequant_error_bound(m, k, n, bits, seed):
+    """|dequant(c~) - x@w| is bounded by the first-order quantization
+    error sum: k * s_a * s_b * 0.5 * (range_a + range_b) roughly; we use a
+    loose but meaningful bound of k * (s_a*max|w| + s_b*max|x|)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (m, k))
+    w = jax.random.normal(k2, (k, n))
+    (aq, qa), (bq, qb) = _quantize_pair(x, w, bits)
+    fn = ops.int8_affine_matmul if bits == 8 else ops.int4_affine_matmul
+    c = fn(aq, bq, qa.zero_point, qb.zero_point, k, backend="xla")
+    approx = np.asarray(c, np.float64) * float(qa.scale) * float(qb.scale)
+    gt = np.asarray(jnp.dot(x, w), np.float64)
+    bound = k * (0.5 * float(qa.scale) * (np.abs(np.asarray(w)).max() + 1) +
+                 0.5 * float(qb.scale) * (np.abs(np.asarray(x)).max() + 1))
+    assert np.abs(approx - gt).max() <= bound
+
+
+def test_eq3_decomposition_identity(rng):
+    """eq. (3): sum (a-za)(b-zb) == A@B - zb rowsum - za colsum + k za zb."""
+    k1, k2 = jax.random.split(rng)
+    aq = jax.random.randint(k1, (9, 33), 0, 255)
+    bq = jax.random.randint(k2, (33, 7), 0, 255)
+    za, zb = 17, 101
+    lhs = (np.asarray(aq) - za) @ (np.asarray(bq) - zb)
+    rhs = np.asarray(ref.int8_matmul_ref(aq, bq, za, zb, 33))
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_nibble_pack_roundtrip(rng):
+    v = jax.random.randint(rng, (6, 10), 0, 16)
+    pr = pack_nibbles_rows(v)
+    assert pr.shape == (6, 5) and pr.dtype == jnp.uint8
+    lo = np.asarray(pr) & 0xF
+    hi = np.asarray(pr) >> 4
+    rec = np.stack([lo, hi], -1).reshape(6, 10)
+    np.testing.assert_array_equal(rec, np.asarray(v))
+
+    pc = pack_nibbles_cols(v.T)   # (10, 6) -> (5, 6)
+    rec2 = np.stack([np.asarray(pc) & 0xF, np.asarray(pc) >> 4], 1).reshape(10, 6)
+    np.testing.assert_array_equal(rec2, np.asarray(v.T))
+
+
+def test_int4_pallas_odd_k(rng):
+    """k odd exercises the nibble zero-pad path end-to-end."""
+    k1, k2 = jax.random.split(rng)
+    aq = jax.random.randint(k1, (5, 13), 0, 16)
+    bq = jax.random.randint(k2, (13, 6), 0, 16)
+    out = int4_matmul_pallas(pack_nibbles_rows(aq), pack_nibbles_cols(bq),
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(aq, np.int64) @ np.asarray(bq, np.int64))
+
+
+def test_int16_overflow_depth_u4():
+    """Depth beyond k_max=291 CAN overflow int16 accumulation — the paper's
+    eq. (4) bound is tight in the worst case."""
+    kmax = q.k_max(4, 16)
+    assert kmax == 291
+    # worst case: all values 15, zero-points 0 -> per-step product 225
+    a = jnp.full((1, kmax + 4), 15, jnp.int32)
+    b = jnp.full((kmax + 4, 1), 15, jnp.int32)
+    out16 = ref.int4_matmul_ref(a, b, 0, 0, kmax + 4, acc_dtype=jnp.int16)
+    out32 = ref.int4_matmul_ref(a, b, 0, 0, kmax + 4, acc_dtype=jnp.int32)
+    assert int(out32[0, 0]) == 225 * (kmax + 4)
+    assert int(out16[0, 0]) != int(out32[0, 0])   # overflowed, as predicted

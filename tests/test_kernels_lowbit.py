@@ -1,0 +1,127 @@
+"""BNN/TNN/TBN kernels: shape sweeps + property tests vs the dense oracle.
+
+Every (mode, backend) pair is checked for exact integer equality against
+``jnp.dot`` over the dense {-1,0,1} matrices, across aligned and
+deliberately-misaligned shapes (padding correctness), and across Pallas
+block-shape variations (accumulation across the k grid).
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding as enc
+from repro.core import quantize
+from repro.kernels import ops, ref
+from repro.kernels.bnn_matmul import bnn_matmul_pallas
+from repro.kernels.tnn_matmul import tnn_matmul_pallas
+from repro.kernels.tbn_matmul import tbn_matmul_pallas
+
+MODES = [ops.QuantMode.BNN, ops.QuantMode.TNN, ops.QuantMode.TBN]
+BACKENDS = ["xla", "pallas", "dense"]
+SHAPES = [
+    (8, 32, 8),       # exactly one word
+    (16, 256, 8),     # paper microkernel shape (m=16, n=8)
+    (37, 100, 29),    # fully misaligned
+    (72, 128, 24),    # paper's smallest benchmark cell
+    (130, 513, 129),  # crosses pallas block boundaries in every dim
+]
+
+
+def _make_inputs(mode, key, m, k, n):
+    k1, k2 = jax.random.split(key)
+    a = (enc.random_binary(k1, (m, k)) if mode == ops.QuantMode.BNN
+         else enc.random_ternary(k1, (m, k)))
+    b = (enc.random_ternary(k2, (k, n)) if mode == ops.QuantMode.TNN
+         else enc.random_binary(k2, (k, n)))
+    return a, b
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_lowbit_matmul_exact(mode, backend, shape, rng):
+    m, k, n = shape
+    a, b = _make_inputs(mode, rng, m, k, n)
+    gt = np.asarray(jnp.dot(a, b), np.int32)
+    out = ops.lowbit_matmul(a, b, mode, backend=backend)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), gt)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8, 1), (16, 8, 2, 2), (32, 16, 4, 4)])
+def test_pallas_block_shapes(blocks, rng):
+    """Accumulation across the k grid must be exact for any tiling."""
+    bm, bn, bkw, wc = blocks
+    m, k, n = 40, 320, 24   # kw = 10 words
+    a, b = _make_inputs(ops.QuantMode.TNN, rng, m, k, n)
+    ap, am = enc.pack_ternary(a)
+    bp, bm_ = enc.pack_ternary(b.T)
+    out = tnn_matmul_pallas(ap, am, bp, bm_, block_m=bm, block_n=bn,
+                            block_kw=bkw, word_chunk=wc, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(jnp.dot(a, b)))
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8, 1), (16, 16, 4, 2)])
+def test_pallas_block_shapes_bnn_tbn(blocks, rng):
+    bm, bn, bkw, wc = blocks
+    m, k, n = 24, 200, 16
+    a, b = _make_inputs(ops.QuantMode.BNN, rng, m, k, n)
+    abits = enc.pack_binary(a)
+    bbits = enc.pack_binary(b.T)
+    out = bnn_matmul_pallas(abits, bbits, k, block_m=bm, block_n=bn,
+                            block_kw=bkw, word_chunk=wc, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(jnp.dot(a, b)))
+
+    at = enc.random_ternary(rng, (m, k))
+    ap, am = enc.pack_ternary(at)
+    out = tbn_matmul_pallas(ap, am, bbits, k, block_m=bm, block_n=bn,
+                            block_kw=bkw, word_chunk=wc, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(jnp.dot(at, b)))
+
+
+@given(st.integers(1, 40), st.integers(1, 150), st.integers(1, 24),
+       st.sampled_from(MODES), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_property_matches_dense_oracle(m, k, n, mode, seed):
+    key = jax.random.PRNGKey(seed)
+    a, b = _make_inputs(mode, key, m, k, n)
+    gt = np.asarray(jnp.dot(a, b), np.int32)
+    out = ops.lowbit_matmul(a, b, mode, backend="xla")
+    np.testing.assert_array_equal(np.asarray(out), gt)
+
+
+@given(st.integers(1, 60), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_property_dot_bounds(k, seed):
+    """|c| <= k for every mode (the bound behind eq. (4))."""
+    key = jax.random.PRNGKey(seed)
+    a, b = _make_inputs(ops.QuantMode.TNN, key, 4, k, 4)
+    out = np.asarray(ops.lowbit_matmul(a, b, ops.QuantMode.TNN))
+    assert np.all(np.abs(out) <= k)
+
+
+def test_int16_fidelity_accumulation(rng):
+    """ref.py in int16 reproduces the paper's accumulator exactly while
+    k <= k_max = 32767 (eq. 4)."""
+    m, k, n = 8, 1024, 8
+    a, b = _make_inputs(ops.QuantMode.TNN, rng, m, k, n)
+    ap, am = enc.pack_ternary(a)
+    bp, bm_ = enc.pack_ternary(b.T)
+    out16 = ref.tnn_matmul_ref(ap, am, bp, bm_, acc_dtype=jnp.int16)
+    assert out16.dtype == jnp.int16
+    np.testing.assert_array_equal(np.asarray(out16, np.int32),
+                                  np.asarray(jnp.dot(a, b), np.int32))
+
+
+def test_k_max_values_match_paper_table2():
+    # Table II: U8 k_max=66051 (q=32), U4 k_max=291 (q=16),
+    # TNN/TBN/BNN k_max=32767 (signed 16), daBNN 8388607 (23-bit mantissa).
+    assert quantize.k_max(8, 32) == 66051
+    assert quantize.k_max(4, 16) == 291
+    assert quantize.k_max(1, 16, signed_unit=True) == 32767
+    assert quantize.k_max(1, 24, signed_unit=True) == 8388607

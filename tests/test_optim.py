@@ -1,0 +1,95 @@
+"""Optimizer: AdamW trajectories, int8 moments, schedule, compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule, clip_by_global_norm,
+                         compress_int8, decompress_int8,
+                         ef_compress_update, ef_state_init)
+from repro.optim.adamw import Q8
+
+
+def _quadratic_losses(cfg, steps=60):
+    target = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params, cfg)
+    losses = []
+    for _ in range(steps):
+        grads = {"w": 2 * (params["w"] - target)}
+        losses.append(float(jnp.sum((params["w"] - target) ** 2)))
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    return losses
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=60,
+                      weight_decay=0.0)
+    losses = _quadratic_losses(cfg)
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_int8_moments_track_f32():
+    kw = dict(lr=0.1, warmup_steps=1, total_steps=60, weight_decay=0.0)
+    l32 = _quadratic_losses(AdamWConfig(moments_dtype="f32", **kw))
+    l8 = _quadratic_losses(AdamWConfig(moments_dtype="int8", **kw))
+    assert l8[-1] < 0.1 * l8[0]                    # converges too
+    assert abs(l8[-1] - l32[-1]) < 0.1
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s)))
+           for s in [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6                # mid-warmup
+    assert abs(lrs[2] - 1.0) < 1e-6                # peak
+    assert lrs[2] > lrs[3] > lrs[4]
+    assert abs(lrs[4] - 0.1) < 1e-6                # floor
+
+
+def test_clipping():
+    tree = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_q8_roundtrip_bounded_error(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (7, 130)) * 3.0
+    err = jnp.abs(Q8.quantize(x).dequantize() - x)
+    # absmax/127 per block bounds the quantization step
+    assert float(err.max()) <= float(jnp.abs(x).max()) / 127.0 + 1e-6
+
+
+def test_q8_shapes_follow_param():
+    q = Q8.quantize(jnp.zeros((6, 512)))
+    assert q.q.shape == (6, 512) and q.q.dtype == jnp.int8
+    assert q.scale.shape == (6, 2)                  # 512/256 blocks
+    q1 = Q8.quantize(jnp.zeros((130,)))
+    assert q1.scale.shape == (1,)                   # non-divisible: 1 blk
+
+
+def test_compress_roundtrip():
+    x = jnp.asarray([1.0, -0.5, 0.25, 3.0])
+    y = decompress_int8(compress_int8(x))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=3 / 127)
+
+
+def test_error_feedback_unbiased_over_time():
+    """Sum of EF-compressed grads converges to sum of true grads —
+    the residual is carried, not lost."""
+    g = {"w": jnp.asarray([1e-3, 2e-3, -5e-4])}    # tiny vs int8 step
+    err = ef_state_init(g)
+    total = jnp.zeros(3)
+    for _ in range(300):
+        sent, err = ef_compress_update(g, err)
+        total = total + sent["w"]
+    np.testing.assert_allclose(np.asarray(total / 300),
+                               np.asarray(g["w"]), rtol=0.05)

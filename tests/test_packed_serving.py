@@ -1,0 +1,81 @@
+"""Offline weight packing at LM scale (the paper's Algorithm 2):
+pack_lm_params + the packed project()/expert paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import model as model_mod
+from repro.models.attention import project
+from repro.models.common import ShardLayout
+from repro.models.kvcache import init_caches
+from repro.models.packing import pack_lm_params
+from repro.kernels import ops
+from repro.kernels.ops import QuantMode
+
+LAYOUT = ShardLayout(tp=1)
+
+
+def test_packed_project_matches_qat_path(rng):
+    """packed project() == on-the-fly quantized_matmul (same quantizers,
+    same integer core -> bit-identical results)."""
+    w = jax.random.normal(rng, (96, 24))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 96))
+    for mode in (QuantMode.TNN, QuantMode.TBN, QuantMode.BNN):
+        packed = ops.pack_weights(w, mode)
+        y_packed = project(packed, x, mode, "xla")
+        y_qat = ops.quantized_matmul(x, w, mode, "xla", True)
+        np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_qat),
+                                   rtol=1e-5, atol=1e-5, err_msg=str(mode))
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mixtral-8x22b"])
+@pytest.mark.parametrize("policy", ["tnn", "bnn"])
+def test_packed_lm_decode_matches_unpacked(arch, policy, rng):
+    """A packed-weights decode step produces the same logits as the
+    QAT-path (on-the-fly quantization) decode step."""
+    cfg = get_smoke(arch).with_(dtype=jnp.float32, quant_policy=policy)
+    params = model_mod.init_lm(rng, cfg, LAYOUT)
+    packed = pack_lm_params(params, cfg)
+
+    toks = jax.random.randint(rng, (2, 1), 0, cfg.vocab_size)
+    step = jnp.zeros((2,), jnp.int32)
+    caches_a = init_caches(cfg, LAYOUT, 2, 8, dtype=jnp.float32)
+    caches_b = init_caches(cfg, LAYOUT, 2, 8, dtype=jnp.float32)
+
+    la, _ = model_mod.decode_step(params, {"tokens": toks}, caches_a, step,
+                                  cfg, LAYOUT)
+    lb, _ = model_mod.decode_step(packed, {"tokens": toks}, caches_b, step,
+                                  cfg, LAYOUT)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_packed_bytes_shrink(rng):
+    cfg = get_smoke("tinyllama-1.1b").with_(quant_policy="bnn")
+    params = model_mod.init_lm(rng, cfg, LAYOUT, dtype=jnp.bfloat16)
+    packed = pack_lm_params(params, cfg)
+
+    def proj_bytes(tree):
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            keys = "/".join(str(getattr(p, "key", p)) for p in path)
+            if any(k in keys for k in ("wq", "wk", "wv", "wo", "gate",
+                                       "up", "down")):
+                total += np.asarray(leaf).nbytes
+        return total
+
+    b0, b1 = proj_bytes(params), proj_bytes(packed)
+    assert b1 < b0 / 10      # ~16x for binary (scale overhead)
+
+
+def test_pack_preserves_non_projection_leaves(rng):
+    cfg = get_smoke("mamba2-1.3b").with_(quant_policy="tnn")
+    params = model_mod.init_lm(rng, cfg, LAYOUT)
+    packed = pack_lm_params(params, cfg)
+    np.testing.assert_array_equal(np.asarray(packed["embed"]),
+                                  np.asarray(params["embed"]))
+    # ssm internals (A_log, conv) untouched
+    assert "A_log" in str(jax.tree_util.tree_structure(packed))

@@ -1,0 +1,87 @@
+"""Data pipeline: determinism, exact resume, host sharding, learnability."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import DataState, SyntheticLM, make_pipeline
+from repro.data.pipeline import host_rows
+
+SRC = SyntheticLM(vocab_size=64, seq_len=32, global_batch=8)
+
+
+def test_deterministic():
+    a = SRC.batch_at(DataState(3, 0))
+    b = SRC.batch_at(DataState(3, 0))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    b = SRC.batch_at(DataState(0, 0))
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_steps_differ():
+    a = SRC.batch_at(DataState(0, 0))
+    b = SRC.batch_at(DataState(1, 0))
+    assert (a["tokens"] != b["tokens"]).any()
+
+
+def test_exact_resume_mid_stream():
+    """Consuming 5 batches then resuming from the serialized state gives
+    bit-identical continuation."""
+    it = make_pipeline(SRC, DataState(0, 7))
+    state = None
+    for _ in range(5):
+        state, _ = next(it)
+    nxt_state, want = next(it)
+
+    it2 = make_pipeline(SRC, state)           # resume from two ints
+    _, got = next(it2)
+    np.testing.assert_array_equal(got["tokens"], want["tokens"])
+
+
+@given(num_hosts=st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_host_sharding_partitions_batch(num_hosts):
+    rows = [host_rows(SRC.global_batch, h, num_hosts)
+            for h in range(num_hosts)]
+    flat = np.concatenate(rows)
+    np.testing.assert_array_equal(np.sort(flat),
+                                  np.arange(SRC.global_batch))
+
+
+def test_host_slices_match_global():
+    full = SRC.batch_at(DataState(2, 0))
+    parts = []
+    for h in range(4):
+        it = make_pipeline(SRC, DataState(2, 0), host_id=h, num_hosts=4)
+        _, b = next(it)
+        parts.append(b["tokens"])
+    np.testing.assert_array_equal(np.concatenate(parts), full["tokens"])
+
+
+def test_markov_structure_learnable():
+    """The deterministic-transition fraction is ~1-noise: there IS
+    something to learn (vs white noise where repeats are ~1/V)."""
+    src = SyntheticLM(vocab_size=64, seq_len=512, global_batch=4,
+                      noise=0.1, order=1)
+    b = src.batch_at(DataState(0, 0))
+    toks = b["tokens"]
+    # empirical: same-context -> same-next-token consistency
+    from collections import defaultdict
+    nxt = defaultdict(list)
+    for row in toks:
+        for t in range(1, len(row)):
+            nxt[row[t - 1]].append(row[t])
+    agree = [np.mean(np.asarray(v) == np.bincount(v).argmax())
+             for v in nxt.values() if len(v) >= 5]
+    assert np.mean(agree) > 0.7   # far above 1/64 for noise
+
+
+@given(step=st.integers(0, 1000), seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_tokens_in_range(step, seed):
+    b = SRC.batch_at(DataState(step, seed))
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < SRC.vocab_size

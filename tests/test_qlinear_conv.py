@@ -1,0 +1,116 @@
+"""QuantLinear + GeMM-conv behaviour: QAT/packed consistency, STE
+training, the paper's overflow guards, and im2col equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantLinear, conv2d_quantized, im2col
+from repro.core.conv import check_conv_depth
+from repro.kernels.ops import QuantMode
+
+LOWBIT = [QuantMode.TNN, QuantMode.TBN, QuantMode.BNN]
+
+
+@pytest.mark.parametrize("mode", LOWBIT + [QuantMode.INT8, QuantMode.INT4])
+def test_qat_vs_packed_consistency(mode, rng):
+    """apply (QAT path) and apply_packed (inference path) share the same
+    quantizers, so their outputs must agree to float tolerance."""
+    layer = QuantLinear(96, 24, mode=mode)
+    params = layer.init(rng)
+    x = jax.random.normal(jax.random.PRNGKey(7), (10, 96))
+    y_qat = layer.apply(params, x)
+    y_packed = layer.apply_packed(layer.pack(params), x)
+    np.testing.assert_allclose(np.asarray(y_qat), np.asarray(y_packed),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", LOWBIT)
+def test_packed_weights_shapes(mode, rng):
+    layer = QuantLinear(96, 24, mode=mode)
+    packed = layer.pack(layer.init(rng))
+    kw = 96 // 32
+    if mode == QuantMode.TNN:
+        assert packed["plus"].shape == (24, kw)
+        assert packed["minus"].dtype == jnp.uint32
+    else:
+        assert packed["bits"].shape == (24, kw)
+    assert packed["scale"].shape == (24,)   # per-output-channel
+
+
+def test_lowbit_approximates_dense(rng):
+    """Ternary quantization with per-channel scales is a coarse but real
+    approximation: relative error well below 1 on gaussian data."""
+    layer = QuantLinear(512, 64, mode=QuantMode.TNN)
+    params = layer.init(rng)
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 512))
+    y_q = np.asarray(layer.apply(params, x), np.float64)
+    y_d = np.asarray(x @ params["w"], np.float64)
+    rel = np.linalg.norm(y_q - y_d) / np.linalg.norm(y_d)
+    assert rel < 0.7, rel
+
+
+def test_ste_training_reduces_loss(rng):
+    """A few SGD steps through the quantized forward must reduce loss —
+    the QAT path is trainable end to end."""
+    layer = QuantLinear(64, 16, mode=QuantMode.TNN)
+    params = layer.init(rng)
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (128, 64))
+    w_true = jax.random.normal(k2, (64, 16)) * 0.5
+    y_true = x @ w_true
+
+    @jax.jit
+    def loss_fn(p):
+        return jnp.mean((layer.apply(p, x) - y_true) ** 2)
+
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    l0 = float(loss_fn(params))
+    for _ in range(30):
+        g = grad_fn(params)
+        params = jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+    l1 = float(loss_fn(params))
+    assert np.isfinite(l1) and l1 < l0 * 0.9, (l0, l1)
+
+
+def test_i16_fidelity_guard():
+    with pytest.raises(ValueError, match="k_max"):
+        QuantLinear(40000, 8, mode=QuantMode.TNN, paper_accum_i16=True)
+    QuantLinear(32000, 8, mode=QuantMode.TNN, paper_accum_i16=True)  # ok
+
+
+def test_conv_depth_guard():
+    with pytest.raises(ValueError, match="k_max"):
+        check_conv_depth(4096, 3, 3)          # 36864 > 32767
+    check_conv_depth(3640, 3, 3)              # 32760 <= 32767
+
+
+def test_im2col_matches_lax_conv(rng):
+    b, h, w, cin, cout = 2, 9, 11, 5, 7
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (b, h, w, cin))
+    f = jax.random.normal(k2, (3, 3, cin, cout))
+    for stride, padding in [(1, "SAME"), (2, "SAME"), (1, "VALID")]:
+        y = conv2d_quantized(x, f, QuantMode.F32, stride=stride, padding=padding)
+        gt = jax.lax.conv_general_dilated(
+            x, f, (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(gt),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_quantized_conv_exact_on_ternary_data(rng):
+    """With ternary inputs+filters and |x|<=1, ternarize is identity, so
+    the quantized conv's integer core must match the dense conv exactly
+    (up to the fp scale factors which we normalize out)."""
+    from repro.core import encoding as enc
+    b, h, w, cin, cout = 1, 6, 6, 32, 4
+    x = enc.random_ternary(rng, (b, h, w, cin))
+    f = enc.random_ternary(jax.random.PRNGKey(9), (3, 3, cin, cout))
+    a, (bb, oh, ow) = im2col(x, 3, 3, 1, "VALID")
+    w2 = f.reshape(-1, cout)
+    from repro.kernels import ops
+    core = ops.lowbit_matmul(a, w2, QuantMode.TNN, backend="xla")
+    gt = jnp.dot(a, w2).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(core), np.asarray(gt))

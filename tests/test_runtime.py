@@ -1,0 +1,95 @@
+"""Fault tolerance: watchdog (fake clock) + elastic restart planning."""
+
+import pytest
+
+from repro.runtime import Watchdog, WatchdogConfig, plan_restart
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _wd(**kw):
+    clock = FakeClock()
+    cfg = WatchdogConfig(dead_after_s=100.0, straggler_factor=1.5,
+                         window=4, grace_steps=3, **kw)
+    return Watchdog(cfg, num_hosts=4, clock=clock), clock
+
+
+def test_all_healthy():
+    wd, clock = _wd()
+    for h in range(4):
+        wd.heartbeat(h, 1.0)
+    assert wd.check().healthy
+
+
+def test_dead_host_detected():
+    wd, clock = _wd()
+    for h in range(4):
+        wd.heartbeat(h, 1.0)
+    clock.t = 50.0
+    for h in range(3):            # host 3 goes silent
+        wd.heartbeat(h, 1.0)
+    clock.t = 160.0
+    for h in range(3):
+        wd.heartbeat(h, 1.0)
+    rep = wd.check()
+    assert rep.dead == [3]
+
+
+def test_straggler_needs_persistent_slowness():
+    wd, clock = _wd()
+    for step in range(2):          # brief slowness: no flag
+        for h in range(4):
+            wd.heartbeat(h, 3.0 if h == 2 else 1.0)
+        assert 2 not in wd.check().stragglers
+    for step in range(5):          # persistent: flagged after grace
+        for h in range(4):
+            wd.heartbeat(h, 3.0 if h == 2 else 1.0)
+        wd.check()
+    assert wd.check().stragglers == [2]
+
+
+def test_recovery_clears_strikes():
+    wd, clock = _wd()
+    for step in range(2):
+        for h in range(4):
+            wd.heartbeat(h, 3.0 if h == 1 else 1.0)
+        wd.check()
+    for step in range(6):          # host recovers
+        for h in range(4):
+            wd.heartbeat(h, 1.0)
+        wd.check()
+    assert wd.check().healthy
+
+
+# ---------------------------------------------------------------- elastic
+
+def test_plan_full_fleet():
+    p = plan_restart(512, chips_per_pod=256, model=16, old_data=16,
+                     old_pods=2)
+    assert (p.pods, p.data, p.model) == (2, 16, 16)
+    assert p.microbatch_scale == 1
+
+
+def test_plan_lost_one_pod():
+    p = plan_restart(256 + 128, chips_per_pod=256, model=16, old_data=16,
+                     old_pods=2)
+    assert (p.pods, p.data) == (1, 16)       # incomplete pod drained
+    assert p.microbatch_scale == 2           # global batch preserved
+
+
+def test_plan_sub_pod():
+    p = plan_restart(140, chips_per_pod=256, model=16, old_data=16,
+                     old_pods=2)
+    assert p.pods == 1 and p.model == 16
+    assert p.data == 8                       # largest divisor fitting 140
+    assert p.microbatch_scale == 4
+
+
+def test_plan_too_few_chips():
+    assert plan_restart(8, model=16) is None
