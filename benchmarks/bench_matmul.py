@@ -1,5 +1,6 @@
 """Paper Table III analogue: measured speed ratios of the multiplication
-algorithms over the paper's own H x W x D grid.
+algorithms over the paper's own H x W x D grid — plus the fused-pipeline
+comparison that motivates this repo's hot-path architecture.
 
 The paper times ARMv8 assembly microkernels on a Cortex-A73.  This repo
 targets TPU; on this CPU-only container we time the **XLA backend** of
@@ -9,13 +10,23 @@ dots for F32) through ``jax.jit``.  Absolute times mean little on a
 container CPU; the *ratio matrix* is the paper's Table III and is what
 we report.
 
-    PYTHONPATH=src python -m benchmarks.bench_matmul [--quick]
+The fused section times the full float-in/float-out projection both
+ways for every low-bit mode:
+
+* unfused — three separate jitted dispatches (quantize_activations,
+  packed_matmul, scale broadcast), each round-tripping through HBM;
+* fused   — ONE jitted ``ops.fused_qmm`` call (in-kernel/in-trace scale
+  epilogue).
+
+    PYTHONPATH=src python -m benchmarks.bench_matmul [--quick] \
+        [--json out.json] [--backend xla]
 """
 
 from __future__ import annotations
 
 import argparse
 import itertools
+import json
 import time
 from typing import Dict, List
 
@@ -29,6 +40,7 @@ from repro.kernels import ops
 from repro.kernels.ops import QuantMode
 
 ALGOS = ["f32", "u8", "u4", "tnn", "tbn", "bnn"]
+LOWBIT = ["tnn", "tbn", "bnn"]
 
 
 def _build(algo: str, h: int, w: int, d: int, key):
@@ -61,6 +73,33 @@ def _build(algo: str, h: int, w: int, d: int, key):
     return lambda: f(a, b)
 
 
+def _build_fused_pair(algo: str, h: int, w: int, d: int, key, backend: str):
+    """(unfused_call, fused_call) for one low-bit float projection.
+
+    Both consume the same float activations and offline-packed weights;
+    unfused runs the seed repo's three-pass pipeline, fused runs the
+    single fused_qmm dispatch.
+    """
+    mode = QuantMode(algo)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (h, d), jnp.float32)
+    wb = ops.pack_weights(jax.random.normal(k2, (d, w), jnp.float32), mode)
+
+    quant = jax.jit(lambda x: ops.quantize_activations(x, mode))
+    core = jax.jit(lambda xa: ops.packed_matmul(xa, wb, mode, d,
+                                                backend=backend))
+    scale = jax.jit(lambda acc, s: acc.astype(jnp.float32) * s
+                    * wb["scale"][None, :])
+
+    def unfused():
+        xa = quant(x)
+        acc = core(xa)
+        return scale(acc, xa["scale"])
+
+    fused = jax.jit(lambda x: ops.fused_qmm(x, wb, mode, backend=backend))
+    return unfused, (lambda: fused(x))
+
+
 def _time(call, *, reps: int = 5, inner: int = 3) -> float:
     call().block_until_ready()                      # compile + warm
     best = []
@@ -73,11 +112,15 @@ def _time(call, *, reps: int = 5, inner: int = 3) -> float:
     return float(np.median(best))
 
 
-def run(quick: bool = False) -> Dict[str, float]:
-    grid = list(itertools.product(
+def _grid(quick: bool):
+    return list(itertools.product(
         GEMM_GRID["height"][:2] if quick else GEMM_GRID["height"],
         GEMM_GRID["width"][:2] if quick else GEMM_GRID["width"],
         GEMM_GRID["depth"][:2] if quick else GEMM_GRID["depth"]))
+
+
+def run(quick: bool = False) -> Dict[str, float]:
+    grid = _grid(quick)
     key = jax.random.PRNGKey(0)
     times: Dict[str, List[float]] = {a: [] for a in ALGOS}
     for h, w, d in grid:
@@ -106,11 +149,52 @@ def run(quick: bool = False) -> Dict[str, float]:
     return ratio
 
 
+def run_fused(quick: bool = False, backend: str = "xla") -> Dict[str, Dict]:
+    """Fused vs unfused full-projection timings for every low-bit mode."""
+    grid = _grid(quick)
+    key = jax.random.PRNGKey(7)
+    out: Dict[str, Dict] = {}
+    print(f"\nFused pipeline (ops.fused_qmm, {backend} backend) vs the "
+          f"three-pass unfused oracle, mean over {len(grid)} shapes:")
+    print(f"{'mode':>6s} {'unfused(us)':>12s} {'fused(us)':>10s} "
+          f"{'speedup':>8s}")
+    for algo in LOWBIT:
+        tu, tf = [], []
+        for h, w, d in grid:
+            unfused, fused = _build_fused_pair(algo, h, w, d, key, backend)
+            reps = 3 if quick else 5
+            tu.append(_time(unfused, reps=reps))
+            tf.append(_time(fused, reps=reps))
+        mu, mf = float(np.mean(tu)), float(np.mean(tf))
+        out[algo] = {"unfused_s": mu, "fused_s": mf,
+                     "speedup": mu / mf, "backend": backend,
+                     "shapes": len(grid)}
+        print(f"{algo:>6s} {mu*1e6:12.0f} {mf*1e6:10.0f} {mu/mf:8.2f}x")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write results (table3 ratios + fused timings) "
+                         "to this JSON file")
+    ap.add_argument("--backend", type=str, default="xla",
+                    choices=["xla", "pallas", "dense"],
+                    help="backend for the fused-vs-unfused comparison")
+    ap.add_argument("--skip-table3", action="store_true",
+                    help="only run the fused-vs-unfused comparison")
     args = ap.parse_args()
-    run(quick=args.quick)
+
+    results: Dict[str, Dict] = {}
+    if not args.skip_table3:
+        results["table3"] = run(quick=args.quick)
+    results["fused"] = run_fused(quick=args.quick, backend=args.backend)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"\nwrote {args.json}")
 
 
 if __name__ == "__main__":

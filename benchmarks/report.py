@@ -9,7 +9,7 @@ from __future__ import annotations
 import json
 import os
 
-from repro.configs import ARCHS, SHAPES, applicable_shapes, SUBQUADRATIC
+from repro.configs import ARCHS, SHAPES, applicable_shapes
 from repro.roofline.analysis import HW, model_flops
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",

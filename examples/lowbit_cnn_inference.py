@@ -3,18 +3,20 @@
     PYTHONPATH=src python examples/lowbit_cnn_inference.py
 
 Runs the PAPER_CNN config (conv stack with per-layer TNN/TBN/BNN GeMMs,
-first layer fp per standard QNN practice) over a batch of random images,
-checks the eq. (5) channel-depth guard layer by layer, and reports the
-weight-bytes saving of the packed representation.
+first layer fp per standard QNN practice) over a batch of random images
+through the DEPLOYMENT path — filters bit-plane packed once offline,
+every conv a single fused quantize/popcount/scale GeMM dispatch
+(conv2d_packed) — checks the eq. (5) channel-depth guard layer by
+layer, verifies against the QAT forward, and reports the weight-bytes
+saving of the packed representation.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_cnn import PAPER_CNN
-from repro.core import quantize
-from repro.core.conv import check_conv_depth, conv2d_quantized
+from repro.core.conv import (check_conv_depth, conv2d_packed,
+                             conv2d_quantized, pack_conv_filters)
 from repro.kernels.ops import QuantMode
 
 cfg = PAPER_CNN
@@ -49,17 +51,26 @@ for i, spec in enumerate(cfg.convs):
     total_fp_bytes += w.size * 4
     c_in = spec.c_out
 
-# forward pass
-h = x
-c_in = cfg.c_in
-for spec, w in zip(cfg.convs, weights):
+# offline packing (Algorithm 2), then the fused deployment forward
+packed_convs = [pack_conv_filters(w, QuantMode(spec.mode))
+                if QuantMode(spec.mode).is_lowbit else None
+                for spec, w in zip(cfg.convs, weights)]
+
+h = h_qat = x
+for spec, w, packed in zip(cfg.convs, weights, packed_convs):
     mode = QuantMode(spec.mode)
-    h = conv2d_quantized(h, w, mode=mode, stride=spec.stride)
-    h = jax.nn.relu(h)
+    if packed is not None:
+        h = conv2d_packed(h, packed, mode, stride=spec.stride)
+    else:
+        h = conv2d_quantized(h, w, mode=mode, stride=spec.stride)
+    h_qat = conv2d_quantized(h_qat, w, mode=mode, stride=spec.stride)
+    h, h_qat = jax.nn.relu(h), jax.nn.relu(h_qat)
     if spec.pool:
         b, hh, ww, c = h.shape
-        h = h.reshape(b, hh // 2, 2, ww // 2, 2, c).max(axis=(2, 4))
-print("\nfeature map out:", h.shape)
+        pool = lambda t: t.reshape(b, hh // 2, 2, ww // 2, 2, c).max(axis=(2, 4))
+        h, h_qat = pool(h), pool(h_qat)
+err = float(np.max(np.abs(np.asarray(h) - np.asarray(h_qat))))
+print(f"\nfeature map out: {h.shape}  |fused - QAT forward| max = {err:.2e}")
 logits = h.mean(axis=(1, 2)) @ np.asarray(
     jax.random.normal(key, (h.shape[-1], cfg.num_classes))
     * h.shape[-1] ** -0.5)

@@ -29,12 +29,17 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--packed", action="store_true",
+                    help="pack low-bit projection weights offline at engine "
+                         "build (Algorithm 2); decode then runs the fused "
+                         "quantize/popcount/scale pipeline per projection")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch, quant_policy=args.quant)
     layout = ShardLayout(tp=1)
     scfg = ServeConfig(num_slots=args.slots, max_len=128, prefill_bucket=16,
-                       sampler=SamplerConfig(temperature=0.7))
+                       sampler=SamplerConfig(temperature=0.7),
+                       pack_params=args.packed)
 
     with sharding.use_mesh(make_host_mesh(), sharding.SERVE_RULES):
         params = model_mod.init_lm(jax.random.PRNGKey(0), cfg, layout)
@@ -61,7 +66,9 @@ def main():
         dt = time.time() - t0
 
     tokens = sum(len(r.tokens) for r in engine.results.values())
-    print(f"\n[serve_batch] quant={args.quant}: {len(engine.results)} requests, "
+    packed = " packed" if args.packed else ""
+    print(f"\n[serve_batch] quant={args.quant}{packed}: "
+          f"{len(engine.results)} requests, "
           f"{tokens} tokens, {dt:.1f}s ({tokens/dt:.1f} tok/s)")
 
 

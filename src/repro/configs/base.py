@@ -15,7 +15,7 @@ Each assigned architecture is paired with the LM shape set:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 __all__ = ["ShapeSpec", "SHAPES", "applicable_shapes", "SUBQUADRATIC"]
 

@@ -5,20 +5,30 @@ A = patches (B*OH*OW, Hk*Wk*Cin) and B = filters (Hk*Wk*Cin, Cout); the
 low-bit GeMM kernels then apply unchanged.  This is exactly how the paper
 runs TNN/TBN/BNN conv layers on ARM, and eq. (5)'s input-channel bound is
 enforced here for the int16-fidelity mode.
+
+Two regimes, mirroring core/qlinear.py:
+
+* ``conv2d_quantized`` — QAT/training forward (on-the-fly quantization,
+  STE gradients; the low-bit forward itself rides the fused pipeline via
+  ``ops.quantized_matmul``);
+* ``pack_conv_filters`` + ``conv2d_packed`` — deployment: filters are
+  bit-plane packed once, offline, and each conv is im2col + ONE fused
+  ``ops.fused_qmm`` call (quantize -> pack -> popcount GeMM -> scale).
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import quantize
 from repro.kernels import ops
-from repro.kernels.ops import QuantMode
+from repro.kernels.modes import DEFAULT_BACKEND, QuantMode
 
-__all__ = ["im2col", "conv2d_quantized", "check_conv_depth"]
+__all__ = ["im2col", "conv2d_quantized", "check_conv_depth",
+           "pack_conv_filters", "conv2d_packed"]
 
 
 def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1,
@@ -67,7 +77,7 @@ def check_conv_depth(c_in: int, kh: int, kw: int, *, accum_bits: int = 16,
 def conv2d_quantized(x: jnp.ndarray, filters: jnp.ndarray,
                      mode: QuantMode = QuantMode.TNN, *,
                      stride: int = 1, padding: str = "SAME",
-                     backend: str = ops.DEFAULT_BACKEND,
+                     backend: str = DEFAULT_BACKEND,
                      paper_accum_i16: bool = False) -> jnp.ndarray:
     """Quantized conv: x (B,H,W,Cin), filters (kh,kw,Cin,Cout) fp master.
 
@@ -84,3 +94,41 @@ def conv2d_quantized(x: jnp.ndarray, filters: jnp.ndarray,
     else:
         y = ops.quantized_matmul(a, w2, mode, backend, True)
     return y.reshape(b, oh, ow, cout)
+
+
+# ---------------------------------------------------------------------------
+# Packed (deployment) conv: pack filters once, fused GeMM per call
+# ---------------------------------------------------------------------------
+
+def pack_conv_filters(filters: jnp.ndarray, mode: QuantMode) -> Dict[str, Any]:
+    """Offline filter packing (Algorithm 2's PackedB for conv layers).
+
+    ``filters`` (kh, kw, cin, cout) float -> bit-plane pytree + static
+    geometry needed to rebuild the im2col GeMM at apply time.
+    """
+    if not mode.is_lowbit:
+        raise ValueError(f"pack_conv_filters only handles low-bit modes, "
+                         f"got {mode}")
+    kh, kw, cin, cout = filters.shape
+    w2 = filters.reshape(kh * kw * cin, cout).astype(jnp.float32)
+    packed = ops.pack_weights(w2, mode)
+    packed["geometry"] = (kh, kw, cin, cout)
+    return packed
+
+
+def conv2d_packed(x: jnp.ndarray, packed: Dict[str, Any],
+                  mode: QuantMode = QuantMode.TNN, *,
+                  stride: int = 1, padding: str = "SAME",
+                  backend: str = DEFAULT_BACKEND,
+                  bias: jnp.ndarray | None = None,
+                  paper_accum_i16: bool = False) -> jnp.ndarray:
+    """Deployment conv: im2col + ONE fused quantize/pack/popcount/scale
+    GeMM (ops.fused_qmm).  ``packed`` comes from :func:`pack_conv_filters`.
+    """
+    kh, kw, cin, cout = packed["geometry"]
+    if paper_accum_i16:
+        check_conv_depth(cin, kh, kw)
+    a, (b, oh, ow) = im2col(x.astype(jnp.float32), kh, kw, stride, padding)
+    y = ops.fused_qmm(a, {k: v for k, v in packed.items() if k != "geometry"},
+                      mode, bias, backend=backend)
+    return y.reshape(b, oh, ow, cout).astype(x.dtype)

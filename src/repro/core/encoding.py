@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 WORD_BITS = 32
 _WORD_DTYPE = jnp.uint32

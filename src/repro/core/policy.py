@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.kernels.ops import QuantMode
+from repro.kernels.modes import QuantMode
 
 __all__ = ["QuantPolicy", "POLICIES"]
 

@@ -9,8 +9,10 @@ Two regimes, matching how low-bit networks are actually deployed:
 
 * **Packed inference**: ``pack()`` converts master weights into the
   bit-plane representation once, offline — the paper's Algorithm 2
-  PackedB.  ``apply_packed`` then quantizes activations at runtime and
-  runs the integer core.  Packed weights are 16x (binary) / 8x (ternary)
+  PackedB.  ``apply_packed`` then runs the fused pipeline
+  (``ops.fused_qmm``): runtime activation quantization, the integer
+  popcount core and the scale/bias epilogue execute as a single jitted
+  call.  Packed weights are 16x (binary) / 8x (ternary)
   smaller than bf16, which is the technique's headline win for
   weight-streaming-bound decode on TPU.
 
@@ -21,14 +23,14 @@ mode a reduction deeper than k_max is a configuration error.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import quantize
 from repro.kernels import ops
-from repro.kernels.ops import QuantMode
+from repro.kernels.modes import DEFAULT_BACKEND, QuantMode
 
 __all__ = ["QuantLinear", "linear_init", "linear_apply"]
 
@@ -44,7 +46,7 @@ class QuantLinear:
     d_out: int
     mode: QuantMode = QuantMode.BF16
     use_bias: bool = False
-    backend: str = ops.DEFAULT_BACKEND
+    backend: str = DEFAULT_BACKEND
     # int16-fidelity accumulation (the paper's register width).  Purely a
     # validation mode; the TPU kernels accumulate in int32.
     paper_accum_i16: bool = False
@@ -98,10 +100,13 @@ class QuantLinear:
             w = packed["w"]
             y = jnp.dot(x2.astype(w.dtype), w, preferred_element_type=jnp.float32)
         elif self.mode.is_lowbit:
-            xa = ops.quantize_activations(x2.astype(jnp.float32), self.mode)
-            acc = ops.packed_matmul(xa, packed, self.mode, self.d_in,
-                                    backend=self.backend)
-            y = acc.astype(jnp.float32) * xa["scale"] * packed["scale"][None, :]
+            # One fused call: quantize -> pack -> popcount matmul -> scale
+            # (+ bias) — the scale epilogue runs inside the kernel instead
+            # of a separate int32 -> float32 broadcast pass.
+            y = ops.fused_qmm(x2.astype(jnp.float32), packed, self.mode,
+                              packed["b"] if self.use_bias else None,
+                              backend=self.backend)
+            return y.reshape(*lead, self.d_out).astype(x.dtype)
         else:  # affine u8/u4
             bits = 8 if self.mode == QuantMode.INT8 else 4
             qa = quantize.affine_calibrate(x2.astype(jnp.float32), bits)
@@ -123,7 +128,7 @@ def linear_init(key, d_in: int, d_out: int, dtype=jnp.float32):
 
 
 def linear_apply(params, x, mode: QuantMode = QuantMode.BF16,
-                 backend: str = ops.DEFAULT_BACKEND):
+                 backend: str = DEFAULT_BACKEND):
     d_in, d_out = params["w"].shape
     layer = QuantLinear(d_in, d_out, mode=mode,
                         use_bias="b" in params, backend=backend)

@@ -9,11 +9,33 @@ from repro.kernels.ops import (
     packed_matmul,
     pack_weights,
     quantize_activations,
+    fused_qmm,
     int8_affine_matmul,
     int4_affine_matmul,
 )
-from repro.kernels.bnn_matmul import bnn_matmul_pallas
-from repro.kernels.tnn_matmul import tnn_matmul_pallas
-from repro.kernels.tbn_matmul import tbn_matmul_pallas
+from repro.kernels.bnn_matmul import bnn_matmul_pallas, bnn_matmul_fused_pallas
+from repro.kernels.tnn_matmul import tnn_matmul_pallas, tnn_matmul_fused_pallas
+from repro.kernels.tbn_matmul import tbn_matmul_pallas, tbn_matmul_fused_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
 from repro.kernels.int4_matmul import int4_matmul_pallas
+
+__all__ = [
+    "ref",
+    "QuantMode",
+    "quantized_matmul",
+    "lowbit_matmul",
+    "packed_matmul",
+    "pack_weights",
+    "quantize_activations",
+    "fused_qmm",
+    "int8_affine_matmul",
+    "int4_affine_matmul",
+    "bnn_matmul_pallas",
+    "bnn_matmul_fused_pallas",
+    "tnn_matmul_pallas",
+    "tnn_matmul_fused_pallas",
+    "tbn_matmul_pallas",
+    "tbn_matmul_fused_pallas",
+    "int8_matmul_pallas",
+    "int4_matmul_pallas",
+]

@@ -14,6 +14,17 @@ TPU mapping of the paper's blocked GeMM (Algorithm 2):
   uint32 words per inner step: the (bm, bn, word_chunk) broadcast is the
   VPU analogue of the NEON register outer product.
 
+Fused epilogue
+--------------
+``lowbit_matmul_call`` can additionally stream *epilogue operands* into
+the kernel: per-row vectors (shape (m, 1), e.g. the activation scale)
+and per-column vectors (shape (1, n), e.g. the weight scale and bias).
+They get their own BlockSpecs — (block_m, 1) revisited along j/s and
+(1, block_n) revisited along i/s — so a kernel body can finalize the
+int32 accumulator into scaled float output at ``pid_k == num_k - 1``
+without a second pass over the (m, n) result in HBM.  This is how the
+``*_fused`` kernels fold the dequantization of eq. (2) into the matmul.
+
 Inputs are padded to block multiples here (pad words are all-zero, which
 is exact for every encoding — see encoding.py) and the output is sliced
 back.
@@ -21,7 +32,6 @@ back.
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
@@ -45,6 +55,8 @@ def lowbit_matmul_call(
     a_operands: Sequence[jnp.ndarray],   # each (m, kw) uint32
     b_operands: Sequence[jnp.ndarray],   # each (n, kw) uint32  (B transposed)
     *,
+    row_operands: Sequence[jnp.ndarray] = (),   # each (m, 1), epilogue input
+    col_operands: Sequence[jnp.ndarray] = (),   # each (1, n), epilogue input
     block_m: int,
     block_n: int,
     block_kw: int,
@@ -54,8 +66,12 @@ def lowbit_matmul_call(
 ):
     """Run ``kernel_body`` over a (m/bm, n/bn, kw/bkw) grid.
 
-    ``kernel_body(pid_k, num_k, a_refs, b_refs, o_ref)`` must initialize
-    o_ref at pid_k == 0, accumulate, and finalize at pid_k == num_k - 1.
+    ``kernel_body(pid_k, num_k, a_refs, b_refs, r_refs, c_refs, o_ref)``
+    must initialize o_ref at pid_k == 0, accumulate, and finalize at
+    pid_k == num_k - 1.  ``r_refs`` / ``c_refs`` hold the (block_m, 1) /
+    (1, block_n) tiles of the epilogue operands (empty tuples when none
+    were passed).  The output buffer has dtype ``acc_dtype`` — int32 for
+    the integer kernels, float32 when the epilogue rescales in-kernel.
     Returns the un-padded (m, n) result.
     """
     m, kw = a_operands[0].shape
@@ -68,28 +84,38 @@ def lowbit_matmul_call(
     mp, np_, kwp = ceil_to(m, block_m), ceil_to(n, block_n), ceil_to(kw, block_kw)
     a_ops = [pad2d(a, mp, kwp) for a in a_operands]
     b_ops = [pad2d(b, np_, kwp) for b in b_operands]
+    r_ops = [pad2d(r, mp, 1) for r in row_operands]
+    c_ops = [pad2d(c, 1, np_) for c in col_operands]
 
     grid = (mp // block_m, np_ // block_n, kwp // block_kw)
     num_k = grid[2]
 
     a_spec = pl.BlockSpec((block_m, block_kw), lambda i, j, s: (i, s))
     b_spec = pl.BlockSpec((block_n, block_kw), lambda i, j, s: (j, s))
+    r_spec = pl.BlockSpec((block_m, 1), lambda i, j, s: (i, 0))
+    c_spec = pl.BlockSpec((1, block_n), lambda i, j, s: (0, j))
     o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j))
 
+    na, nb, nr = len(a_ops), len(b_ops), len(r_ops)
+
     def _kernel(*refs):
-        a_refs = refs[: len(a_ops)]
-        b_refs = refs[len(a_ops): len(a_ops) + len(b_ops)]
+        a_refs = refs[:na]
+        b_refs = refs[na: na + nb]
+        r_refs = refs[na + nb: na + nb + nr]
+        c_refs = refs[na + nb + nr: -1]
         o_ref = refs[-1]
-        kernel_body(pl.program_id(2), num_k, a_refs, b_refs, o_ref)
+        kernel_body(pl.program_id(2), num_k, a_refs, b_refs,
+                    r_refs, c_refs, o_ref)
 
     out = pl.pallas_call(
         _kernel,
         grid=grid,
-        in_specs=[a_spec] * len(a_ops) + [b_spec] * len(b_ops),
+        in_specs=([a_spec] * len(a_ops) + [b_spec] * len(b_ops)
+                  + [r_spec] * len(r_ops) + [c_spec] * len(c_ops)),
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((mp, np_), acc_dtype),
         interpret=interpret,
-    )(*a_ops, *b_ops)
+    )(*a_ops, *b_ops, *r_ops, *c_ops)
     return out[:m, :n]
 
 
@@ -118,3 +144,17 @@ def chunked_reduce(a_refs, b_refs, product_fn, *, word_chunk: int, acc_dtype):
 
     acc0 = jnp.zeros((bm, bn), acc_dtype)
     return jax.lax.fori_loop(0, steps, body, acc0)
+
+
+def scale_epilogue(acc_f32, r_refs, c_refs):
+    """Apply the eq. (2) dequantization inside the kernel.
+
+    ``acc_f32`` is the finalized (bm, bn) float32 integer count;
+    ``r_refs = (row_scale,)`` and ``c_refs = (col_scale,)`` or
+    ``(col_scale, bias)``.  The multiply order matches the unfused
+    ``acc * a_scale * w_scale`` epilogue exactly (bit-identical floats).
+    """
+    out = acc_f32 * r_refs[0][...] * c_refs[0][...]
+    if len(c_refs) > 1:
+        out = out + c_refs[1][...]
+    return out

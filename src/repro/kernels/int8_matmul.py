@@ -44,7 +44,6 @@ def int8_matmul_pallas(
     b_p = pad2d(b_q, kp, np_)
 
     grid = (mp // block_m, np_ // block_n, kp // block_k)
-    num_k = grid[2]
 
     def kernel(a_ref, b_ref, o_ref):
         @pl.when(pl.program_id(2) == 0)

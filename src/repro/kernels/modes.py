@@ -1,0 +1,32 @@
+"""Quantization mode enum — a leaf module so both ``repro.core`` (policy,
+quantizers) and ``repro.kernels`` (ops dispatch) can import it without
+creating an import cycle between the two packages."""
+
+from __future__ import annotations
+
+import enum
+
+__all__ = ["QuantMode", "DEFAULT_BACKEND"]
+
+# Default kernel backend for every dispatch entry point (see ops.py for
+# the backend semantics); lives here so call-signature defaults resolve
+# before ops.py finishes importing.
+DEFAULT_BACKEND = "xla"
+
+
+class QuantMode(str, enum.Enum):
+    F32 = "f32"
+    BF16 = "bf16"
+    INT8 = "int8"
+    INT4 = "int4"
+    TNN = "tnn"    # ternary activations x ternary weights
+    TBN = "tbn"    # ternary activations x binary weights
+    BNN = "bnn"    # binary  activations x binary weights
+
+    @property
+    def is_lowbit(self) -> bool:
+        return self in (QuantMode.TNN, QuantMode.TBN, QuantMode.BNN)
+
+    @property
+    def is_float(self) -> bool:
+        return self in (QuantMode.F32, QuantMode.BF16)

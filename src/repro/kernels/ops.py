@@ -22,18 +22,22 @@ PackedB: weights are packed once, offline).
 
 from __future__ import annotations
 
-import enum
 import functools
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+# Leaf first: QuantMode/DEFAULT_BACKEND must be bound before the core
+# import below re-enters this (partially initialized) module through the
+# core -> qlinear -> kernels cycle.
+from repro.kernels.modes import DEFAULT_BACKEND, QuantMode
+
 from repro.core import encoding, quantize
 from repro.kernels import ref as kref
-from repro.kernels.bnn_matmul import bnn_matmul_pallas
-from repro.kernels.tnn_matmul import tnn_matmul_pallas
-from repro.kernels.tbn_matmul import tbn_matmul_pallas
+from repro.kernels.bnn_matmul import bnn_matmul_pallas, bnn_matmul_fused_pallas
+from repro.kernels.tnn_matmul import tnn_matmul_pallas, tnn_matmul_fused_pallas
+from repro.kernels.tbn_matmul import tbn_matmul_pallas, tbn_matmul_fused_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
 from repro.kernels.int4_matmul import (
     int4_matmul_pallas, pack_nibbles_rows, pack_nibbles_cols,
@@ -42,40 +46,34 @@ from repro.kernels.int4_matmul import (
 __all__ = [
     "QuantMode", "pack_weights", "quantize_activations", "packed_matmul",
     "quantized_matmul", "lowbit_matmul", "int8_affine_matmul",
-    "int4_affine_matmul", "DEFAULT_BACKEND",
+    "int4_affine_matmul", "DEFAULT_BACKEND", "fused_qmm",
+    "bnn_matmul_xla_fused", "tnn_matmul_xla_fused", "tbn_matmul_xla_fused",
 ]
 
-DEFAULT_BACKEND = "xla"
 _WORD_CHUNK = 8  # uint32 words per scan step on the xla path (256 k-elems)
 
 
-class QuantMode(str, enum.Enum):
-    F32 = "f32"
-    BF16 = "bf16"
-    INT8 = "int8"
-    INT4 = "int4"
-    TNN = "tnn"    # ternary activations x ternary weights
-    TBN = "tbn"    # ternary activations x binary weights
-    BNN = "bnn"    # binary  activations x binary weights
-
-    @property
-    def is_lowbit(self) -> bool:
-        return self in (QuantMode.TNN, QuantMode.TBN, QuantMode.BNN)
-
-    @property
-    def is_float(self) -> bool:
-        return self in (QuantMode.F32, QuantMode.BF16)
+# QuantMode lives in kernels/modes.py (leaf module, breaks the
+# core<->kernels import cycle); re-exported here for every existing
+# call site.
 
 
 # ---------------------------------------------------------------------------
 # XLA production paths (k-chunked popcount scans)
 # ---------------------------------------------------------------------------
 
-def _chunked_bitwise_matmul(product_fn, a_ops, b_ops, *, word_chunk=_WORD_CHUNK):
+def _chunked_bitwise_matmul(product_fn, a_ops, b_ops, *, word_chunk=_WORD_CHUNK,
+                            epilogue=None):
     """acc[m, n] = sum over kw-chunks of product_fn(a_chunk, b_chunk).
 
     a_ops: list of (m, kw) uint32; b_ops: list of (n, kw) uint32.
     Scans the word axis so the broadcast intermediate is (m, n, wc).
+
+    ``epilogue`` (optional) maps the final int32 scan carry to the float
+    output *inside the same traced computation*, so XLA fuses the
+    dequantization multiply into the consumer of the scan's last
+    iteration — the int32 accumulator is never materialized in HBM as a
+    separate pass.
     """
     m, kw = a_ops[0].shape
     n = b_ops[0].shape[0]
@@ -97,7 +95,7 @@ def _chunked_bitwise_matmul(product_fn, a_ops, b_ops, *, word_chunk=_WORD_CHUNK)
 
     acc0 = jnp.zeros((m, n), jnp.int32)
     acc, _ = jax.lax.scan(step, acc0, (a_sc, b_sc))
-    return acc
+    return acc if epilogue is None else epilogue(acc)
 
 
 def _pc(x):
@@ -135,6 +133,46 @@ def tnn_matmul_xla(a_plus, a_minus, b_plus_t, b_minus_t, k_valid: int = 0):
 def tbn_matmul_xla(a_plus, a_minus, b_bits_t, k_valid: int = 0):
     del k_valid
     return _chunked_bitwise_matmul(_tbn_product, [a_plus, a_minus], [b_bits_t])
+
+
+# ---------------------------------------------------------------------------
+# Fused XLA paths: popcount scan + eq. (2) scale epilogue in one trace
+# ---------------------------------------------------------------------------
+
+def _scale_epilogue_f32(acc, row_scale, col_scale, bias):
+    """Same multiply order as the unfused ``acc * a_scale * w_scale``
+    epilogue, so fused and unfused results are bit-identical floats."""
+    out = acc.astype(jnp.float32) * row_scale * col_scale
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def bnn_matmul_xla_fused(a_bits, b_bits_t, k_valid: int,
+                         row_scale, col_scale, bias=None):
+    def epi(pc):
+        return _scale_epilogue_f32(jnp.int32(k_valid) - 2 * pc,
+                                   row_scale, col_scale, bias)
+    return _chunked_bitwise_matmul(_bnn_product, [a_bits], [b_bits_t],
+                                   epilogue=epi)
+
+
+def tnn_matmul_xla_fused(a_plus, a_minus, b_plus_t, b_minus_t, k_valid: int,
+                         row_scale, col_scale, bias=None):
+    del k_valid
+    def epi(acc):
+        return _scale_epilogue_f32(acc, row_scale, col_scale, bias)
+    return _chunked_bitwise_matmul(_tnn_product, [a_plus, a_minus],
+                                   [b_plus_t, b_minus_t], epilogue=epi)
+
+
+def tbn_matmul_xla_fused(a_plus, a_minus, b_bits_t, k_valid: int,
+                         row_scale, col_scale, bias=None):
+    del k_valid
+    def epi(acc):
+        return _scale_epilogue_f32(acc, row_scale, col_scale, bias)
+    return _chunked_bitwise_matmul(_tbn_product, [a_plus, a_minus],
+                                   [b_bits_t], epilogue=epi)
 
 
 # ---------------------------------------------------------------------------
@@ -267,6 +305,89 @@ def packed_matmul(xa: Dict[str, Any], wb: Dict[str, Any], mode: QuantMode,
 
 
 # ---------------------------------------------------------------------------
+# Fused packed inference: quantize -> pack -> popcount matmul -> scale,
+# one jitted call (the paper's co-designed quantizer+kernel pipeline)
+# ---------------------------------------------------------------------------
+
+def _as_row_scale(scale, m: int) -> jnp.ndarray:
+    """Activation scale (scalar per-tensor or (m,) per-row) -> (m, 1) f32."""
+    s = jnp.asarray(scale, jnp.float32)
+    if s.ndim == 0:
+        return jnp.full((m, 1), s)
+    return s.reshape(m, 1)
+
+
+def _as_col_vec(v, n: int) -> jnp.ndarray:
+    """Weight scale / bias (scalar or (n,) per-channel) -> (1, n) f32."""
+    x = jnp.asarray(v, jnp.float32)
+    if x.ndim == 0:
+        return jnp.full((1, n), x)
+    return x.reshape(1, n)
+
+
+def _packed_out_features(wb: Dict[str, Any]) -> int:
+    return (wb["bits"] if "bits" in wb else wb["plus"]).shape[0]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "backend", "interpret"))
+def fused_qmm(x: jnp.ndarray, wb: Dict[str, Any], mode: QuantMode,
+              bias: Optional[jnp.ndarray] = None, *,
+              backend: str = DEFAULT_BACKEND,
+              interpret: bool = True) -> jnp.ndarray:
+    """Fused low-bit projection: float x (m, k) against offline-packed
+    weights ``wb`` -> float32 (m, n), in ONE jitted computation.
+
+    ternarize/binarize -> bit-plane pack -> popcount matmul -> per-row
+    activation scale x per-column weight scale (+ optional bias).  Unlike
+    ``quantize_activations`` + ``packed_matmul`` + a broadcast rescale
+    (three dispatches that each round-trip (m, n)/(m, kw) arrays through
+    HBM), the whole pipeline stays inside one kernel/trace:
+
+    * ``pallas``: the scale epilogue runs inside the matmul kernel at
+      ``pid_k == num_k - 1`` (``*_fused_pallas``), float32 out;
+    * ``xla``: the epilogue is fused onto the final ``lax.scan`` carry
+      (``*_xla_fused``);
+    * ``dense``: unpack + MXU dot + epilogue in the same trace (kernel-
+      level fusion for this backend is an open roadmap item).
+
+    Numerics match the unfused oracle exactly: the integer core is
+    identical and the epilogue uses the same multiply order.
+    """
+    if not mode.is_lowbit:
+        raise ValueError(f"fused_qmm only handles low-bit modes, got {mode}")
+    m, k = x.shape
+    n = _packed_out_features(wb)
+    xa = quantize_activations(x.astype(jnp.float32), mode)
+    row = _as_row_scale(xa["scale"], m)
+    col = _as_col_vec(wb["scale"], n)
+    b2 = None if bias is None else _as_col_vec(bias, n)
+
+    if backend == "pallas":
+        if mode == QuantMode.BNN:
+            return bnn_matmul_fused_pallas(xa["bits"], wb["bits"], k,
+                                           row, col, b2, interpret=interpret)
+        if mode == QuantMode.TNN:
+            return tnn_matmul_fused_pallas(xa["plus"], xa["minus"],
+                                           wb["plus"], wb["minus"], k,
+                                           row, col, b2, interpret=interpret)
+        return tbn_matmul_fused_pallas(xa["plus"], xa["minus"], wb["bits"], k,
+                                       row, col, b2, interpret=interpret)
+    if backend == "xla":
+        if mode == QuantMode.BNN:
+            return bnn_matmul_xla_fused(xa["bits"], wb["bits"], k,
+                                        row, col, b2)
+        if mode == QuantMode.TNN:
+            return tnn_matmul_xla_fused(xa["plus"], xa["minus"],
+                                        wb["plus"], wb["minus"], k,
+                                        row, col, b2)
+        return tbn_matmul_xla_fused(xa["plus"], xa["minus"], wb["bits"], k,
+                                    row, col, b2)
+    # dense: packed storage, MXU compute; epilogue fused by XLA
+    acc = packed_matmul(xa, wb, mode, k, backend=backend, interpret=interpret)
+    return _scale_epilogue_f32(acc, row, col, b2)
+
+
+# ---------------------------------------------------------------------------
 # Float-facing quantized matmul with STE gradients (QAT)
 # ---------------------------------------------------------------------------
 
@@ -278,11 +399,11 @@ def _qmm_fwd_value(x, w, mode: QuantMode, backend: str, interpret: bool):
         return jnp.dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
                        preferred_element_type=jnp.float32)
     if mode.is_lowbit:
-        xa = quantize_activations(x, mode)
+        # Forward rides the fused pipeline: quantize -> pack -> popcount
+        # matmul -> scale in one trace (weights are re-packed per call in
+        # QAT; inference should pack once and call fused_qmm directly).
         wb = pack_weights(w, mode)
-        acc = packed_matmul(xa, wb, mode, k, backend=backend,
-                            interpret=interpret)
-        return acc.astype(jnp.float32) * xa["scale"] * wb["scale"][None, :]
+        return fused_qmm(x, wb, mode, backend=backend, interpret=interpret)
     # affine u8/u4
     bits = 8 if mode == QuantMode.INT8 else 4
     qa = quantize.affine_calibrate(x, bits)

@@ -26,7 +26,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import encoding
 
 __all__ = [
     "matmul_f32_ref",

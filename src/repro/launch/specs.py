@@ -18,7 +18,6 @@ cells lower ``prefill`` (prompt -> caches + last logits).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

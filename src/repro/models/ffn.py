@@ -9,7 +9,6 @@ import jax.numpy as jnp
 
 from repro.core.policy import QuantPolicy
 from repro.models.attention import project
-from repro.models.common import ModelConfig
 from repro.parallel import sharding
 
 __all__ = ["init_ffn", "ffn"]

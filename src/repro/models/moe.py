@@ -27,7 +27,6 @@ sharding-rule option used when E % tp == 0 (see parallel/sharding.py).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax

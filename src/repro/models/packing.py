@@ -85,9 +85,12 @@ def pack_lm_params(params: Dict[str, Any], cfg: ModelConfig,
 
 def packed_matmul_any(packed: Dict[str, Any], x2: jnp.ndarray,
                       mode: QuantMode, backend: str) -> jnp.ndarray:
-    """x2 (m, k) float x packed (n, kw) planes -> (m, n) float."""
-    k = x2.shape[-1]
-    xa = ops.quantize_activations(x2.astype(jnp.float32), mode)
-    acc = ops.packed_matmul(xa, packed, mode, k, backend=backend)
-    y = acc.astype(jnp.float32) * xa["scale"] * packed["scale"][None, :]
-    return y
+    """x2 (m, k) float x packed (n, kw) planes -> (m, n) float.
+
+    Single fused dispatch (ops.fused_qmm): activation quantization, the
+    popcount core and the scale (+ bias, if the layer has one) epilogue
+    run in one jitted computation — no int32 (m, n) round-trip to HBM
+    between the matmul and the rescale.
+    """
+    return ops.fused_qmm(x2.astype(jnp.float32), packed, mode,
+                         packed.get("b"), backend=backend)

@@ -144,7 +144,9 @@ _ACTIVE: contextvars.ContextVar[Optional[_Active]] = \
 def use_mesh(mesh: Mesh, rules: Rules = TRAIN_RULES):
     tok = _ACTIVE.set(_Active(mesh, rules))
     try:
-        with jax.set_mesh(mesh):
+        # jax.set_mesh landed after 0.4.x; on older jax the Mesh context
+        # manager provides the same ambient-mesh behaviour for jit/pjit.
+        with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
             yield
     finally:
         _ACTIVE.reset(tok)

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Iterable, Optional
+from typing import Dict, Optional
 
 __all__ = ["HW", "RooflineTerms", "collective_bytes", "model_flops",
            "roofline_from_artifact", "DTYPE_BYTES"]

@@ -114,14 +114,16 @@ class Instr:
 
 
 def _parse_operands(rest: str) -> List[str]:
-    # operands are up to the matching close paren at depth 0
+    # operands are up to the matching close paren at depth 0; commas
+    # also appear inside shapes ('f32[4,32]{1,0}') and tuple types, so
+    # depth counts every bracket kind, not just parens
     out, depth, cur = [], 0, []
     for ch in rest:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
             cur.append(ch)
-        elif ch == ")":
-            if depth == 0:
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
                 break
             depth -= 1
             cur.append(ch)
@@ -134,7 +136,11 @@ def _parse_operands(rest: str) -> List[str]:
         out.append("".join(cur).strip())
     names = []
     for o in out:
-        m = re.match(r"%([\w.\-]+)", o)
+        # Compiled (post-optimization) HLO writes typed operands —
+        # 'f32[4,32]{1,0} %get-tuple-element.3' — while pre-optimization
+        # text writes bare '%name': the reference is always the trailing
+        # token, so anchor there first.
+        m = re.search(r"%([\w.\-]+)\s*$", o) or re.match(r"%([\w.\-]+)", o)
         names.append(m.group(1) if m else o)
     return names
 

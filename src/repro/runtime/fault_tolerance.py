@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import defaultdict, deque
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List
 
 __all__ = ["WatchdogConfig", "StragglerReport", "Watchdog"]
 

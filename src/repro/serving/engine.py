@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +48,12 @@ class ServeConfig:
     prefill_bucket: int = 128     # prompts padded up to a multiple of this
     eos_id: int = -1              # -1: only stop at max_new_tokens
     sampler: SamplerConfig = dataclasses.field(default_factory=SamplerConfig)
+    # Pack low-bit projection weights into bit planes at engine build time
+    # (the paper's offline Algorithm 2).  Every projection then runs the
+    # fused quantize/popcount/scale pipeline (ops.fused_qmm) and decode
+    # streams 1/8 (ternary) or 1/16 (binary) of the bf16 weight bytes.
+    # Only meaningful when the model config's quant policy is low-bit.
+    pack_params: bool = False
 
 
 @dataclasses.dataclass
@@ -132,6 +138,9 @@ class Engine:
 
     def __init__(self, params, cfg: ModelConfig, layout: ShardLayout,
                  scfg: ServeConfig, seed: int = 0):
+        if scfg.pack_params:
+            from repro.models.packing import pack_lm_params
+            params = pack_lm_params(params, cfg)
         self.params, self.cfg, self.layout, self.scfg = params, cfg, layout, scfg
         b, L = scfg.num_slots, scfg.max_len
         self.caches = init_caches(cfg, layout, b, L)

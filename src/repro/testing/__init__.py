@@ -1,0 +1,8 @@
+"""Test-support utilities (deterministic hypothesis fallback, CI profiles)."""
+
+from repro.testing.hypothesis_fallback import (
+    HYPOTHESIS_AVAILABLE,
+    install_hypothesis_fallback,
+)
+
+__all__ = ["HYPOTHESIS_AVAILABLE", "install_hypothesis_fallback"]

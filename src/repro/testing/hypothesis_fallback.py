@@ -1,0 +1,207 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The test suite uses hypothesis property tests (``@given`` over integer
+shape/seed strategies).  Some execution environments — hermetic
+containers without the dev requirements — cannot ``pip install``
+anything, which used to break *collection* of five test modules with
+``ModuleNotFoundError``.  This module provides a tiny, deterministic
+stand-in that is registered in ``sys.modules`` as ``hypothesis`` /
+``hypothesis.strategies`` so those modules import and run.
+
+Scope and honesty
+-----------------
+This is NOT hypothesis: no shrinking, no example database, no stateful
+strategies.  It drives each ``@given`` test with a fixed-seed pseudo-
+random sweep (plus the boundary values of integer strategies, which is
+where packing/padding bugs live), so runs are reproducible and CI-fast.
+Real hypothesis — installed via ``requirements-dev.txt`` — is always
+preferred: the fallback only engages when the import fails.
+
+Env knobs:
+
+* ``REPRO_FALLBACK_MAX_EXAMPLES`` — per-test example cap (default 8).
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+try:
+    import hypothesis as _real_hypothesis  # noqa: F401
+    HYPOTHESIS_AVAILABLE = True
+except ImportError:
+    HYPOTHESIS_AVAILABLE = False
+
+_DEFAULT_MAX_EXAMPLES = int(os.environ.get("REPRO_FALLBACK_MAX_EXAMPLES", "8"))
+
+
+class Strategy:
+    """A draw function plus the boundary examples tried first."""
+
+    def __init__(self, draw: Callable[[random.Random], Any],
+                 boundary: Sequence[Any] = ()):
+        self._draw = draw
+        self._boundary = list(boundary)
+
+    def draw(self, rnd: random.Random) -> Any:
+        return self._draw(rnd)
+
+    def boundary(self) -> list:
+        return list(self._boundary)
+
+    def map(self, f: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda r: f(self._draw(r)),
+                        [f(b) for b in self._boundary])
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda r: r.randint(min_value, max_value),
+                    [min_value, max_value])
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda r: bool(r.getrandbits(1)), [False, True])
+
+
+def sampled_from(elements) -> Strategy:
+    elems = list(elements)
+    return Strategy(lambda r: elems[r.randrange(len(elems))],
+                    elems[:1] + elems[-1:])
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda r: value, [value])
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> Strategy:
+    return Strategy(lambda r: r.uniform(min_value, max_value),
+                    [min_value, max_value])
+
+
+def one_of(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda r: strategies[r.randrange(len(strategies))].draw(r),
+                    [b for s in strategies for b in s.boundary()[:1]])
+
+
+def tuples(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda r: tuple(s.draw(r) for s in strategies))
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 8) -> Strategy:
+    def draw(r):
+        return [elements.draw(r)
+                for _ in range(r.randint(min_size, max_size))]
+    return Strategy(draw)
+
+
+class settings:
+    """Decorator + (no-op) profile registry mirroring hypothesis.settings."""
+
+    _profiles: dict = {"default": {"max_examples": _DEFAULT_MAX_EXAMPLES}}
+    _current: dict = dict(_profiles["default"])
+
+    def __init__(self, max_examples: int | None = None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._fallback_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kw):
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._current = {**cls._profiles["default"],
+                        **cls._profiles.get(name, {})}
+
+
+def _resolve_max_examples(*fns) -> int:
+    for fn in fns:
+        n = getattr(fn, "_fallback_max_examples", None)
+        if n is not None:
+            # settings() in the tests asks for 15-40; the fallback exists
+            # to keep hermetic runs fast, so the env cap always applies.
+            return min(n, settings._current["max_examples"])
+    return settings._current["max_examples"]
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    """Deterministic ``@given``: boundary examples first, then a fixed-seed
+    random sweep.  The wrapper exposes a zero-argument signature so pytest
+    does not mistake strategy parameters for fixtures."""
+
+    def decorate(fn):
+        def wrapper():
+            max_ex = _resolve_max_examples(wrapper, fn)
+            rnd = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            ran = 0
+            # boundary sweep: low/high of each positional strategy, rest drawn
+            n_bound = max(
+                [len(s.boundary()) for s in arg_strategies] +
+                [len(s.boundary()) for s in kw_strategies.values()] + [0])
+            for bi in range(min(n_bound, max_ex)):
+                args = [s.boundary()[bi] if bi < len(s.boundary())
+                        else s.draw(rnd) for s in arg_strategies]
+                kws = {name: (s.boundary()[bi] if bi < len(s.boundary())
+                              else s.draw(rnd))
+                       for name, s in kw_strategies.items()}
+                fn(*args, **kws)
+                ran += 1
+            while ran < max_ex:
+                fn(*[s.draw(rnd) for s in arg_strategies],
+                   **{name: s.draw(rnd) for name, s in kw_strategies.items()})
+                ran += 1
+
+        wrapper.__name__ = getattr(fn, "__name__", "given_test")
+        wrapper.__qualname__ = getattr(fn, "__qualname__", wrapper.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return decorate
+
+
+class HealthCheck:
+    all_items = ()
+
+    @classmethod
+    def all(cls):
+        return cls.all_items
+
+
+def install_hypothesis_fallback() -> bool:
+    """Register the stub as ``hypothesis`` if the real one is missing.
+
+    Returns True when the fallback was installed, False when real
+    hypothesis is importable (nothing is touched in that case).
+    """
+    if HYPOTHESIS_AVAILABLE:
+        return False
+    if "hypothesis" in sys.modules:       # already stubbed
+        return False
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = HealthCheck
+    mod.__is_repro_fallback__ = True
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "sampled_from", "just", "floats",
+                 "one_of", "tuples", "lists"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+    return True

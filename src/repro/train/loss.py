@@ -14,7 +14,7 @@ the lse.  Optional z-loss (PaLM) regularizes the partition function.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

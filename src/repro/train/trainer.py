@@ -17,10 +17,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import Checkpointer, CheckpointConfig
 from repro.data import DataState, SyntheticLM, make_pipeline

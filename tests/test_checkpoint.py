@@ -1,7 +1,6 @@
 """Checkpointing: atomic roundtrip, async, retention, elastic restore."""
 
 import os
-import time
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,180 @@
+"""Fused packed-inference pipeline vs the unfused three-pass oracle.
+
+The fused path (ops.fused_qmm and the ``*_fused`` kernels) must be
+numerically equivalent to running quantize_activations + packed_matmul +
+the float scale epilogue as separate passes — for every low-bit mode, on
+both the pallas (interpret) and xla backends, including shapes where k
+is not a word multiple and m/n are not block multiples, and across
+multi-step k grids (the epilogue fires at pid_k == num_k - 1 only).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conv, encoding as enc
+from repro.core.qlinear import QuantLinear
+from repro.kernels import ops
+from repro.kernels.ops import QuantMode
+from repro.kernels.bnn_matmul import bnn_matmul_fused_pallas
+from repro.kernels.tnn_matmul import tnn_matmul_fused_pallas
+from repro.kernels.tbn_matmul import tbn_matmul_fused_pallas
+
+MODES = [QuantMode.BNN, QuantMode.TNN, QuantMode.TBN]
+BACKENDS = ["pallas", "xla", "dense"]
+# k not a multiple of 32; m/n away from block multiples; plus an aligned
+# control and a shape crossing the default pallas block boundary.
+SHAPES = [
+    (5, 96, 7),
+    (16, 33, 8),      # k == 33: one full word + 1 trailing bit
+    (37, 129, 24),
+    (64, 256, 32),    # aligned control
+    (130, 257, 129),  # crosses 128-block boundaries in m and n
+]
+
+
+def _unfused_oracle(x, wb, mode, bias=None):
+    xa = ops.quantize_activations(x, mode)
+    acc = ops.packed_matmul(xa, wb, mode, x.shape[-1], backend="xla")
+    y = acc.astype(jnp.float32) * xa["scale"] * wb["scale"][None, :]
+    if bias is not None:
+        y = y + bias[None, :]
+    return y
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_matches_unfused(mode, backend, shape, rng):
+    m, k, n = shape
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    wb = ops.pack_weights(jax.random.normal(k2, (k, n), jnp.float32), mode)
+    want = np.asarray(_unfused_oracle(x, wb, mode))
+    got = np.asarray(ops.fused_qmm(x, wb, mode, backend=backend))
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6,
+                               err_msg=f"{mode} {backend} {shape}")
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+def test_fused_bias_epilogue(mode, backend, rng):
+    m, k, n = 9, 70, 11
+    k1, k2, k3 = jax.random.split(rng, 3)
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    wb = ops.pack_weights(jax.random.normal(k2, (k, n), jnp.float32), mode)
+    bias = jax.random.normal(k3, (n,), jnp.float32)
+    want = np.asarray(_unfused_oracle(x, wb, mode, bias))
+    got = np.asarray(ops.fused_qmm(x, wb, mode, bias, backend=backend))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 2, 1), (16, 8, 4, 2)])
+@pytest.mark.parametrize("mode", MODES)
+def test_fused_pallas_multi_kstep_epilogue(blocks, mode, rng):
+    """The in-kernel epilogue must fire exactly once, after the int
+    accumulation has seen every k block — exercised with tiny k blocks so
+    num_k > 1."""
+    bm, bn, bkw, wc = blocks
+    m, k, n = 20, 320, 12     # kw = 10 words -> num_k in {5, 3}
+    k1, k2 = jax.random.split(rng)
+    a = (enc.random_binary(k1, (m, k)) if mode == QuantMode.BNN
+         else enc.random_ternary(k1, (m, k)))
+    b = (enc.random_ternary(k2, (k, n)) if mode == QuantMode.TNN
+         else enc.random_binary(k2, (k, n)))
+    row = jnp.full((m, 1), 0.5, jnp.float32)
+    col = jnp.linspace(0.1, 1.0, n, dtype=jnp.float32).reshape(1, n)
+    want = np.asarray(jnp.dot(a, b), np.float32) * 0.5 * np.asarray(col)
+
+    kw = dict(block_m=bm, block_n=bn, block_kw=bkw, word_chunk=wc,
+              interpret=True)
+    if mode == QuantMode.BNN:
+        out = bnn_matmul_fused_pallas(enc.pack_binary(a), enc.pack_binary(b.T),
+                                      k, row, col, **kw)
+    elif mode == QuantMode.TNN:
+        ap, am = enc.pack_ternary(a)
+        bp, bm_ = enc.pack_ternary(b.T)
+        out = tnn_matmul_fused_pallas(ap, am, bp, bm_, k, row, col, **kw)
+    else:
+        ap, am = enc.pack_ternary(a)
+        out = tbn_matmul_fused_pallas(ap, am, enc.pack_binary(b.T), k,
+                                      row, col, **kw)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_qlinear_apply_packed_rides_fused(mode, rng):
+    """apply_packed (now one fused dispatch) must keep matching the QAT
+    forward bit-for-bit, bias included."""
+    layer = QuantLinear(96, 24, mode=mode, use_bias=True, backend="xla")
+    params = layer.init(rng)
+    params["b"] = jnp.linspace(-1, 1, 24, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 7, 96))
+    y_qat = layer.apply(params, x)
+    y_packed = layer.apply_packed(layer.pack(params), x)
+    np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_qat),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+def test_conv2d_packed_matches_quantized(mode, backend, rng):
+    """Deployment conv (packed filters + fused GeMM) == QAT conv forward."""
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (2, 6, 5, 9))       # cin = 9: odd depth
+    f = jax.random.normal(k2, (3, 3, 9, 4))
+    want = conv.conv2d_quantized(x, f, mode, backend="xla")
+    packed = conv.pack_conv_filters(f, mode)
+    got = conv.conv2d_packed(x, packed, mode, backend=backend)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_qmm_rejects_non_lowbit(rng):
+    x = jax.random.normal(rng, (4, 8))
+    with pytest.raises(ValueError):
+        ops.fused_qmm(x, {"w": x}, QuantMode.F32)
+
+
+def test_engine_pack_params_serves_fused(rng):
+    """ServeConfig(pack_params=True): the engine packs low-bit projection
+    weights at build time (Algorithm 2) and decodes greedily to the same
+    tokens as the on-the-fly-quantized engine."""
+    import numpy as onp
+
+    from repro.configs import get_smoke
+    from repro.models import model as model_mod
+    from repro.models.common import ShardLayout
+    from repro.serving import Engine, Request, SamplerConfig, ServeConfig
+
+    layout = ShardLayout(tp=1)
+    cfg = get_smoke("tinyllama-1.1b").with_(dtype=jnp.float32,
+                                            quant_policy="tnn")
+    params = model_mod.init_lm(rng, cfg, layout)
+    base = dict(num_slots=2, max_len=32, prefill_bucket=8,
+                sampler=SamplerConfig(temperature=0.0))
+    prompts = [onp.asarray([3, 1, 4]), onp.asarray([1, 5, 9, 2])]
+
+    def decode(scfg):
+        eng = Engine(params, cfg, layout, scfg, seed=0)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+        return {uid: r.tokens for uid, r in eng.run().items()}
+
+    unpacked = decode(ServeConfig(**base))
+    packed = decode(ServeConfig(**base, pack_params=True))
+    assert packed == unpacked
+
+
+def test_fused_single_dispatch_contains_scale():
+    """The fused jaxpr must carry the dequantization multiply — i.e. the
+    scale epilogue really is part of the one traced computation."""
+    x = jnp.ones((4, 64), jnp.float32)
+    wb = ops.pack_weights(jnp.ones((64, 8), jnp.float32), QuantMode.BNN)
+    jaxpr = jax.make_jaxpr(
+        lambda x: ops.fused_qmm(x, wb, QuantMode.BNN, backend="xla"))(x)
+    txt = str(jaxpr)
+    assert "population_count" in txt and "mul" in txt

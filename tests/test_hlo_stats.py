@@ -3,7 +3,6 @@ against a hand-written module AND a real jax lowering."""
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.roofline.analysis import collective_bytes
 from repro.roofline.hlo_stats import analyze_module, parse_computations

@@ -6,7 +6,6 @@ deliberately-misaligned shapes (padding correctness), and across Pallas
 block-shape variations (accumulation across the k grid).
 """
 
-import itertools
 
 import jax
 import jax.numpy as jnp

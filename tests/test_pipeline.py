@@ -1,7 +1,6 @@
 """Data pipeline: determinism, exact resume, host sharding, learnability."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.data import DataState, SyntheticLM, make_pipeline

@@ -1,6 +1,5 @@
 """Fault tolerance: watchdog (fake clock) + elastic restart planning."""
 
-import pytest
 
 from repro.runtime import Watchdog, WatchdogConfig, plan_restart
 

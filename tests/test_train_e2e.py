@@ -2,7 +2,6 @@
 
 import math
 
-import jax
 import numpy as np
 import pytest
 
@@ -10,7 +9,6 @@ from repro.configs import get_smoke
 from repro.data import SyntheticLM
 from repro.models.common import ShardLayout
 from repro.optim.adamw import AdamWConfig
-from repro.parallel import sharding
 from repro.train import Trainer, TrainerConfig, TrainStepConfig
 
 pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
