@@ -1,20 +1,28 @@
 """GeMM-based convolution benchmark (the paper's application layer).
 
 Times im2col + low-bit GeMM for representative small-CNN conv layers at
-each quantization mode, and checks the eq. (5) channel guard.
+each quantization mode — the QAT forward (on-the-fly quantization) AND
+the deployment path (filters packed once into a QTensor, each conv one
+fused ``ops.qmm`` dispatch via ``conv2d_packed``) — and checks the
+eq. (5) channel guard.  Low-bit modes are enumerated from the kernel
+registry.
 
-    PYTHONPATH=src python -m benchmarks.bench_conv [--quick]
+    PYTHONPATH=src python -m benchmarks.bench_conv [--quick] \
+        [--json bench_conv.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import Dict
 
 import jax
 import numpy as np
 
-from repro.core.conv import conv2d_quantized
+from repro.core.conv import conv2d_packed, conv2d_quantized, pack_conv_filters
+from repro.kernels import registry
 from repro.kernels.ops import QuantMode
 
 LAYERS = [   # (img, c_in, c_out, kernel)
@@ -22,7 +30,7 @@ LAYERS = [   # (img, c_in, c_out, kernel)
     (16, 64, 128, 3),
     (8, 128, 256, 3),
 ]
-MODES = ["bf16", "int8", "tnn", "tbn", "bnn"]
+MODES = ["bf16", "int8"] + [m.value for m in registry.modes()]
 
 
 def _time(call, reps=5):
@@ -35,31 +43,62 @@ def _time(call, reps=5):
     return float(np.median(ts))
 
 
-def run(quick=False):
+def run(quick=False) -> Dict[str, Dict]:
     key = jax.random.PRNGKey(0)
     layers = LAYERS[:1] if quick else LAYERS
-    print("\nGeMM-based conv (im2col + low-bit GeMM), batch 4:")
-    print(f"{'layer':>20s}" + "".join(f"{m:>9s}" for m in MODES))
+    reps = 3 if quick else 5
+    results: Dict[str, Dict] = {}
+    print("\nGeMM-based conv (im2col + low-bit GeMM), batch 4 — QAT "
+          "forward and packed deployment (QTensor + fused qmm):")
+    print(f"{'layer':>20s}" + "".join(f"{m:>9s}" for m in MODES)
+          + f"{'packed(best)':>14s}")
     for img, ci, co, k in layers:
         k1, k2 = jax.random.split(jax.random.fold_in(key, img))
         x = jax.random.normal(k1, (4, img, img, ci))
         w = jax.random.normal(k2, (k, k, ci, co)) * (k * k * ci) ** -0.5
-        row = []
+        name = f"{img}x{img}x{ci}->{co}"
+        row, layer_res = [], {}
         for m in MODES:
             mode = QuantMode(m)
             f = jax.jit(lambda x, w, mode=mode: conv2d_quantized(
                 x, w, mode=mode))
-            row.append(_time(lambda: f(x, w), reps=3 if quick else 5))
+            t = _time(lambda: f(x, w), reps=reps)
+            row.append(t)
+            layer_res[m] = {"qat_s": t}
+        # deployment path: pack once, fused GeMM per call
+        best_packed = None
+        for m in MODES:
+            mode = QuantMode(m)
+            if not mode.is_lowbit:
+                continue
+            packed = pack_conv_filters(w, mode)
+            # jit the whole deployment call (im2col + fused qmm) so the
+            # comparison with the jitted QAT column is apples-to-apples
+            fp = jax.jit(lambda x, p=packed: conv2d_packed(x, p))
+            t = _time(lambda: fp(x), reps=reps)
+            layer_res[m]["packed_s"] = t
+            best_packed = t if best_packed is None else min(best_packed, t)
         base = row[0]
-        print(f"{f'{img}x{img}x{ci}->{co}':>20s}"
-              + "".join(f"{base/t:8.2f}x" for t in row))
-    print("(numbers are speedups vs bf16 on this container CPU via XLA)")
+        results[name] = layer_res
+        print(f"{name:>20s}"
+              + "".join(f"{base/t:8.2f}x" for t in row)
+              + f"{base/best_packed:12.2f}x")
+    print("(numbers are speedups vs bf16 on this container CPU via XLA; "
+          "'packed(best)' is the fastest conv2d_packed low-bit mode)")
+    return results
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--json", type=str, default=None,
+                    help="write per-layer timings to this JSON file")
+    args = ap.parse_args()
+    results = run(quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -15,8 +15,10 @@ ways for every low-bit mode:
 
 * unfused — three separate jitted dispatches (quantize_activations,
   packed_matmul, scale broadcast), each round-tripping through HBM;
-* fused   — ONE jitted ``ops.fused_qmm`` call (in-kernel/in-trace scale
-  epilogue).
+* fused   — ONE jitted ``ops.qmm`` call on the packed QTensor
+  (in-kernel/in-trace scale epilogue).
+
+Modes and backends are enumerated from ``repro.kernels.registry``.
 
     PYTHONPATH=src python -m benchmarks.bench_matmul [--quick] \
         [--json out.json] [--backend xla]
@@ -36,11 +38,14 @@ import numpy as np
 
 from repro.configs.paper_cnn import GEMM_GRID
 from repro.core import encoding
-from repro.kernels import ops
+from repro.kernels import ops, registry
 from repro.kernels.ops import QuantMode
 
-ALGOS = ["f32", "u8", "u4", "tnn", "tbn", "bnn"]
-LOWBIT = ["tnn", "tbn", "bnn"]
+# Low-bit algos and backends come from the kernel registry — a newly
+# registered kernel shows up in the tables without touching this file.
+LOWBIT = [m.value for m in registry.modes()]
+BACKENDS = registry.backends()
+ALGOS = ["f32", "u8", "u4"] + LOWBIT
 
 
 def _build(algo: str, h: int, w: int, d: int, key):
@@ -76,27 +81,26 @@ def _build(algo: str, h: int, w: int, d: int, key):
 def _build_fused_pair(algo: str, h: int, w: int, d: int, key, backend: str):
     """(unfused_call, fused_call) for one low-bit float projection.
 
-    Both consume the same float activations and offline-packed weights;
+    Both consume the same float activations and offline-packed QTensor;
     unfused runs the seed repo's three-pass pipeline, fused runs the
-    single fused_qmm dispatch.
+    single ops.qmm dispatch.
     """
     mode = QuantMode(algo)
     k1, k2 = jax.random.split(key)
     x = jax.random.normal(k1, (h, d), jnp.float32)
-    wb = ops.pack_weights(jax.random.normal(k2, (d, w), jnp.float32), mode)
+    qt = ops.pack_weights(jax.random.normal(k2, (d, w), jnp.float32), mode)
 
     quant = jax.jit(lambda x: ops.quantize_activations(x, mode))
-    core = jax.jit(lambda xa: ops.packed_matmul(xa, wb, mode, d,
-                                                backend=backend))
+    core = jax.jit(lambda xa: ops.packed_matmul(xa, qt, backend=backend))
     scale = jax.jit(lambda acc, s: acc.astype(jnp.float32) * s
-                    * wb["scale"][None, :])
+                    * qt.scale[None, :])
 
     def unfused():
         xa = quant(x)
         acc = core(xa)
         return scale(acc, xa["scale"])
 
-    fused = jax.jit(lambda x: ops.fused_qmm(x, wb, mode, backend=backend))
+    fused = jax.jit(lambda x: ops.qmm(x, qt, backend=backend))
     return unfused, (lambda: fused(x))
 
 
@@ -150,15 +154,18 @@ def run(quick: bool = False) -> Dict[str, float]:
 
 
 def run_fused(quick: bool = False, backend: str = "xla") -> Dict[str, Dict]:
-    """Fused vs unfused full-projection timings for every low-bit mode."""
+    """Fused vs unfused full-projection timings for every registered
+    fused kernel on ``backend`` (enumerated, not hard-coded)."""
     grid = _grid(quick)
     key = jax.random.PRNGKey(7)
     out: Dict[str, Dict] = {}
-    print(f"\nFused pipeline (ops.fused_qmm, {backend} backend) vs the "
+    specs = registry.available(backend=backend, fused=True)
+    print(f"\nFused pipeline (ops.qmm, {backend} backend) vs the "
           f"three-pass unfused oracle, mean over {len(grid)} shapes:")
-    print(f"{'mode':>6s} {'unfused(us)':>12s} {'fused(us)':>10s} "
-          f"{'speedup':>8s}")
-    for algo in LOWBIT:
+    print(f"{'mode':>6s} {'epilogue':>12s} {'unfused(us)':>12s} "
+          f"{'fused(us)':>10s} {'speedup':>8s}")
+    for spec in specs:
+        algo = spec.mode.value
         tu, tf = [], []
         for h, w, d in grid:
             unfused, fused = _build_fused_pair(algo, h, w, d, key, backend)
@@ -168,8 +175,10 @@ def run_fused(quick: bool = False, backend: str = "xla") -> Dict[str, Dict]:
         mu, mf = float(np.mean(tu)), float(np.mean(tf))
         out[algo] = {"unfused_s": mu, "fused_s": mf,
                      "speedup": mu / mf, "backend": backend,
+                     "epilogue": spec.epilogue, "compute": spec.compute,
                      "shapes": len(grid)}
-        print(f"{algo:>6s} {mu*1e6:12.0f} {mf*1e6:10.0f} {mu/mf:8.2f}x")
+        print(f"{algo:>6s} {spec.epilogue:>12s} {mu*1e6:12.0f} "
+              f"{mf*1e6:10.0f} {mu/mf:8.2f}x")
     return out
 
 
@@ -180,8 +189,9 @@ def main():
                     help="write results (table3 ratios + fused timings) "
                          "to this JSON file")
     ap.add_argument("--backend", type=str, default="xla",
-                    choices=["xla", "pallas", "dense"],
-                    help="backend for the fused-vs-unfused comparison")
+                    choices=BACKENDS,
+                    help="backend for the fused-vs-unfused comparison "
+                         "(choices enumerated from the kernel registry)")
     ap.add_argument("--skip-table3", action="store_true",
                     help="only run the fused-vs-unfused comparison")
     args = ap.parse_args()

@@ -87,20 +87,21 @@ def _trace(algo: str):
 def _trace_pipeline(algo: str, fused: bool):
     """Jaxpr of the full float-in/float-out projection for one low-bit
     mode: quantize -> pack -> popcount GeMM -> scale.  ``fused`` traces
-    the single fused_qmm call; unfused traces the seed three-pass chain."""
+    the single qmm call on the packed QTensor; unfused traces the seed
+    three-pass chain."""
     mode = QuantMode(algo)
     key = jax.random.PRNGKey(0)
     k1, k2 = jax.random.split(key)
     x = jax.random.normal(k1, (M, K), jnp.float32)
-    wb = ops.pack_weights(jax.random.normal(k2, (K, N), jnp.float32), mode)
+    qt = ops.pack_weights(jax.random.normal(k2, (K, N), jnp.float32), mode)
     if fused:
         return jax.make_jaxpr(
-            lambda x: ops.fused_qmm(x, wb, mode, backend="xla"))(x)
+            lambda x: ops.qmm(x, qt, backend="xla"))(x)
 
     def unfused(x):
         xa = ops.quantize_activations(x, mode)
-        acc = ops.packed_matmul(xa, wb, mode, K, backend="xla")
-        return acc.astype(jnp.float32) * xa["scale"] * wb["scale"][None, :]
+        acc = ops.packed_matmul(xa, qt, backend="xla")
+        return acc.astype(jnp.float32) * xa["scale"] * qt.scale[None, :]
 
     return jax.make_jaxpr(unfused)(x)
 
@@ -134,7 +135,7 @@ def run():
           "the *ordering* comparable, which is the paper's point.")
 
     print("\nFused pipeline (quantize->pack->matmul->scale) primitive "
-          "counts, fused_qmm vs the three-pass chain:")
+          "counts, ops.qmm vs the three-pass chain:")
     print(f"{'mode':>6s} {'COM':>6s} {'MOV':>6s} {'OTH':>6s}   "
           f"{'COM(unf)':>8s} {'MOV(unf)':>8s} {'OTH(unf)':>8s}")
     for algo in ["tnn", "tbn", "bnn"]:

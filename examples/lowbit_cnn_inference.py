@@ -4,11 +4,12 @@
 
 Runs the PAPER_CNN config (conv stack with per-layer TNN/TBN/BNN GeMMs,
 first layer fp per standard QNN practice) over a batch of random images
-through the DEPLOYMENT path — filters bit-plane packed once offline,
-every conv a single fused quantize/popcount/scale GeMM dispatch
-(conv2d_packed) — checks the eq. (5) channel-depth guard layer by
-layer, verifies against the QAT forward, and reports the weight-bytes
-saving of the packed representation.
+through the DEPLOYMENT path — filters bit-plane packed once offline into
+QTensors (mode + im2col geometry ride inside the container), every conv
+a single fused quantize/popcount/scale GeMM dispatch (conv2d_packed) —
+checks the eq. (5) channel-depth guard layer by layer, verifies against
+the QAT forward, and reports the weight-bytes saving of the packed
+representation.
 """
 
 import jax
@@ -51,7 +52,9 @@ for i, spec in enumerate(cfg.convs):
     total_fp_bytes += w.size * 4
     c_in = spec.c_out
 
-# offline packing (Algorithm 2), then the fused deployment forward
+# offline packing (Algorithm 2) into QTensors, then the fused forward —
+# note conv2d_packed needs no mode/geometry arguments: both are aux data
+# of the container
 packed_convs = [pack_conv_filters(w, QuantMode(spec.mode))
                 if QuantMode(spec.mode).is_lowbit else None
                 for spec, w in zip(cfg.convs, weights)]
@@ -60,7 +63,7 @@ h = h_qat = x
 for spec, w, packed in zip(cfg.convs, weights, packed_convs):
     mode = QuantMode(spec.mode)
     if packed is not None:
-        h = conv2d_packed(h, packed, mode, stride=spec.stride)
+        h = conv2d_packed(h, packed, stride=spec.stride)
     else:
         h = conv2d_quantized(h, w, mode=mode, stride=spec.stride)
     h_qat = conv2d_quantized(h_qat, w, mode=mode, stride=spec.stride)

@@ -3,9 +3,9 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Shows the three multiplications of the paper (TNN / TBN / BNN), the
-packed-weight deployment path (Algorithm 2: pack B once, offline), the
-overflow guard of eq. (4), and a quantized linear layer dropped into a
-tiny JAX model.
+typed packed-weight deployment path (Algorithm 2: pack B once, offline,
+into a QTensor; serve with one fused ``ops.qmm`` call), the kernel
+registry, and the overflow guard of eq. (4).
 """
 
 import jax
@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core import encoding, quantize
 from repro.core.qlinear import QuantLinear
-from repro.kernels import ops
+from repro.kernels import QTensor, ops, registry
 from repro.kernels.ops import QuantMode
 
 key = jax.random.PRNGKey(0)
@@ -34,17 +34,31 @@ y_tbn = ops.lowbit_matmul(a, b, QuantMode.TBN, backend="xla")
 np.testing.assert_allclose(np.asarray(y_tbn), np.asarray(y_ref), atol=0)
 print("TBN  integer core == float reference (exact)")
 
-# --- 3. packed weights: pack once offline, 16x smaller than bf16 --------
+# --- 3. packed weights: pack once offline into a QTensor, 16x smaller ---
 layer = QuantLinear(256, 64, mode=QuantMode.BNN)
 params = layer.init(k3)
 packed = layer.pack(params)                      # paper Algorithm 2 PackedB
-nbytes = sum(np.asarray(v).nbytes for v in jax.tree.leaves(packed))
-print(f"BNN  packed weights: {nbytes} bytes "
+print(f"BNN  packed container: {packed}")        # typed, not a loose dict
+print(f"BNN  packed weights: {packed.nbytes()} bytes "
       f"(vs {np.asarray(params['w']).nbytes} fp32)")
 y = layer.apply_packed(packed, jax.random.normal(k1, (8, 256)))
 print("BNN  packed apply:", y.shape)
 
-# --- 4. the paper's overflow guard, eq. (4)/(5) --------------------------
+# the same container + ops.qmm IS the whole serving API — mode, depth
+# and scale ride inside the QTensor, only the backend is a call-site knob
+qt = QTensor.from_dense(w, QuantMode.TNN)
+y_direct = ops.qmm(x, qt)                        # one fused dispatch
+np.testing.assert_allclose(np.asarray(y_direct), np.asarray(y_tnn),
+                           rtol=1e-5, atol=1e-5)
+print("TNN  ops.qmm(x, QTensor) == QAT forward")
+
+# --- 4. the kernel registry: what can run, enumerated --------------------
+print("registered kernels (mode x backend x fused):")
+for spec in registry.available(fused=True):
+    print(f"  {spec.mode.value:4s} {spec.backend:7s} "
+          f"epilogue={spec.epilogue:10s} compute={spec.compute}")
+
+# --- 5. the paper's overflow guard, eq. (4)/(5) --------------------------
 print("k_max for 16-bit accumulation of ternary products:",
       quantize.k_max(1, 16, signed_unit=True))
 print("max conv C_in for a 3x3 kernel:",

@@ -25,6 +25,13 @@ Production posture:
   load (runtime/elastic.py chooses the new mesh).
 * retention: ``keep`` most recent checkpoints are kept, older are
   deleted only after the new save commits.
+
+Custom pytree nodes round-trip by structure: a packed parameter tree
+containing :class:`~repro.kernels.qtensor.QTensor` leaves saves its
+payload/scale/bias arrays under readable keys ("wq/payload/bits") and
+restores through a target tree (e.g. ``jax.eval_shape`` of a freshly
+packed model) that supplies the static aux — mode, logical shape,
+geometry — exactly like any other treedef-carried metadata.
 """
 
 from __future__ import annotations
@@ -50,6 +57,11 @@ def _path_str(path) -> str:
             parts.append(str(p.key))
         elif hasattr(p, "idx"):
             parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            # GetAttrKey — custom pytree nodes with named fields (QTensor:
+            # .payload/.scale/.bias/.zero), keeps leaf keys readable and
+            # stable ("wq/payload/bits", not "wq/_payload/bits").
+            parts.append(str(p.name))
         else:
             parts.append(re.sub(r"[^\w.-]", "_", str(p)))
     return "/".join(parts)
@@ -150,11 +162,18 @@ class Checkpointer:
                 with np.load(os.path.join(d, name)) as z:
                     data.update({k: z[k] for k in z.files})
 
+        # Older checkpoints named GetAttrKey segments with a leading dot
+        # ("w/.q"); current naming is dotless ("w/q").  Restore both.
+        legacy = {"/".join(seg.lstrip(".") for seg in k.split("/")): k
+                  for k in data if "/." in k}
+
         named, treedef = _flatten_with_paths(target_tree)
         shard_leaves = (jax.tree_util.tree_leaves(shardings)
                         if shardings is not None else [None] * len(named))
         out = []
         for (key, ref), shd in zip(named, shard_leaves):
+            if key not in data and key in legacy:
+                key = legacy[key]
             if key not in data:
                 raise KeyError(f"checkpoint {d} is missing leaf {key!r}")
             arr = data[key]

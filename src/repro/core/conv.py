@@ -12,13 +12,15 @@ Two regimes, mirroring core/qlinear.py:
   STE gradients; the low-bit forward itself rides the fused pipeline via
   ``ops.quantized_matmul``);
 * ``pack_conv_filters`` + ``conv2d_packed`` — deployment: filters are
-  bit-plane packed once, offline, and each conv is im2col + ONE fused
-  ``ops.fused_qmm`` call (quantize -> pack -> popcount GeMM -> scale).
+  bit-plane packed once, offline, into a :class:`QTensor` whose
+  ``geometry`` aux records (kh, kw, cin, cout); each conv is then
+  im2col + ONE fused ``ops.qmm`` call (quantize -> pack -> popcount
+  GeMM -> scale) with mode/depth/scale/bias coming from the container.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +28,7 @@ import jax.numpy as jnp
 from repro.core import quantize
 from repro.kernels import ops
 from repro.kernels.modes import DEFAULT_BACKEND, QuantMode
+from repro.kernels.qtensor import QTensor
 
 __all__ = ["im2col", "conv2d_quantized", "check_conv_depth",
            "pack_conv_filters", "conv2d_packed"]
@@ -100,35 +103,39 @@ def conv2d_quantized(x: jnp.ndarray, filters: jnp.ndarray,
 # Packed (deployment) conv: pack filters once, fused GeMM per call
 # ---------------------------------------------------------------------------
 
-def pack_conv_filters(filters: jnp.ndarray, mode: QuantMode) -> Dict[str, Any]:
+def pack_conv_filters(filters: jnp.ndarray, mode: QuantMode,
+                      bias: Optional[jnp.ndarray] = None) -> QTensor:
     """Offline filter packing (Algorithm 2's PackedB for conv layers).
 
-    ``filters`` (kh, kw, cin, cout) float -> bit-plane pytree + static
-    geometry needed to rebuild the im2col GeMM at apply time.
+    ``filters`` (kh, kw, cin, cout) float -> :class:`QTensor` whose
+    ``geometry`` aux carries the static shape needed to rebuild the
+    im2col GeMM at apply time (no per-call dict surgery).
     """
     if not mode.is_lowbit:
         raise ValueError(f"pack_conv_filters only handles low-bit modes, "
                          f"got {mode}")
     kh, kw, cin, cout = filters.shape
     w2 = filters.reshape(kh * kw * cin, cout).astype(jnp.float32)
-    packed = ops.pack_weights(w2, mode)
-    packed["geometry"] = (kh, kw, cin, cout)
-    return packed
+    return QTensor.from_dense(w2, mode, bias=bias,
+                              geometry=(kh, kw, cin, cout))
 
 
-def conv2d_packed(x: jnp.ndarray, packed: Dict[str, Any],
-                  mode: QuantMode = QuantMode.TNN, *,
+def conv2d_packed(x: jnp.ndarray, packed: QTensor, *,
                   stride: int = 1, padding: str = "SAME",
                   backend: str = DEFAULT_BACKEND,
-                  bias: jnp.ndarray | None = None,
                   paper_accum_i16: bool = False) -> jnp.ndarray:
     """Deployment conv: im2col + ONE fused quantize/pack/popcount/scale
-    GeMM (ops.fused_qmm).  ``packed`` comes from :func:`pack_conv_filters`.
+    GeMM (ops.qmm).  ``packed`` comes from :func:`pack_conv_filters`;
+    mode, depth, scale, bias and geometry all ride inside it — repeated
+    calls with the same QTensor hit the same jit cache entry (no
+    retrace, no container rebuild).
     """
-    kh, kw, cin, cout = packed["geometry"]
+    if packed.geometry is None:
+        raise ValueError("conv2d_packed needs a QTensor packed with "
+                         "pack_conv_filters (geometry aux missing)")
+    kh, kw, cin, cout = packed.geometry
     if paper_accum_i16:
         check_conv_depth(cin, kh, kw)
     a, (b, oh, ow) = im2col(x.astype(jnp.float32), kh, kw, stride, padding)
-    y = ops.fused_qmm(a, {k: v for k, v in packed.items() if k != "geometry"},
-                      mode, bias, backend=backend)
+    y = ops.qmm(a, packed, backend=backend)
     return y.reshape(b, oh, ow, cout).astype(x.dtype)

@@ -7,14 +7,15 @@ Two regimes, matching how low-bit networks are actually deployed:
   pipeline with straight-through gradients (ops.quantized_matmul).  This is
   the standard BNN/TNN/TBN training setup ([21],[25],[28]).
 
-* **Packed inference**: ``pack()`` converts master weights into the
-  bit-plane representation once, offline — the paper's Algorithm 2
-  PackedB.  ``apply_packed`` then runs the fused pipeline
-  (``ops.fused_qmm``): runtime activation quantization, the integer
-  popcount core and the scale/bias epilogue execute as a single jitted
-  call.  Packed weights are 16x (binary) / 8x (ternary)
-  smaller than bf16, which is the technique's headline win for
-  weight-streaming-bound decode on TPU.
+* **Packed inference**: ``pack()`` converts master weights into a
+  :class:`~repro.kernels.qtensor.QTensor` once, offline — the paper's
+  Algorithm 2 PackedB, with mode / depth / scale / bias riding inside
+  the container.  ``apply_packed`` is then a single ``ops.qmm`` call:
+  runtime activation quantization, the integer core and the scale/bias
+  epilogue execute as one jitted computation for EVERY mode (low-bit
+  popcount, u8/u4 affine, float passthrough).  Packed weights are 16x
+  (binary) / 8x (ternary) smaller than bf16, which is the technique's
+  headline win for weight-streaming-bound decode on TPU.
 
 The overflow guard of eq. (4)/(5) is enforced here: in int16-fidelity
 mode a reduction deeper than k_max is a configuration error.
@@ -31,6 +32,7 @@ import jax.numpy as jnp
 from repro.core import quantize
 from repro.kernels import ops
 from repro.kernels.modes import DEFAULT_BACKEND, QuantMode
+from repro.kernels.qtensor import QTensor
 
 __all__ = ["QuantLinear", "linear_init", "linear_apply"]
 
@@ -88,36 +90,19 @@ class QuantLinear:
 
     # -- packed inference ----------------------------------------------------
 
-    def pack(self, params: Dict[str, Any]) -> Dict[str, Any]:
-        packed = ops.pack_weights(params["w"].astype(jnp.float32), self.mode)
-        if self.use_bias:
-            packed["b"] = params["b"]
-        return packed
+    def pack(self, params: Dict[str, Any]) -> QTensor:
+        """Master weights -> QTensor (Algorithm 2; bias travels inside)."""
+        return QTensor.from_dense(
+            params["w"].astype(jnp.float32), self.mode,
+            bias=params["b"] if self.use_bias else None)
 
-    def apply_packed(self, packed: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    def apply_packed(self, packed: QTensor, x: jnp.ndarray) -> jnp.ndarray:
+        # One fused call for every mode: quantize -> core -> scale/bias —
+        # mode, depth, scale and bias all come from the QTensor, so the
+        # epilogue runs inside the kernel/trace instead of a separate
+        # int32 -> float32 broadcast pass.
         x2, lead = _flatten_leading(x)
-        if self.mode in (QuantMode.F32, QuantMode.BF16):
-            w = packed["w"]
-            y = jnp.dot(x2.astype(w.dtype), w, preferred_element_type=jnp.float32)
-        elif self.mode.is_lowbit:
-            # One fused call: quantize -> pack -> popcount matmul -> scale
-            # (+ bias) — the scale epilogue runs inside the kernel instead
-            # of a separate int32 -> float32 broadcast pass.
-            y = ops.fused_qmm(x2.astype(jnp.float32), packed, self.mode,
-                              packed["b"] if self.use_bias else None,
-                              backend=self.backend)
-            return y.reshape(*lead, self.d_out).astype(x.dtype)
-        else:  # affine u8/u4
-            bits = 8 if self.mode == QuantMode.INT8 else 4
-            qa = quantize.affine_calibrate(x2.astype(jnp.float32), bits)
-            a_q = quantize.affine_quantize(x2.astype(jnp.float32), qa)
-            fn = (ops.int8_affine_matmul if self.mode == QuantMode.INT8
-                  else ops.int4_affine_matmul)
-            c = fn(a_q, packed["q"], qa.zero_point, packed["zero"], self.d_in,
-                   backend=self.backend)
-            y = c.astype(jnp.float32) * qa.scale * packed["scale"]
-        if self.use_bias:
-            y = y + packed["b"]
+        y = ops.qmm(x2.astype(jnp.float32), packed, backend=self.backend)
         return y.reshape(*lead, self.d_out).astype(x.dtype)
 
 

@@ -1,9 +1,15 @@
 """Pallas TPU kernels (+ XLA production paths and jnp oracles) for
-binary / ternary / ternary-binary / u8 / u4 matrix multiplication."""
+binary / ternary / ternary-binary / u8 / u4 matrix multiplication.
 
-from repro.kernels import ref
+Deployment surface: ``QTensor`` (typed packed-weight container),
+``ops.qmm`` (the one fused entry point) and ``registry`` (the
+(mode, backend, fused) -> kernel table)."""
+
+from repro.kernels import ref, registry
+from repro.kernels.qtensor import QTensor
 from repro.kernels.ops import (
     QuantMode,
+    qmm,
     quantized_matmul,
     lowbit_matmul,
     packed_matmul,
@@ -21,7 +27,10 @@ from repro.kernels.int4_matmul import int4_matmul_pallas
 
 __all__ = [
     "ref",
+    "registry",
+    "QTensor",
     "QuantMode",
+    "qmm",
     "quantized_matmul",
     "lowbit_matmul",
     "packed_matmul",

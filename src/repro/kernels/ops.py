@@ -1,29 +1,38 @@
 """Public entry points for the low-bit matmul kernels.
 
-Three backends per mode:
+The deployment API is two calls:
+
+* ``pack_weights(w, mode)`` (== :meth:`QTensor.from_dense`) — offline
+  packing, the paper's Algorithm 2 PackedB.  Returns a :class:`QTensor`:
+  bit planes / affine payload + scale/bias as pytree leaves, mode /
+  logical shape / conv geometry as static aux data.
+* ``qmm(x, qt)`` — float activations x packed weights -> float32, ONE
+  jitted computation (quantize -> pack -> popcount matmul -> eq. (2)
+  scale/bias epilogue).  Mode, depth, scales, bias and geometry all
+  travel inside the QTensor — consumers never re-thread ``mode=`` or
+  ``k_valid=``.
+
+Kernel selection goes through :mod:`repro.kernels.registry` — one
+``(mode, backend, fused)`` table replacing the old per-function if/elif
+ladders.  Three backends per low-bit mode:
 
 * ``pallas``  — the TPU kernels of this package, validated on CPU in
   interpret mode (the TARGET implementation);
 * ``xla``     — a production pure-jnp path with the same popcount
   formulation, written as a k-chunked ``lax.scan`` so the (m, n, chunk)
-  broadcast never exceeds a VMEM-sized working set.  This is what the LM
-  models use in multi-pod lowering (it shards under pjit like any jnp
-  code, and its HLO carries the true xor/popcount op mix for roofline
-  accounting);
+  broadcast never exceeds a VMEM-sized working set;
 * ``dense``   — a beyond-paper TPU alternative: keep the *storage* packed
-  (the memory win) but unpack to ±1/0 bf16 at use and ride the MXU.  On
-  ARM this would be absurd; on TPU it trades VPU popcount ops for MXU
-  FLOPs and is the natural hillclimb hypothesis for compute-bound cells.
+  (the memory win) but unpack to ±1/0 bf16 at use and ride the MXU.
 
 Plus the float-in/float-out ``quantized_matmul`` with straight-through
-(STE) gradients for QAT, and weight pre-packing (the paper's Algorithm 2
-PackedB: weights are packed once, offline).
+(STE) gradients for QAT.
 """
 
 from __future__ import annotations
 
+import collections
 import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +41,8 @@ import jax.numpy as jnp
 # import below re-enters this (partially initialized) module through the
 # core -> qlinear -> kernels cycle.
 from repro.kernels.modes import DEFAULT_BACKEND, QuantMode
+from repro.kernels import registry
+from repro.kernels.qtensor import PAYLOAD_KEYS, QTensor
 
 from repro.core import encoding, quantize
 from repro.kernels import ref as kref
@@ -44,18 +55,23 @@ from repro.kernels.int4_matmul import (
 )
 
 __all__ = [
-    "QuantMode", "pack_weights", "quantize_activations", "packed_matmul",
-    "quantized_matmul", "lowbit_matmul", "int8_affine_matmul",
-    "int4_affine_matmul", "DEFAULT_BACKEND", "fused_qmm",
+    "QuantMode", "QTensor", "qmm", "pack_weights", "quantize_activations",
+    "packed_matmul", "quantized_matmul", "lowbit_matmul",
+    "int8_affine_matmul", "int4_affine_matmul", "DEFAULT_BACKEND",
+    "fused_qmm", "qmm_trace_count",
     "bnn_matmul_xla_fused", "tnn_matmul_xla_fused", "tbn_matmul_xla_fused",
 ]
 
 _WORD_CHUNK = 8  # uint32 words per scan step on the xla path (256 k-elems)
 
-
-# QuantMode lives in kernels/modes.py (leaf module, breaks the
-# core<->kernels import cycle); re-exported here for every existing
-# call site.
+# Which planes each mode consumes on the ACTIVATION side (weights use
+# qtensor.PAYLOAD_KEYS — the container's single source of truth).  The
+# sides differ for TBN: ternary activations x binary weights.
+_A_KEYS: Dict[QuantMode, Tuple[str, ...]] = {
+    QuantMode.BNN: ("bits",),
+    QuantMode.TNN: ("plus", "minus"),
+    QuantMode.TBN: ("plus", "minus"),
+}
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +192,107 @@ def tbn_matmul_xla_fused(a_plus, a_minus, b_bits_t, k_valid: int,
 
 
 # ---------------------------------------------------------------------------
+# Kernel registry entries — normalized (a_planes, b_planes, ...) adapters
+# around the mode-specific kernels above.  benchmarks/tests enumerate
+# these; the ROADMAP's dense-Pallas and conv-im2col kernels plug in here.
+# ---------------------------------------------------------------------------
+
+def _unpack_operand(planes, k: int, binary: bool):
+    if binary:
+        return encoding.unpack_binary(planes[0], k, jnp.bfloat16)
+    return encoding.unpack_ternary(planes[0], planes[1], k, jnp.bfloat16)
+
+
+def _register_all_kernels():
+    M = QuantMode
+    pallas_unfused = {
+        M.BNN: lambda a, b, k, *, interpret=True: bnn_matmul_pallas(
+            a[0], b[0], k, interpret=interpret),
+        M.TNN: lambda a, b, k, *, interpret=True: tnn_matmul_pallas(
+            a[0], a[1], b[0], b[1], k, interpret=interpret),
+        M.TBN: lambda a, b, k, *, interpret=True: tbn_matmul_pallas(
+            a[0], a[1], b[0], k, interpret=interpret),
+    }
+    pallas_fused = {
+        M.BNN: lambda a, b, k, r, c, bias, *, interpret=True:
+            bnn_matmul_fused_pallas(a[0], b[0], k, r, c, bias,
+                                    interpret=interpret),
+        M.TNN: lambda a, b, k, r, c, bias, *, interpret=True:
+            tnn_matmul_fused_pallas(a[0], a[1], b[0], b[1], k, r, c, bias,
+                                    interpret=interpret),
+        M.TBN: lambda a, b, k, r, c, bias, *, interpret=True:
+            tbn_matmul_fused_pallas(a[0], a[1], b[0], k, r, c, bias,
+                                    interpret=interpret),
+    }
+    xla_unfused = {
+        M.BNN: lambda a, b, k, *, interpret=True: bnn_matmul_xla(
+            a[0], b[0], k),
+        M.TNN: lambda a, b, k, *, interpret=True: tnn_matmul_xla(
+            a[0], a[1], b[0], b[1]),
+        M.TBN: lambda a, b, k, *, interpret=True: tbn_matmul_xla(
+            a[0], a[1], b[0]),
+    }
+    xla_fused = {
+        M.BNN: lambda a, b, k, r, c, bias, *, interpret=True:
+            bnn_matmul_xla_fused(a[0], b[0], k, r, c, bias),
+        M.TNN: lambda a, b, k, r, c, bias, *, interpret=True:
+            tnn_matmul_xla_fused(a[0], a[1], b[0], b[1], k, r, c, bias),
+        M.TBN: lambda a, b, k, r, c, bias, *, interpret=True:
+            tbn_matmul_xla_fused(a[0], a[1], b[0], k, r, c, bias),
+    }
+    ternary_a = {M.BNN: False, M.TNN: True, M.TBN: True}
+    ternary_b = {M.BNN: False, M.TNN: True, M.TBN: False}
+
+    for mode in (M.BNN, M.TNN, M.TBN):
+        registry.register(
+            mode, "pallas", fused=False, epilogue="none",
+            compute="vpu-popcount",
+            description="Pallas bit-plane kernel, int32 accumulator",
+        )(pallas_unfused[mode])
+        registry.register(
+            mode, "pallas", fused=True, epilogue="in-kernel",
+            compute="vpu-popcount",
+            description="Pallas kernel; eq. (2) epilogue at pid_k==num_k-1",
+        )(pallas_fused[mode])
+        registry.register(
+            mode, "xla", fused=False, epilogue="none",
+            compute="vpu-popcount",
+            description="k-chunked lax.scan popcount path",
+        )(xla_unfused[mode])
+        registry.register(
+            mode, "xla", fused=True, epilogue="scan-carry",
+            compute="vpu-popcount",
+            description="popcount scan; epilogue fused onto the final carry",
+        )(xla_fused[mode])
+
+        def dense_unfused(a, b, k, *, interpret=True, _m=mode):
+            del interpret
+            av = _unpack_operand(a, k, binary=not ternary_a[_m])
+            bv = _unpack_operand(b, k, binary=not ternary_b[_m])
+            return jnp.dot(av, bv.T,
+                           preferred_element_type=jnp.float32).astype(jnp.int32)
+
+        def dense_fused(a, b, k, r, c, bias, *, interpret=True, _m=mode):
+            acc = registry.lookup(_m, "dense", fused=False).fn(
+                a, b, k, interpret=interpret)
+            return _scale_epilogue_f32(acc, r, c, bias)
+
+        registry.register(
+            mode, "dense", fused=False, epilogue="none", compute="mxu-dense",
+            description="packed storage; unpack to bf16 and ride the MXU",
+        )(dense_unfused)
+        registry.register(
+            mode, "dense", fused=True, epilogue="xla-fused",
+            compute="mxu-dense",
+            description="dense core; epilogue fused by XLA in the same trace "
+                        "(in-kernel dense fusion is an open ROADMAP item)",
+        )(dense_fused)
+
+
+_register_all_kernels()
+
+
+# ---------------------------------------------------------------------------
 # Affine (u8/u4) full pipelines: kernel + eq. (3) correction
 # ---------------------------------------------------------------------------
 
@@ -213,45 +330,24 @@ def int4_affine_matmul(a_q, b_q, za, zb, k_valid: int, *,
 
 
 # ---------------------------------------------------------------------------
-# Packed containers
+# Packing
 # ---------------------------------------------------------------------------
 
 def pack_weights(w: jnp.ndarray, mode: QuantMode, *,
-                 per_channel: bool = True) -> Dict[str, Any]:
+                 per_channel: bool = True) -> QTensor:
     """Offline weight packing (Algorithm 2's PackedB).
 
-    ``w`` is (k, n) float.  Returns a pytree of device arrays:
-      tnn:  {plus (n,kw), minus (n,kw), scale (n,) or ()}
-      bnn/tbn (binary weights): {bits (n,kw), scale}
-      int8/int4: {q (k,n) int32-valued, scale (), zero ()}
-      f32/bf16:  {w}
-    """
-    if mode in (QuantMode.F32, QuantMode.BF16):
-        return {"w": w.astype(jnp.float32 if mode == QuantMode.F32 else jnp.bfloat16)}
-    if mode == QuantMode.TNN:
-        axis = 0 if per_channel else None
-        thr = 0.7 * jnp.mean(jnp.abs(w), axis=axis, keepdims=True)
-        mask = jnp.abs(w) > thr
-        t = jnp.sign(w) * mask
-        denom = jnp.maximum(jnp.sum(mask, axis=axis), 1)
-        scale = jnp.sum(jnp.abs(w) * mask, axis=axis) / denom        # (n,)
-        plus, minus = encoding.pack_ternary(t.T)                      # (n, kw)
-        return {"plus": plus, "minus": minus, "scale": scale}
-    if mode in (QuantMode.TBN, QuantMode.BNN):
-        axis = 0 if per_channel else None
-        scale = jnp.mean(jnp.abs(w), axis=axis)                       # (n,)
-        bits = encoding.pack_binary(w.T)                              # (n, kw)
-        return {"bits": bits, "scale": scale}
-    if mode in (QuantMode.INT8, QuantMode.INT4):
-        bits = 8 if mode == QuantMode.INT8 else 4
-        q = quantize.affine_calibrate(w, bits)
-        return {"q": quantize.affine_quantize(w, q),
-                "scale": q.scale, "zero": q.zero_point}
-    raise ValueError(mode)
+    ``w`` is (k, n) float.  Returns a :class:`QTensor` (see
+    kernels/qtensor.py for the per-mode payload layout)."""
+    return QTensor.from_dense(w, mode, per_channel=per_channel)
 
 
 def quantize_activations(x: jnp.ndarray, mode: QuantMode) -> Dict[str, Any]:
-    """Runtime activation quantization.  ``x`` is (m, k) float."""
+    """Runtime activation quantization.  ``x`` is (m, k) float.
+
+    Activations are transient (packed inside the fused trace, never
+    stored), so they stay a plain dict of planes rather than a QTensor.
+    """
     if mode in (QuantMode.F32, QuantMode.BF16):
         return {"x": x}
     if mode in (QuantMode.TNN, QuantMode.TBN):
@@ -269,44 +365,40 @@ def quantize_activations(x: jnp.ndarray, mode: QuantMode) -> Dict[str, Any]:
     raise ValueError(mode)
 
 
-def packed_matmul(xa: Dict[str, Any], wb: Dict[str, Any], mode: QuantMode,
-                  k_valid: int, *, backend: str = DEFAULT_BACKEND,
+def _b_planes(wb, mode: QuantMode) -> Tuple[jnp.ndarray, ...]:
+    """Weight-side planes from a QTensor or a legacy packed dict."""
+    src = wb.payload if isinstance(wb, QTensor) else wb
+    return tuple(src[k] for k in PAYLOAD_KEYS[mode])
+
+
+def packed_matmul(xa: Dict[str, Any], wb, mode: Optional[QuantMode] = None,
+                  k_valid: Optional[int] = None, *,
+                  backend: str = DEFAULT_BACKEND,
                   interpret: bool = True) -> jnp.ndarray:
-    """Integer core: packed activations x packed weights -> int32 (m, n)."""
-    if mode == QuantMode.BNN:
-        if backend == "pallas":
-            return bnn_matmul_pallas(xa["bits"], wb["bits"], k_valid,
-                                     interpret=interpret)
-        if backend == "dense":
-            a = encoding.unpack_binary(xa["bits"], k_valid, jnp.bfloat16)
-            b = encoding.unpack_binary(wb["bits"], k_valid, jnp.bfloat16)
-            return jnp.dot(a, b.T, preferred_element_type=jnp.float32).astype(jnp.int32)
-        return bnn_matmul_xla(xa["bits"], wb["bits"], k_valid)
-    if mode == QuantMode.TNN:
-        if backend == "pallas":
-            return tnn_matmul_pallas(xa["plus"], xa["minus"],
-                                     wb["plus"], wb["minus"], k_valid,
-                                     interpret=interpret)
-        if backend == "dense":
-            a = encoding.unpack_ternary(xa["plus"], xa["minus"], k_valid, jnp.bfloat16)
-            b = encoding.unpack_ternary(wb["plus"], wb["minus"], k_valid, jnp.bfloat16)
-            return jnp.dot(a, b.T, preferred_element_type=jnp.float32).astype(jnp.int32)
-        return tnn_matmul_xla(xa["plus"], xa["minus"], wb["plus"], wb["minus"])
-    if mode == QuantMode.TBN:
-        if backend == "pallas":
-            return tbn_matmul_pallas(xa["plus"], xa["minus"], wb["bits"],
-                                     k_valid, interpret=interpret)
-        if backend == "dense":
-            a = encoding.unpack_ternary(xa["plus"], xa["minus"], k_valid, jnp.bfloat16)
-            b = encoding.unpack_binary(wb["bits"], k_valid, jnp.bfloat16)
-            return jnp.dot(a, b.T, preferred_element_type=jnp.float32).astype(jnp.int32)
-        return tbn_matmul_xla(xa["plus"], xa["minus"], wb["bits"])
-    raise ValueError(f"packed_matmul only handles low-bit modes, got {mode}")
+    """Integer core: packed activations x packed weights -> int32 (m, n).
+
+    ``wb`` is a :class:`QTensor` (mode/k_valid then come from it) or a
+    legacy plane dict (mode and k_valid must be given).  This is the
+    unfused correctness oracle; the hot path is :func:`qmm`.
+    """
+    if isinstance(wb, QTensor):
+        if mode is not None and mode != wb.mode:
+            raise ValueError(f"mode mismatch: {mode} vs QTensor {wb.mode}")
+        mode = wb.mode
+        k_valid = wb.k_valid if k_valid is None else k_valid
+    if mode is None or k_valid is None:
+        raise ValueError("packed_matmul with a legacy dict needs explicit "
+                         "mode and k_valid (pack into a QTensor instead)")
+    if not mode.is_lowbit:
+        raise ValueError(f"packed_matmul only handles low-bit modes, got {mode}")
+    spec = registry.lookup(mode, backend, fused=False)
+    a_pl = tuple(xa[k] for k in _A_KEYS[mode])
+    return spec.fn(a_pl, _b_planes(wb, mode), k_valid, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
-# Fused packed inference: quantize -> pack -> popcount matmul -> scale,
-# one jitted call (the paper's co-designed quantizer+kernel pipeline)
+# qmm — THE packed-inference entry point: float x QTensor -> float32,
+# quantize -> pack -> popcount matmul -> scale/bias as one jitted call
 # ---------------------------------------------------------------------------
 
 def _as_row_scale(scale, m: int) -> jnp.ndarray:
@@ -325,23 +417,60 @@ def _as_col_vec(v, n: int) -> jnp.ndarray:
     return x.reshape(1, n)
 
 
-def _packed_out_features(wb: Dict[str, Any]) -> int:
-    return (wb["bits"] if "bits" in wb else wb["plus"]).shape[0]
+# (mode, backend) -> number of traces of the jitted qmm body; a consumer
+# reusing one QTensor across calls must not retrace (tests guard this).
+_QMM_TRACES: collections.Counter = collections.Counter()
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "backend", "interpret"))
-def fused_qmm(x: jnp.ndarray, wb: Dict[str, Any], mode: QuantMode,
-              bias: Optional[jnp.ndarray] = None, *,
-              backend: str = DEFAULT_BACKEND,
-              interpret: bool = True) -> jnp.ndarray:
-    """Fused low-bit projection: float x (m, k) against offline-packed
-    weights ``wb`` -> float32 (m, n), in ONE jitted computation.
+def qmm_trace_count(mode: QuantMode, backend: str = DEFAULT_BACKEND) -> int:
+    return _QMM_TRACES[(mode, backend)]
 
-    ternarize/binarize -> bit-plane pack -> popcount matmul -> per-row
-    activation scale x per-column weight scale (+ optional bias).  Unlike
-    ``quantize_activations`` + ``packed_matmul`` + a broadcast rescale
-    (three dispatches that each round-trip (m, n)/(m, kw) arrays through
-    HBM), the whole pipeline stays inside one kernel/trace:
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def _qmm_jit(x, qt: QTensor, backend: str, interpret: bool):
+    _QMM_TRACES[(qt.mode, backend)] += 1   # runs at trace time only
+    m, k = x.shape
+    n = qt.out_features
+    mode = qt.mode
+
+    if mode in (QuantMode.F32, QuantMode.BF16):
+        w = qt.payload["w"]
+        y = jnp.dot(x.astype(w.dtype), w, preferred_element_type=jnp.float32)
+        y = y.astype(jnp.float32)
+        return y if qt.bias is None else y + qt.bias
+
+    if mode.is_lowbit:
+        xa = quantize_activations(x.astype(jnp.float32), mode)
+        row = _as_row_scale(xa["scale"], m)
+        col = _as_col_vec(qt.scale, n)
+        b2 = None if qt.bias is None else _as_col_vec(qt.bias, n)
+        spec = registry.lookup(mode, backend, fused=True)
+        a_pl = tuple(xa[kk] for kk in _A_KEYS[mode])
+        return spec.fn(a_pl, _b_planes(qt, mode), k, row, col, b2,
+                       interpret=interpret)
+
+    # affine u8/u4: runtime activation calibration + eq. (3) core + eq. (2)
+    nbits = 8 if mode == QuantMode.INT8 else 4
+    xf = x.astype(jnp.float32)
+    qa = quantize.affine_calibrate(xf, nbits)
+    a_q = quantize.affine_quantize(xf, qa)
+    fn = int8_affine_matmul if mode == QuantMode.INT8 else int4_affine_matmul
+    c = fn(a_q, qt.payload["q"], qa.zero_point, qt.zero, k,
+           backend=backend, interpret=interpret)
+    y = c.astype(jnp.float32) * qa.scale * qt.scale
+    return y if qt.bias is None else y + qt.bias
+
+
+def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
+        interpret: bool = True) -> jnp.ndarray:
+    """Quantized matmul: float ``x`` (m, k) against an offline-packed
+    :class:`QTensor` -> float32 (m, n), in ONE jitted computation.
+
+    Everything layer-specific — mode, logical depth, weight scale, bias,
+    conv geometry — travels inside ``qt``; the only knob at the call site
+    is the backend (None -> DEFAULT_BACKEND).  For the low-bit modes the
+    pipeline is ternarize/binarize -> bit-plane pack -> popcount matmul ->
+    per-row activation scale x per-column weight scale (+ bias):
 
     * ``pallas``: the scale epilogue runs inside the matmul kernel at
       ``pid_k == num_k - 1`` (``*_fused_pallas``), float32 out;
@@ -350,41 +479,45 @@ def fused_qmm(x: jnp.ndarray, wb: Dict[str, Any], mode: QuantMode,
     * ``dense``: unpack + MXU dot + epilogue in the same trace (kernel-
       level fusion for this backend is an open roadmap item).
 
-    Numerics match the unfused oracle exactly: the integer core is
-    identical and the epilogue uses the same multiply order.
+    Float modes are a dense dot (+ bias); u8/u4 run the affine eq. (3)
+    pipeline.  Numerics match the unfused oracle exactly: the integer
+    core is identical and the epilogue uses the same multiply order.
     """
-    if not mode.is_lowbit:
-        raise ValueError(f"fused_qmm only handles low-bit modes, got {mode}")
-    m, k = x.shape
-    n = _packed_out_features(wb)
-    xa = quantize_activations(x.astype(jnp.float32), mode)
-    row = _as_row_scale(xa["scale"], m)
-    col = _as_col_vec(wb["scale"], n)
-    b2 = None if bias is None else _as_col_vec(bias, n)
+    if not isinstance(qt, QTensor):
+        raise TypeError(
+            f"qmm expects a QTensor (use pack_weights/QTensor.from_dense, "
+            f"or QTensor.from_legacy_dict for old packed dicts); got "
+            f"{type(qt).__name__}")
+    if x.ndim != 2:
+        raise ValueError(f"qmm expects x of rank 2, got shape {x.shape}")
+    if x.shape[-1] != qt.k_valid:
+        raise ValueError(
+            f"depth mismatch: x has k={x.shape[-1]} but QTensor was packed "
+            f"with k_valid={qt.k_valid} (logical shape {qt.shape})")
+    return _qmm_jit(x, qt, backend=backend or DEFAULT_BACKEND,
+                    interpret=interpret)
 
-    if backend == "pallas":
-        if mode == QuantMode.BNN:
-            return bnn_matmul_fused_pallas(xa["bits"], wb["bits"], k,
-                                           row, col, b2, interpret=interpret)
-        if mode == QuantMode.TNN:
-            return tnn_matmul_fused_pallas(xa["plus"], xa["minus"],
-                                           wb["plus"], wb["minus"], k,
-                                           row, col, b2, interpret=interpret)
-        return tbn_matmul_fused_pallas(xa["plus"], xa["minus"], wb["bits"], k,
-                                       row, col, b2, interpret=interpret)
-    if backend == "xla":
-        if mode == QuantMode.BNN:
-            return bnn_matmul_xla_fused(xa["bits"], wb["bits"], k,
-                                        row, col, b2)
-        if mode == QuantMode.TNN:
-            return tnn_matmul_xla_fused(xa["plus"], xa["minus"],
-                                        wb["plus"], wb["minus"], k,
-                                        row, col, b2)
-        return tbn_matmul_xla_fused(xa["plus"], xa["minus"], wb["bits"], k,
-                                    row, col, b2)
-    # dense: packed storage, MXU compute; epilogue fused by XLA
-    acc = packed_matmul(xa, wb, mode, k, backend=backend, interpret=interpret)
-    return _scale_epilogue_f32(acc, row, col, b2)
+
+def fused_qmm(x: jnp.ndarray, wb, mode: Optional[QuantMode] = None,
+              bias: Optional[jnp.ndarray] = None, *,
+              backend: str = DEFAULT_BACKEND,
+              interpret: bool = True) -> jnp.ndarray:
+    """Legacy shim for the pre-QTensor API: accepts a QTensor or a legacy
+    packed dict (+ explicit mode) and delegates to :func:`qmm`.  New code
+    should call ``qmm(x, qt)`` directly."""
+    if isinstance(wb, QTensor):
+        qt = wb
+        if mode is not None and mode != qt.mode:
+            raise ValueError(f"mode mismatch: {mode} vs QTensor {qt.mode}")
+    else:
+        if mode is None:
+            raise ValueError("legacy dict input needs an explicit mode")
+        if not mode.is_lowbit:
+            raise ValueError(f"fused_qmm only handles low-bit modes, got {mode}")
+        qt = QTensor.from_legacy_dict(wb, mode, k_valid=x.shape[-1])
+    if bias is not None:
+        qt = qt.replace(bias=bias)
+    return qmm(x, qt, backend=backend, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -401,9 +534,9 @@ def _qmm_fwd_value(x, w, mode: QuantMode, backend: str, interpret: bool):
     if mode.is_lowbit:
         # Forward rides the fused pipeline: quantize -> pack -> popcount
         # matmul -> scale in one trace (weights are re-packed per call in
-        # QAT; inference should pack once and call fused_qmm directly).
-        wb = pack_weights(w, mode)
-        return fused_qmm(x, wb, mode, backend=backend, interpret=interpret)
+        # QAT; inference should pack once and call qmm directly).
+        qt = QTensor.from_dense(w, mode)
+        return qmm(x, qt, backend=backend, interpret=interpret)
     # affine u8/u4
     bits = 8 if mode == QuantMode.INT8 else 4
     qa = quantize.affine_calibrate(x, bits)

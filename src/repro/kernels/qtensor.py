@@ -1,0 +1,256 @@
+"""QTensor — the typed container for offline-packed quantized matrices.
+
+The paper's deployment story is "pack B once, offline (Algorithm 2), then
+run a mode-specific bit-plane kernel".  ``QTensor`` is that packed B as a
+first-class value: one frozen dataclass, registered as a JAX pytree, that
+carries
+
+* the packed **payload** (bit planes for BNN/TBN/TNN, the integer grid
+  for u8/u4, the dense matrix for the float passthrough modes) and the
+  dequantization ``scale`` (+ optional ``bias`` and affine ``zero``) as
+  *leaves* — they flow through jit / vmap / scan / checkpointing like any
+  array;
+* the quantization ``mode``, logical ``shape`` (k, n), conv ``geometry``
+  and a ``layout`` tag as *static aux data* — they are part of the pytree
+  structure, so a jitted consumer retraces only when the mode/shape
+  actually changes and kernels can dispatch on them without re-threading
+  ``mode=`` / ``k_valid=`` arguments through every call site.
+
+Payload keys by mode (weights are stored transposed, (n, kw) words, so
+the GeMM kernels stream contiguous rows of B^T):
+
+    tnn            {"plus", "minus"}   2-bit planes, (n, kw) uint32
+    tbn / bnn      {"bits"}            1-bit plane,  (n, kw) uint32
+    int8 / int4    {"q"}               (k, n) int32-valued grid
+    f32 / bf16     {"w"}               (k, n) dense
+
+Stacked containers (scanned layer periods, MoE experts) are the same
+type with extra leading axes on every leaf — ``jax.vmap`` /
+``jax.lax.scan`` slice the leaves and keep the aux data, which always
+describes the *logical 2-D* matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.modes import QuantMode
+
+# NOTE: repro.core is imported lazily inside the pack/unpack methods.
+# core/__init__ -> qlinear -> kernels.ops -> THIS module is a cycle; a
+# top-level core import here would re-enter before QTensor is defined.
+
+__all__ = ["QTensor", "PAYLOAD_KEYS", "LAYOUT_BITPLANE", "LAYOUT_AFFINE",
+           "LAYOUT_DENSE"]
+
+LAYOUT_BITPLANE = "bitplane32"   # uint32 words, 32 depth elems per word
+LAYOUT_AFFINE = "affine"         # integer grid + scale/zero (eq. (1)-(3))
+LAYOUT_DENSE = "dense"           # float passthrough (f32 / bf16)
+
+# Payload keys each mode must carry — the single source of truth that
+# replaces the key-sniffing (`PACKED_KEYS`, `"bits" in wb`, ...) that the
+# anonymous-dict representation forced on every consumer.
+PAYLOAD_KEYS: Dict[QuantMode, Tuple[str, ...]] = {
+    QuantMode.TNN: ("plus", "minus"),
+    QuantMode.TBN: ("bits",),
+    QuantMode.BNN: ("bits",),
+    QuantMode.INT8: ("q",),
+    QuantMode.INT4: ("q",),
+    QuantMode.F32: ("w",),
+    QuantMode.BF16: ("w",),
+}
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class QTensor:
+    """An offline-quantized matrix: packed payload + epilogue operands as
+    pytree leaves, mode / logical shape / geometry as static aux data."""
+
+    payload: Dict[str, jnp.ndarray]
+    scale: Optional[jnp.ndarray]            # per-channel (n,) or scalar
+    mode: QuantMode
+    shape: Tuple[int, int]                  # logical (k, n)
+    bias: Optional[jnp.ndarray] = None      # (n,) epilogue bias
+    zero: Optional[jnp.ndarray] = None      # affine zero point (u8/u4)
+    geometry: Optional[Tuple[int, int, int, int]] = None  # conv (kh,kw,cin,cout)
+    layout: str = LAYOUT_BITPLANE
+
+    # -- pytree protocol ----------------------------------------------------
+
+    def tree_flatten_with_keys(self):
+        children = [(jax.tree_util.GetAttrKey(k), getattr(self, k))
+                    for k in ("payload", "scale", "bias", "zero")]
+        aux = (self.mode, self.shape, self.geometry, self.layout)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        payload, scale, bias, zero = children
+        mode, shape, geometry, layout = aux
+        return cls(payload=payload, scale=scale, bias=bias, zero=zero,
+                   mode=mode, shape=shape, geometry=geometry, layout=layout)
+
+    # -- derived static properties ------------------------------------------
+
+    @property
+    def k_valid(self) -> int:
+        """Logical reduction depth (the paper's k; bit-plane words are
+        padded past it, eq. (6) corrects with this exact value)."""
+        return self.shape[0]
+
+    @property
+    def out_features(self) -> int:
+        return self.shape[1]
+
+    @property
+    def is_lowbit(self) -> bool:
+        return self.mode.is_lowbit
+
+    def replace(self, **kw) -> "QTensor":
+        return dataclasses.replace(self, **kw)
+
+    def __repr__(self) -> str:  # leaves may be tracers; stay shape-only
+        geo = f", geometry={self.geometry}" if self.geometry else ""
+        return (f"QTensor({self.mode.value}, shape={self.shape}, "
+                f"layout={self.layout!r}, payload={sorted(self.payload)}"
+                f"{geo})")
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_dense(cls, w: jnp.ndarray, mode: QuantMode, *,
+                   per_channel: bool = True,
+                   bias: Optional[jnp.ndarray] = None,
+                   geometry: Optional[Tuple[int, int, int, int]] = None,
+                   ) -> "QTensor":
+        """Offline packing of a dense (k, n) float matrix — the paper's
+        Algorithm 2 PackedB, producing the typed container."""
+        from repro.core import encoding, quantize
+
+        k, n = w.shape
+        shape = (int(k), int(n))
+        if mode in (QuantMode.F32, QuantMode.BF16):
+            dt = jnp.float32 if mode == QuantMode.F32 else jnp.bfloat16
+            return cls(payload={"w": w.astype(dt)}, scale=None, mode=mode,
+                       shape=shape, bias=bias, geometry=geometry,
+                       layout=LAYOUT_DENSE)
+        if mode == QuantMode.TNN:
+            axis = 0 if per_channel else None
+            thr = 0.7 * jnp.mean(jnp.abs(w), axis=axis, keepdims=True)
+            mask = jnp.abs(w) > thr
+            t = jnp.sign(w) * mask
+            denom = jnp.maximum(jnp.sum(mask, axis=axis), 1)
+            scale = jnp.sum(jnp.abs(w) * mask, axis=axis) / denom   # (n,)
+            plus, minus = encoding.pack_ternary(t.T)                # (n, kw)
+            return cls(payload={"plus": plus, "minus": minus}, scale=scale,
+                       mode=mode, shape=shape, bias=bias, geometry=geometry)
+        if mode in (QuantMode.TBN, QuantMode.BNN):
+            axis = 0 if per_channel else None
+            scale = jnp.mean(jnp.abs(w), axis=axis)                 # (n,)
+            bits = encoding.pack_binary(w.T)                        # (n, kw)
+            return cls(payload={"bits": bits}, scale=scale, mode=mode,
+                       shape=shape, bias=bias, geometry=geometry)
+        if mode in (QuantMode.INT8, QuantMode.INT4):
+            nbits = 8 if mode == QuantMode.INT8 else 4
+            q = quantize.affine_calibrate(w, nbits)
+            return cls(payload={"q": quantize.affine_quantize(w, q)},
+                       scale=q.scale, zero=q.zero_point, mode=mode,
+                       shape=shape, bias=bias, geometry=geometry,
+                       layout=LAYOUT_AFFINE)
+        raise ValueError(mode)
+
+    @classmethod
+    def from_legacy_dict(cls, d: Dict[str, Any], mode: QuantMode, *,
+                         k_valid: Optional[int] = None) -> "QTensor":
+        """Convert the anonymous packed dict of earlier revisions
+        ({"bits"/"plus"/"minus"/"q", "scale", optional "b"/"zero"/
+        "geometry"}) so existing checkpoints keep loading.
+
+        ``k_valid`` is required for bit-plane modes unless the dict
+        carries conv "geometry" (the legacy dicts never stored the
+        logical depth — consumers re-threaded it by hand, which is
+        exactly what this type exists to end).
+        """
+        d = dict(d)
+        geometry = d.pop("geometry", None)
+        bias = d.pop("b", None)
+        zero = d.pop("zero", None)
+        scale = d.pop("scale", None)
+        if geometry is not None:
+            geometry = tuple(int(g) for g in geometry)
+            kh, kw_, cin, cout = geometry
+            k_valid = k_valid if k_valid is not None else kh * kw_ * cin
+        if mode in (QuantMode.F32, QuantMode.BF16):
+            w = d["w"]
+            return cls(payload={"w": w}, scale=scale, mode=mode,
+                       shape=(int(w.shape[-2]), int(w.shape[-1])),
+                       bias=bias, geometry=geometry, layout=LAYOUT_DENSE)
+        if mode in (QuantMode.INT8, QuantMode.INT4):
+            q = d["q"]
+            return cls(payload={"q": q}, scale=scale, zero=zero, mode=mode,
+                       shape=(int(q.shape[-2]), int(q.shape[-1])),
+                       bias=bias, geometry=geometry, layout=LAYOUT_AFFINE)
+        if not mode.is_lowbit:
+            raise ValueError(mode)
+        if k_valid is None:
+            raise ValueError(
+                "legacy packed dicts do not record the logical depth; pass "
+                "k_valid= (or include conv geometry) when migrating")
+        keys = PAYLOAD_KEYS[mode]
+        missing = [k for k in keys if k not in d]
+        if missing:
+            raise KeyError(f"legacy dict for {mode} is missing {missing}")
+        payload = {k: d[k] for k in keys}
+        n = payload[keys[0]].shape[-2]
+        return cls(payload=payload, scale=scale, mode=mode,
+                   shape=(int(k_valid), int(n)), bias=bias,
+                   geometry=geometry)
+
+    # -- conversions --------------------------------------------------------
+
+    def to_legacy_dict(self) -> Dict[str, Any]:
+        """Inverse of :meth:`from_legacy_dict` (minus the depth, which the
+        legacy format could not represent)."""
+        out: Dict[str, Any] = dict(self.payload)
+        if self.scale is not None:
+            out["scale"] = self.scale
+        if self.bias is not None:
+            out["b"] = self.bias
+        if self.zero is not None:
+            out["zero"] = self.zero
+        if self.geometry is not None:
+            out["geometry"] = self.geometry
+        return out
+
+    def to_dense(self, dtype=jnp.float32) -> jnp.ndarray:
+        """Dequantize back to the (k, n) float matrix this container
+        approximates (exact for the float modes)."""
+        from repro.core import encoding
+
+        k, n = self.shape
+        if self.layout == LAYOUT_DENSE:
+            return self.payload["w"].astype(dtype)
+        if self.layout == LAYOUT_AFFINE:
+            q = self.payload["q"].astype(jnp.float32)
+            w = (q - self.zero) * self.scale
+            return w.astype(dtype)
+        if self.mode == QuantMode.TNN:
+            vals = encoding.unpack_ternary(self.payload["plus"],
+                                           self.payload["minus"], k)
+        else:
+            vals = encoding.unpack_binary(self.payload["bits"], k)
+        w = vals.T * jnp.asarray(
+            1.0 if self.scale is None else self.scale, jnp.float32)
+        return w.astype(dtype)
+
+    def nbytes(self) -> int:
+        """Total packed bytes (payload + epilogue operands) — computed
+        from shape/dtype, no device-to-host transfer."""
+        return sum(int(np.prod(v.shape)) * v.dtype.itemsize
+                   for v in jax.tree_util.tree_leaves(self))

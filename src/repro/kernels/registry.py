@@ -1,0 +1,98 @@
+"""Kernel registry: one table from (mode, backend, fused) to the kernel
+that implements it, with capability metadata.
+
+This replaces the duplicated mode x backend if/elif ladders that used to
+live inside ``ops.packed_matmul`` and ``ops.fused_qmm``: kernels register
+themselves once, dispatch is a dict lookup, and benchmarks / tests / the
+serving engine can *enumerate* what exists instead of hard-coding mode
+lists.  New kernels (the ROADMAP's dense-backend Pallas fusion, the conv
+im2col-fused kernel) plug in by registering a new entry — no dispatch
+code changes.
+
+Normalized kernel signatures (planes are tuples of uint32 bit-plane
+arrays — 1 plane for binary operands, 2 (plus, minus) for ternary):
+
+* unfused (``fused=False``) — the integer core:
+      fn(a_planes, b_planes, k_valid, *, interpret) -> int32 (m, n)
+* fused (``fused=True``) — core + eq. (2) scale/bias epilogue:
+      fn(a_planes, b_planes, k_valid, row_scale, col_scale, bias, *,
+         interpret) -> float32 (m, n)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.kernels.modes import QuantMode
+
+__all__ = ["KernelSpec", "register", "lookup", "available", "backends",
+           "modes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel + the capability metadata consumers need to
+    pick (or enumerate) it without knowing its internals."""
+    mode: QuantMode
+    backend: str              # "pallas" | "xla" | "dense" | ...
+    fused: bool               # epilogue included in the kernel/trace
+    fn: Callable
+    epilogue: str             # "in-kernel" | "scan-carry" | "xla-fused" | "none"
+    compute: str              # "vpu-popcount" | "mxu-dense" | ...
+    description: str = ""
+
+    @property
+    def key(self) -> Tuple[QuantMode, str, bool]:
+        return (self.mode, self.backend, self.fused)
+
+
+_REGISTRY: Dict[Tuple[QuantMode, str, bool], KernelSpec] = {}
+
+
+def register(mode: QuantMode, backend: str, *, fused: bool,
+             epilogue: str, compute: str, description: str = ""):
+    """Decorator: register ``fn`` as THE kernel for (mode, backend, fused).
+    Re-registration overwrites (lets tests/backends shadow an entry)."""
+
+    def deco(fn: Callable) -> Callable:
+        spec = KernelSpec(mode=mode, backend=backend, fused=fused, fn=fn,
+                          epilogue=epilogue, compute=compute,
+                          description=description)
+        _REGISTRY[spec.key] = spec
+        return fn
+
+    return deco
+
+
+def lookup(mode: QuantMode, backend: str, *, fused: bool) -> KernelSpec:
+    try:
+        return _REGISTRY[(mode, backend, fused)]
+    except KeyError:
+        have = sorted(f"{m.value}/{b}{'/fused' if f else ''}"
+                      for (m, b, f) in _REGISTRY)
+        raise KeyError(
+            f"no {'fused ' if fused else ''}kernel registered for "
+            f"mode={mode.value} backend={backend!r}; registered: {have}"
+        ) from None
+
+
+def available(mode: Optional[QuantMode] = None,
+              backend: Optional[str] = None,
+              fused: Optional[bool] = None) -> List[KernelSpec]:
+    """All registered kernels matching the given filters, in a stable
+    (mode, backend, fused) order — what benchmarks and tests enumerate."""
+    out = [s for s in _REGISTRY.values()
+           if (mode is None or s.mode == mode)
+           and (backend is None or s.backend == backend)
+           and (fused is None or s.fused == fused)]
+    return sorted(out, key=lambda s: (s.mode.value, s.backend, s.fused))
+
+
+def backends(mode: Optional[QuantMode] = None) -> List[str]:
+    return sorted({s.backend for s in available(mode=mode)})
+
+
+def modes(backend: Optional[str] = None) -> List[QuantMode]:
+    seen = {s.mode for s in available(backend=backend)}
+    return sorted(seen, key=lambda m: m.value)

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from repro.core.policy import QuantPolicy
 from repro.kernels import ops
 from repro.kernels.ops import QuantMode
+from repro.kernels.qtensor import QTensor
 from repro.models.common import (
     ModelConfig, ShardLayout, apply_rope, ceil_to, rms_norm, softcap,
 )
@@ -119,20 +120,19 @@ def init_attention(key, cfg: ModelConfig, layout: ShardLayout,
     return p
 
 
-def project(params: Dict[str, Any], x: jnp.ndarray, mode: QuantMode,
-            backend: str) -> jnp.ndarray:
-    """QuantLinear forward on a {'w': ...} leaf (no bias), or on a
-    PACKED leaf ({plus,minus,scale} / {bits,scale} bit-planes — the
-    paper's Algorithm 2 offline-packed weights, see models/packing.py):
-    serving streams 1/8 (ternary) or 1/16 (binary) of the bf16 weight
-    bytes per token."""
+def project(params: Dict[str, Any] | QTensor, x: jnp.ndarray,
+            mode: QuantMode, backend: str) -> jnp.ndarray:
+    """QuantLinear forward on a {'w': ...} leaf (no bias), or on a packed
+    :class:`QTensor` leaf (the paper's Algorithm 2 offline-packed
+    weights, see models/packing.py) — detected by TYPE, with mode/depth/
+    scale riding inside the container: serving streams 1/8 (ternary) or
+    1/16 (binary) of the bf16 weight bytes per token."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if "w" not in params:                      # packed low-bit weights
+    if isinstance(params, QTensor):            # packed low-bit weights
         from repro.models.packing import packed_matmul_any
-        n = params["scale"].shape[-1]
-        y = packed_matmul_any(params, x2, mode, backend)
-        return y.reshape(*lead, n).astype(x.dtype)
+        y = packed_matmul_any(params, x2, backend)
+        return y.reshape(*lead, params.out_features).astype(x.dtype)
     w = params["w"]
     if mode == QuantMode.BF16:
         y = jnp.dot(x2.astype(jnp.bfloat16), w.astype(jnp.bfloat16),

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro.core.policy import QuantPolicy
 from repro.kernels import ops
 from repro.kernels.ops import QuantMode
+from repro.kernels.qtensor import QTensor
 from repro.models.common import ModelConfig
 from repro.models.ffn import init_ffn, ffn
 from repro.parallel import sharding
@@ -61,13 +62,13 @@ def _expert_matmul(w, h: jnp.ndarray, mode: QuantMode,
                    backend: str) -> jnp.ndarray:
     """h (E, C', k) @ w (E, k, n) -> (E, C', n), optionally quantized.
 
-    ``w`` may be a PACKED dict of per-expert bit-planes (serving; see
-    models/packing.py) — then each expert runs the popcount core."""
-    if isinstance(w, dict) and "w" not in w:
+    ``w`` may be a stacked :class:`QTensor` of per-expert bit-planes
+    (serving; see models/packing.py) — QTensor is a pytree, so vmap
+    slices the expert axis off every leaf directly and each expert runs
+    the popcount core."""
+    if isinstance(w, QTensor):
         from repro.models.packing import packed_matmul_any
-        y = jax.vmap(lambda hh, *leaves: packed_matmul_any(
-            dict(zip(sorted(w), leaves)), hh, mode, backend))(
-            h, *[w[k] for k in sorted(w)])
+        y = jax.vmap(lambda hh, qt: packed_matmul_any(qt, hh, backend))(h, w)
         return y.astype(h.dtype)
     if isinstance(w, dict):
         w = w["w"]

@@ -2,25 +2,29 @@
 (pack B once, offline) applied to a whole parameter tree.
 
 ``pack_lm_params`` walks the tree by path and replaces every projection
-leaf ``{"w": (k, n)}`` whose quantization class is low-bit with the
-bit-plane representation from kernels/ops.pack_weights:
+leaf ``{"w": (k, n)}`` whose quantization class is low-bit with a
+:class:`~repro.kernels.qtensor.QTensor`:
 
-    tnn:      {plus (n, kw), minus (n, kw), scale (n,)}   8x smaller
-    tbn/bnn:  {bits (n, kw), scale (n,)}                  16x smaller
+    tnn:      payload {plus (n, kw), minus (n, kw)}, scale (n,)   8x smaller
+    tbn/bnn:  payload {bits (n, kw)}, scale (n,)                  16x smaller
 
 Stacked (period-scanned) and expert tensors keep their leading dims via
-vmap.  Embeddings, norms, routers, SSM scan parameters and the LM head
-stay exactly as they are (QuantPolicy classes; standard QNN practice).
+vmap — the QTensor's static aux always describes the logical 2-D matrix,
+so ``lax.scan`` / ``jax.vmap`` slice the leaves and the consumers below
+never special-case stacking.  Embeddings, norms, routers, SSM scan
+parameters and the LM head stay exactly as they are (QuantPolicy
+classes; standard QNN practice).
 
 At serve time, ``attention.project`` / ``moe._expert_matmul`` detect a
-packed leaf (no "w" key) and run: runtime activation quantization ->
-integer popcount core -> per-channel rescale.  This is the technique's
+packed leaf BY TYPE (``isinstance(leaf, QTensor)`` — no key sniffing)
+and run one fused ``ops.qmm`` per projection.  This is the technique's
 headline TPU win: decode streams 1/16th (binary) or 1/8th (ternary) of
 the weight bytes every token.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import re
 from typing import Any, Dict
 
@@ -30,11 +34,11 @@ import jax.numpy as jnp
 from repro.core.policy import QuantPolicy
 from repro.kernels import ops
 from repro.kernels.ops import QuantMode
+from repro.kernels.qtensor import QTensor
 from repro.models.common import ModelConfig
 
-__all__ = ["pack_lm_params", "packed_matmul_any", "PACKED_KEYS"]
+__all__ = ["pack_lm_params", "packed_matmul_any"]
 
-PACKED_KEYS = ("plus", "minus", "bits")
 
 # path -> projection class (mirror of the modules' own policy usage)
 _CLASS_OF = (
@@ -51,10 +55,11 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def _pack_leaf(w: jnp.ndarray, mode: QuantMode) -> Dict[str, jnp.ndarray]:
-    """w (..., k, n) float -> packed planes with leading dims preserved."""
+def _pack_leaf(w: jnp.ndarray, mode: QuantMode) -> QTensor:
+    """w (..., k, n) float -> QTensor with leading dims preserved on the
+    leaves (aux stays the logical 2-D shape)."""
     if w.ndim == 2:
-        return ops.pack_weights(w.astype(jnp.float32), mode)
+        return QTensor.from_dense(w.astype(jnp.float32), mode)
     return jax.vmap(lambda ww: _pack_leaf(ww, mode))(w)
 
 
@@ -70,7 +75,8 @@ def pack_lm_params(params: Dict[str, Any], cfg: ModelConfig,
                     if mode.is_lowbit:
                         packed = _pack_leaf(tree["w"], mode)
                         if "b" in tree:
-                            packed["b"] = tree["b"]
+                            packed = dataclasses.replace(packed,
+                                                         bias=tree["b"])
                         return packed
                     break
             return tree
@@ -83,14 +89,14 @@ def pack_lm_params(params: Dict[str, Any], cfg: ModelConfig,
     return walk(params)
 
 
-def packed_matmul_any(packed: Dict[str, Any], x2: jnp.ndarray,
-                      mode: QuantMode, backend: str) -> jnp.ndarray:
-    """x2 (m, k) float x packed (n, kw) planes -> (m, n) float.
+def packed_matmul_any(packed: QTensor, x2: jnp.ndarray,
+                      backend: str) -> jnp.ndarray:
+    """x2 (m, k) float x packed QTensor -> (m, n) float.
 
-    Single fused dispatch (ops.fused_qmm): activation quantization, the
+    Single fused dispatch (ops.qmm): activation quantization, the
     popcount core and the scale (+ bias, if the layer has one) epilogue
     run in one jitted computation — no int32 (m, n) round-trip to HBM
-    between the matmul and the rescale.
+    between the matmul and the rescale.  Mode, depth and epilogue
+    operands all come from the QTensor.
     """
-    return ops.fused_qmm(x2.astype(jnp.float32), packed, mode,
-                         packed.get("b"), backend=backend)
+    return ops.qmm(x2.astype(jnp.float32), packed, backend=backend)

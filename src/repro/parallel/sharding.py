@@ -215,9 +215,10 @@ def constrain_spec(x: jax.Array, spec: P) -> jax.Array:
 
 # (path regex, logical axes per dim) — first match wins (with a rank
 # check).  Paths look like "blocks/0/mixer/wq/w" (joined tree path).
-# The (plus|minus|bits)/scale entries cover OFFLINE-PACKED projection
-# weights (models/packing.py): planes are (n, k/32) uint32 with n = the
-# weight's output dim, scales are (n,).
+# The payload/(plus|minus|bits) entries cover OFFLINE-PACKED projection
+# weights (QTensor leaves, models/packing.py): planes are (n, k/32)
+# uint32 with n = the weight's output dim, scales are (n,).  The payload
+# segment is optional so legacy dict-packed trees resolve identically.
 _PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
     (r"embed$",              ("vocab", "fsdp")),
     (r"lm_head/w$",          ("fsdp", "vocab")),
@@ -233,19 +234,19 @@ _PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
     (r"(A_log|D|dt_bias)$",  ("ssm_heads",)),
     (r"norm$",               ("conv_dim",)),            # ssm gated norm (din,)
     # ---- packed bit-planes (serving) ----
-    (r"(wq|wk|wv)/(plus|minus|bits)$", ("heads", "fsdp")),
+    (r"(wq|wk|wv)/(?:payload/)?(plus|minus|bits)$", ("heads", "fsdp")),
     (r"(wq|wk|wv)/scale$",   ("heads",)),
-    (r"wo/(plus|minus|bits)$", (None, "heads")),
+    (r"wo/(?:payload/)?(plus|minus|bits)$", (None, "heads")),
     (r"wo/scale$",           (None,)),
-    (r"(gate|up)/(plus|minus|bits)$", ("ffn", "fsdp")),
+    (r"(gate|up)/(?:payload/)?(plus|minus|bits)$", ("ffn", "fsdp")),
     (r"(gate|up)/scale$",    ("ffn",)),
     (r"(gate|up)/scale$",    ("expert", "ffn")),        # expert scales (2D)
-    (r"down/(plus|minus|bits)$", (None, "ffn")),
+    (r"down/(?:payload/)?(plus|minus|bits)$", (None, "ffn")),
     (r"down/scale$",         (None,)),
     (r"down/scale$",         ("expert", None)),
-    (r"in_proj/(plus|minus|bits)$", ("conv_dim", "fsdp")),
+    (r"in_proj/(?:payload/)?(plus|minus|bits)$", ("conv_dim", "fsdp")),
     (r"in_proj/scale$",      ("conv_dim",)),
-    (r"out_proj/(plus|minus|bits)$", (None, "ssm_heads")),
+    (r"out_proj/(?:payload/)?(plus|minus|bits)$", (None, "ssm_heads")),
     (r"out_proj/scale$",     (None,)),
 )
 
@@ -253,8 +254,8 @@ _PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
 _PARAM_RULES_3D: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
     (r"(gate|up)/w$",        ("expert", "fsdp", "ffn")),
     (r"down/w$",             ("expert", "ffn", "fsdp")),
-    (r"(gate|up)/(plus|minus|bits)$", ("expert", "ffn", None)),
-    (r"down/(plus|minus|bits)$", ("expert", None, "ffn")),
+    (r"(gate|up)/(?:payload/)?(plus|minus|bits)$", ("expert", "ffn", None)),
+    (r"down/(?:payload/)?(plus|minus|bits)$", ("expert", None, "ffn")),
 )
 
 
@@ -265,23 +266,15 @@ def _path_str(path) -> str:
             parts.append(str(p.key))
         elif hasattr(p, "idx"):
             parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            # GetAttrKey — custom pytree nodes (QTensor.payload/.scale/…)
+            parts.append(str(p.name))
         else:
             parts.append(str(p))
     return "/".join(parts)
 
 
-def param_spec(path, leaf, ctx: Optional[_Active] = None) -> P:
-    s = _path_str(path)
-    # int8-quantized optimizer moments (optim.adamw.Q8): the q/scale
-    # leaves keep the parameter's rank, so the parameter's own rule
-    # applies — strip the trailing component and resolve normally (the
-    # ZeRO-3 moment shards exactly like its parameter; scale's reduced
-    # last dim falls back to replicated via the divisibility check).
-    if s.endswith("/.q") or s.endswith("/q"):
-        s = s.rsplit("/", 1)[0]
-    elif s.endswith("/.scale") or s.endswith("/scale"):
-        s = s.rsplit("/", 1)[0]
-    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+def _match_rules(s: str, leaf, ndim: int, ctx) -> Optional[P]:
     if ndim == 3:
         for pat, axes in _PARAM_RULES_3D:
             if re.search(pat, s):
@@ -297,6 +290,27 @@ def param_spec(path, leaf, ctx: Optional[_Active] = None) -> P:
         for pat, axes in _PARAM_RULES:
             if re.search(pat, s) and len(axes) == ndim - 1:
                 return P(*((None,) + tuple(spec_for(leaf.shape[1:], axes, ctx))))
+    return None
+
+
+def param_spec(path, leaf, ctx: Optional[_Active] = None) -> P:
+    s = _path_str(path)
+    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    # Direct rules first — the packed QTensor scale leaves ("wq/scale",
+    # (n,)) have their own entries and must not be mistaken for moments.
+    spec = _match_rules(s, leaf, ndim, ctx)
+    if spec is not None:
+        return spec
+    # int8-quantized optimizer moments (optim.adamw.Q8): the q/scale
+    # leaves keep the parameter's rank, so the parameter's own rule
+    # applies — strip the trailing component and resolve normally (the
+    # ZeRO-3 moment shards exactly like its parameter; scale's reduced
+    # last dim falls back to replicated via the divisibility check).
+    if s.endswith("/.q") or s.endswith("/q") \
+            or s.endswith("/.scale") or s.endswith("/scale"):
+        spec = _match_rules(s.rsplit("/", 1)[0], leaf, ndim, ctx)
+        if spec is not None:
+            return spec
     return P(*([None] * ndim))
 
 

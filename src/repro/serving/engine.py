@@ -48,11 +48,12 @@ class ServeConfig:
     prefill_bucket: int = 128     # prompts padded up to a multiple of this
     eos_id: int = -1              # -1: only stop at max_new_tokens
     sampler: SamplerConfig = dataclasses.field(default_factory=SamplerConfig)
-    # Pack low-bit projection weights into bit planes at engine build time
-    # (the paper's offline Algorithm 2).  Every projection then runs the
-    # fused quantize/popcount/scale pipeline (ops.fused_qmm) and decode
-    # streams 1/8 (ternary) or 1/16 (binary) of the bf16 weight bytes.
-    # Only meaningful when the model config's quant policy is low-bit.
+    # Pack low-bit projection weights into QTensors at engine build time
+    # (the paper's offline Algorithm 2; models/packing.pack_lm_params).
+    # Every projection then runs the fused quantize/popcount/scale
+    # pipeline (ops.qmm — mode/depth/scale ride inside the QTensor) and
+    # decode streams 1/8 (ternary) or 1/16 (binary) of the bf16 weight
+    # bytes.  Only meaningful when the config's quant policy is low-bit.
     pack_params: bool = False
 
 

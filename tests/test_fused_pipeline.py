@@ -1,11 +1,15 @@
 """Fused packed-inference pipeline vs the unfused three-pass oracle.
 
-The fused path (ops.fused_qmm and the ``*_fused`` kernels) must be
-numerically equivalent to running quantize_activations + packed_matmul +
-the float scale epilogue as separate passes — for every low-bit mode, on
-both the pallas (interpret) and xla backends, including shapes where k
-is not a word multiple and m/n are not block multiples, and across
-multi-step k grids (the epilogue fires at pid_k == num_k - 1 only).
+The fused path (``ops.qmm`` on a packed :class:`QTensor`, backed by the
+``*_fused`` kernels out of the registry) must be numerically equivalent
+to running quantize_activations + packed_matmul + the float scale
+epilogue as separate passes — for every low-bit mode, on every
+registered backend, including shapes where k is not a word multiple and
+m/n are not block multiples, and across multi-step k grids (the epilogue
+fires at pid_k == num_k - 1 only).
+
+Modes and backends are ENUMERATED FROM THE REGISTRY — a newly registered
+kernel is automatically swept by this matrix.
 """
 
 import jax
@@ -15,14 +19,14 @@ import pytest
 
 from repro.core import conv, encoding as enc
 from repro.core.qlinear import QuantLinear
-from repro.kernels import ops
+from repro.kernels import ops, registry
 from repro.kernels.ops import QuantMode
 from repro.kernels.bnn_matmul import bnn_matmul_fused_pallas
 from repro.kernels.tnn_matmul import tnn_matmul_fused_pallas
 from repro.kernels.tbn_matmul import tbn_matmul_fused_pallas
 
-MODES = [QuantMode.BNN, QuantMode.TNN, QuantMode.TBN]
-BACKENDS = ["pallas", "xla", "dense"]
+MODES = registry.modes()                       # every mode with a kernel
+BACKENDS = registry.backends()                 # every registered backend
 # k not a multiple of 32; m/n away from block multiples; plus an aligned
 # control and a shape crossing the default pallas block boundary.
 SHAPES = [
@@ -34,10 +38,20 @@ SHAPES = [
 ]
 
 
-def _unfused_oracle(x, wb, mode, bias=None):
-    xa = ops.quantize_activations(x, mode)
-    acc = ops.packed_matmul(xa, wb, mode, x.shape[-1], backend="xla")
-    y = acc.astype(jnp.float32) * xa["scale"] * wb["scale"][None, :]
+def test_registry_covers_paper_modes():
+    assert set(MODES) == {QuantMode.BNN, QuantMode.TNN, QuantMode.TBN}
+    assert set(BACKENDS) == {"pallas", "xla", "dense"}
+    for m in MODES:
+        for b in BACKENDS:
+            for fused in (False, True):
+                spec = registry.lookup(m, b, fused=fused)
+                assert spec.fn is not None and spec.compute
+
+
+def _unfused_oracle(x, qt, bias=None):
+    xa = ops.quantize_activations(x, qt.mode)
+    acc = ops.packed_matmul(xa, qt, backend="xla")
+    y = acc.astype(jnp.float32) * xa["scale"] * qt.scale[None, :]
     if bias is not None:
         y = y + bias[None, :]
     return y
@@ -50,9 +64,9 @@ def test_fused_matches_unfused(mode, backend, shape, rng):
     m, k, n = shape
     k1, k2 = jax.random.split(rng)
     x = jax.random.normal(k1, (m, k), jnp.float32)
-    wb = ops.pack_weights(jax.random.normal(k2, (k, n), jnp.float32), mode)
-    want = np.asarray(_unfused_oracle(x, wb, mode))
-    got = np.asarray(ops.fused_qmm(x, wb, mode, backend=backend))
+    qt = ops.pack_weights(jax.random.normal(k2, (k, n), jnp.float32), mode)
+    want = np.asarray(_unfused_oracle(x, qt))
+    got = np.asarray(ops.qmm(x, qt, backend=backend))
     assert got.dtype == np.float32
     np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6,
                                err_msg=f"{mode} {backend} {shape}")
@@ -64,10 +78,10 @@ def test_fused_bias_epilogue(mode, backend, rng):
     m, k, n = 9, 70, 11
     k1, k2, k3 = jax.random.split(rng, 3)
     x = jax.random.normal(k1, (m, k), jnp.float32)
-    wb = ops.pack_weights(jax.random.normal(k2, (k, n), jnp.float32), mode)
     bias = jax.random.normal(k3, (n,), jnp.float32)
-    want = np.asarray(_unfused_oracle(x, wb, mode, bias))
-    got = np.asarray(ops.fused_qmm(x, wb, mode, bias, backend=backend))
+    qt = ops.pack_weights(jax.random.normal(k2, (k, n), jnp.float32), mode)
+    want = np.asarray(_unfused_oracle(x, qt, bias))
+    got = np.asarray(ops.qmm(x, qt.replace(bias=bias), backend=backend))
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
@@ -106,8 +120,8 @@ def test_fused_pallas_multi_kstep_epilogue(blocks, mode, rng):
 
 @pytest.mark.parametrize("mode", MODES)
 def test_qlinear_apply_packed_rides_fused(mode, rng):
-    """apply_packed (now one fused dispatch) must keep matching the QAT
-    forward bit-for-bit, bias included."""
+    """apply_packed (now one fused ops.qmm dispatch on a QTensor) must
+    keep matching the QAT forward bit-for-bit, bias included."""
     layer = QuantLinear(96, 24, mode=mode, use_bias=True, backend="xla")
     params = layer.init(rng)
     params["b"] = jnp.linspace(-1, 1, 24, dtype=jnp.float32)
@@ -121,22 +135,42 @@ def test_qlinear_apply_packed_rides_fused(mode, rng):
 @pytest.mark.parametrize("mode", MODES)
 @pytest.mark.parametrize("backend", ["pallas", "xla"])
 def test_conv2d_packed_matches_quantized(mode, backend, rng):
-    """Deployment conv (packed filters + fused GeMM) == QAT conv forward."""
+    """Deployment conv (QTensor filters + fused GeMM) == QAT conv
+    forward — with geometry riding in the QTensor, not a per-call arg."""
     k1, k2 = jax.random.split(rng)
     x = jax.random.normal(k1, (2, 6, 5, 9))       # cin = 9: odd depth
     f = jax.random.normal(k2, (3, 3, 9, 4))
     want = conv.conv2d_quantized(x, f, mode, backend="xla")
     packed = conv.pack_conv_filters(f, mode)
-    got = conv.conv2d_packed(x, packed, mode, backend=backend)
+    assert packed.geometry == (3, 3, 9, 4) and packed.k_valid == 81
+    got = conv.conv2d_packed(x, packed, backend=backend)
     assert got.shape == want.shape
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
 
 
-def test_fused_qmm_rejects_non_lowbit(rng):
+def test_qmm_rejects_bad_inputs(rng):
     x = jax.random.normal(rng, (4, 8))
+    with pytest.raises(TypeError):
+        ops.qmm(x, {"w": x})                  # not a QTensor
     with pytest.raises(ValueError):
-        ops.fused_qmm(x, {"w": x}, QuantMode.F32)
+        ops.fused_qmm(x, {"w": x}, QuantMode.F32)   # legacy non-lowbit
+    qt = ops.pack_weights(jnp.ones((16, 4), jnp.float32), QuantMode.BNN)
+    with pytest.raises(ValueError):
+        ops.qmm(x, qt)                        # depth mismatch 8 vs 16
+
+
+def test_qmm_float_and_affine_modes(rng):
+    """qmm is one coherent API: float passthrough and u8/u4 affine run
+    through the same QTensor entry point."""
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (6, 32), jnp.float32)
+    w = jax.random.normal(k2, (32, 5), jnp.float32)
+    y_ref = np.asarray(x @ w)
+    y_f32 = np.asarray(ops.qmm(x, ops.pack_weights(w, QuantMode.F32)))
+    np.testing.assert_allclose(y_f32, y_ref, rtol=1e-6, atol=1e-6)
+    y_u8 = np.asarray(ops.qmm(x, ops.pack_weights(w, QuantMode.INT8)))
+    np.testing.assert_allclose(y_u8, y_ref, rtol=0.1, atol=0.1)
 
 
 def test_engine_pack_params_serves_fused(rng):
@@ -173,8 +207,22 @@ def test_fused_single_dispatch_contains_scale():
     """The fused jaxpr must carry the dequantization multiply — i.e. the
     scale epilogue really is part of the one traced computation."""
     x = jnp.ones((4, 64), jnp.float32)
-    wb = ops.pack_weights(jnp.ones((64, 8), jnp.float32), QuantMode.BNN)
-    jaxpr = jax.make_jaxpr(
-        lambda x: ops.fused_qmm(x, wb, QuantMode.BNN, backend="xla"))(x)
+    qt = ops.pack_weights(jnp.ones((64, 8), jnp.float32), QuantMode.BNN)
+    jaxpr = jax.make_jaxpr(lambda x: ops.qmm(x, qt, backend="xla"))(x)
     txt = str(jaxpr)
     assert "population_count" in txt and "mul" in txt
+
+
+def test_legacy_fused_qmm_shim_matches_qmm(rng):
+    """The pre-QTensor entry point (legacy dict + explicit mode) must
+    produce bit-identical results through the shim."""
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (5, 40), jnp.float32)
+    w = jax.random.normal(k2, (40, 6), jnp.float32)
+    for mode in MODES:
+        qt = ops.pack_weights(w, mode)
+        legacy = qt.to_legacy_dict()
+        assert isinstance(legacy, dict) and "scale" in legacy
+        y_new = np.asarray(ops.qmm(x, qt, backend="xla"))
+        y_old = np.asarray(ops.fused_qmm(x, legacy, mode, backend="xla"))
+        np.testing.assert_array_equal(y_new, y_old)

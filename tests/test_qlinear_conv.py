@@ -31,12 +31,13 @@ def test_packed_weights_shapes(mode, rng):
     layer = QuantLinear(96, 24, mode=mode)
     packed = layer.pack(layer.init(rng))
     kw = 96 // 32
+    assert packed.mode == mode and packed.shape == (96, 24)
     if mode == QuantMode.TNN:
-        assert packed["plus"].shape == (24, kw)
-        assert packed["minus"].dtype == jnp.uint32
+        assert packed.payload["plus"].shape == (24, kw)
+        assert packed.payload["minus"].dtype == jnp.uint32
     else:
-        assert packed["bits"].shape == (24, kw)
-    assert packed["scale"].shape == (24,)   # per-output-channel
+        assert packed.payload["bits"].shape == (24, kw)
+    assert packed.scale.shape == (24,)   # per-output-channel
 
 
 def test_lowbit_approximates_dense(rng):

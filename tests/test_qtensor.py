@@ -1,0 +1,231 @@
+"""QTensor as a first-class JAX citizen.
+
+* pytree behaviour: tree_map identity, jit, vmap over stacked (expert /
+  scanned) QTensors, lax.scan slicing;
+* checkpoint save -> restore -> qmm equivalence (payload/scale/bias are
+  leaves, mode/shape/geometry ride the treedef);
+* legacy-dict -> QTensor migration produces bit-identical outputs;
+* retrace guard: repeated qmm / conv2d_packed calls with the same
+  QTensor compile exactly once per (shape, mode, backend).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import restore_tree, save_tree
+from repro.core import conv
+from repro.kernels import ops
+from repro.kernels.ops import QuantMode
+from repro.kernels.qtensor import QTensor
+
+MODES = [QuantMode.BNN, QuantMode.TNN, QuantMode.TBN]
+
+
+# ---------------------------------------------------------------------------
+# pytree behaviour
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_tree_map_identity_preserves_type_and_aux(mode, rng):
+    qt = ops.pack_weights(jax.random.normal(rng, (64, 8)), mode)
+    qt2 = jax.tree.map(lambda v: v, qt)
+    assert isinstance(qt2, QTensor)
+    assert qt2.mode == qt.mode and qt2.shape == qt.shape
+    assert qt2.layout == qt.layout and qt2.geometry == qt.geometry
+    for a, b in zip(jax.tree.leaves(qt), jax.tree.leaves(qt2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_treedef_is_hashable_and_stable(rng):
+    """Two QTensors packed from the same logical layer share a treedef —
+    the precondition for the jit cache to hit across calls."""
+    w = jax.random.normal(rng, (32, 4))
+    t1 = jax.tree.structure(ops.pack_weights(w, QuantMode.TNN))
+    t2 = jax.tree.structure(ops.pack_weights(w + 1.0, QuantMode.TNN))
+    assert t1 == t2 and hash(t1) == hash(t2)
+    t3 = jax.tree.structure(ops.pack_weights(w, QuantMode.BNN))
+    assert t1 != t3                       # mode is structural
+
+
+def test_jit_through_qtensor(rng):
+    qt = ops.pack_weights(jax.random.normal(rng, (48, 6)), QuantMode.TBN)
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 48))
+
+    @jax.jit
+    def f(qt, x):
+        return ops.qmm(x, qt)
+
+    np.testing.assert_array_equal(np.asarray(f(qt, x)),
+                                  np.asarray(ops.qmm(x, qt)))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_vmap_over_stacked_qtensor(mode, rng):
+    """Expert-style stacking: vmap(from_dense) packs (E, k, n) into one
+    QTensor with E-leading leaves; vmap(qmm) must equal per-expert qmm."""
+    e, k, n = 3, 64, 5
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (e, k, n))
+    h = jax.random.normal(k2, (e, 4, k))
+    stacked = jax.vmap(lambda ww: QTensor.from_dense(ww, mode))(w)
+    assert isinstance(stacked, QTensor)
+    assert stacked.shape == (k, n)        # aux stays the LOGICAL shape
+    y = jax.vmap(lambda hh, qt: ops.qmm(hh, qt))(h, stacked)
+    for i in range(e):
+        want = ops.qmm(h[i], QTensor.from_dense(w[i], mode))
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_scan_over_stacked_qtensor(rng):
+    """Period-scanned layer stacks: lax.scan slices QTensor leaves per
+    step and keeps the aux — the serving model's packed-params path."""
+    p, k, n = 4, 32, 8
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (p, k, n))
+    stacked = jax.vmap(lambda ww: QTensor.from_dense(ww, QuantMode.TNN))(w)
+    x = jax.random.normal(k2, (2, k))
+
+    def body(carry, qt):
+        y = ops.qmm(carry, qt)
+        return jnp.tanh(y) @ jnp.ones((n, k)) / n, jnp.sum(y)
+
+    _, sums = jax.lax.scan(body, x, stacked)
+    assert sums.shape == (p,) and np.isfinite(np.asarray(sums)).all()
+
+
+# ---------------------------------------------------------------------------
+# conversions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_legacy_dict_migration_bit_identical(mode, rng):
+    """Old anonymous-dict checkpoints migrate through from_legacy_dict to
+    outputs bit-identical with a native pack."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    w = jax.random.normal(k1, (80, 12))
+    bias = jax.random.normal(k3, (12,))
+    x = jax.random.normal(k2, (6, 80))
+    qt = QTensor.from_dense(w, mode, bias=bias)
+    legacy = qt.to_legacy_dict()          # {"bits"/"plus"/"minus","scale","b"}
+    assert "b" in legacy and "scale" in legacy
+    migrated = QTensor.from_legacy_dict(legacy, mode, k_valid=80)
+    assert migrated.shape == qt.shape and migrated.mode == mode
+    np.testing.assert_array_equal(np.asarray(ops.qmm(x, migrated)),
+                                  np.asarray(ops.qmm(x, qt)))
+
+
+def test_legacy_dict_with_geometry_infers_depth(rng):
+    f = jax.random.normal(rng, (3, 3, 5, 4))
+    qt = conv.pack_conv_filters(f, QuantMode.TNN)
+    legacy = qt.to_legacy_dict()
+    assert legacy["geometry"] == (3, 3, 5, 4)
+    migrated = QTensor.from_legacy_dict(legacy, QuantMode.TNN)
+    assert migrated.k_valid == 45 and migrated.geometry == (3, 3, 5, 4)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 6, 6, 5))
+    np.testing.assert_array_equal(
+        np.asarray(conv.conv2d_packed(x, migrated)),
+        np.asarray(conv.conv2d_packed(x, qt)))
+
+
+def test_legacy_dict_requires_depth():
+    w = jnp.ones((32, 4))
+    legacy = QTensor.from_dense(w, QuantMode.BNN).to_legacy_dict()
+    with pytest.raises(ValueError, match="k_valid"):
+        QTensor.from_legacy_dict(legacy, QuantMode.BNN)
+
+
+@pytest.mark.parametrize("mode", MODES + [QuantMode.INT8, QuantMode.F32])
+def test_to_dense_roundtrip_quality(mode, rng):
+    """to_dense reconstructs the dequantized matrix the kernels compute
+    with: qmm(x, qt) must equal x @ qt.to_dense() up to quantized-
+    activation error (exact for F32)."""
+    w = jax.random.normal(rng, (64, 8))
+    qt = QTensor.from_dense(w, mode)
+    wd = qt.to_dense()
+    assert wd.shape == (64, 8)
+    if mode == QuantMode.F32:
+        np.testing.assert_array_equal(np.asarray(wd), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_checkpoint_roundtrip_qmm_equivalence(mode, rng, tmp_path):
+    """A packed parameter tree containing QTensors (with bias) survives
+    save -> restore and serves identical outputs."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    tree = {
+        "proj": QTensor.from_dense(jax.random.normal(k1, (96, 16)), mode,
+                                   bias=jax.random.normal(k3, (16,))),
+        "norm": jnp.ones((96,)),
+    }
+    save_tree(str(tmp_path), 3, tree)
+    restored, _ = restore_tree(str(tmp_path), 3,
+                               jax.eval_shape(lambda: tree))
+    assert isinstance(restored["proj"], QTensor)
+    assert restored["proj"].mode == mode
+    assert restored["proj"].shape == (96, 16)
+    x = jax.random.normal(k2, (4, 96))
+    np.testing.assert_array_equal(
+        np.asarray(ops.qmm(x, restored["proj"])),
+        np.asarray(ops.qmm(x, tree["proj"])))
+
+
+def test_checkpoint_leaf_keys_are_readable(rng, tmp_path):
+    """QTensor fields save under attribute-named keys, so checkpoints
+    stay greppable/debuggable ("proj/payload/bits", not mangled reprs)."""
+    import os
+
+    tree = {"proj": QTensor.from_dense(jax.random.normal(rng, (32, 4)),
+                                       QuantMode.BNN)}
+    save_tree(str(tmp_path), 1, tree)
+    z = np.load(os.path.join(str(tmp_path), "step_000001",
+                             "host_0.npz"))
+    assert "proj/payload/bits" in z.files
+    assert "proj/scale" in z.files
+
+
+# ---------------------------------------------------------------------------
+# retrace guard — the regression test for the old per-call dict rebuild
+# ---------------------------------------------------------------------------
+
+def test_qmm_single_trace_per_shape_mode_backend(rng):
+    """Repeated qmm calls with the same (or an identically-packed)
+    QTensor must hit one compiled computation per (shape, mode, backend);
+    a second shape costs exactly one more trace."""
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (167, 9))       # distinctive dims
+    x = jax.random.normal(k2, (11, 167))
+    for mode in MODES:
+        for backend in ("xla", "pallas"):
+            qt = ops.pack_weights(w, mode)
+            before = ops.qmm_trace_count(mode, backend)
+            for _ in range(4):
+                ops.qmm(x, qt, backend=backend).block_until_ready()
+            # identically-packed container + fresh x: same treedef
+            ops.qmm(x + 1.0, ops.pack_weights(w, mode), backend=backend)
+            assert ops.qmm_trace_count(mode, backend) - before == 1, \
+                f"{mode} {backend} retraced"
+            # a new m changes the shape -> exactly one more trace
+            ops.qmm(x[:7], qt, backend=backend)
+            assert ops.qmm_trace_count(mode, backend) - before == 2
+
+
+def test_conv2d_packed_does_not_retrace(rng):
+    """The old implementation rebuilt the packed dict per call
+    ({k: v for k, v in packed.items() if k != "geometry"}); the QTensor
+    path must reuse one trace across repeated convs."""
+    k1, k2 = jax.random.split(rng)
+    f = jax.random.normal(k1, (3, 3, 5, 6))
+    x = jax.random.normal(k2, (2, 7, 7, 5))
+    packed = conv.pack_conv_filters(f, QuantMode.TNN)
+    conv.conv2d_packed(x, packed)             # warm the cache
+    before = ops.qmm_trace_count(QuantMode.TNN, "xla")
+    for _ in range(5):
+        conv.conv2d_packed(x, packed).block_until_ready()
+    assert ops.qmm_trace_count(QuantMode.TNN, "xla") == before

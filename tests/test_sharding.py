@@ -81,9 +81,28 @@ def test_q8_moment_spec_matches_param():
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     specs = {sharding._path_str(p): sharding.param_spec(p, v, ctx)
              for p, v in flat}
-    assert specs["opt/m/lm_head/w/.q"] == P("data", "model")
+    assert specs["opt/m/lm_head/w/q"] == P("data", "model")
     # scale last dim = 2 blocks: model(4) doesn't divide -> replicated
-    assert specs["opt/m/lm_head/w/.scale"] == P("data", None)
+    assert specs["opt/m/lm_head/w/scale"] == P("data", None)
+
+
+def test_packed_qtensor_plane_specs():
+    """QTensor projection leaves resolve through the packed-plane rules:
+    the payload path segment must not break the wq/bits-style matches."""
+    from repro.kernels.qtensor import QTensor
+    from repro.kernels.ops import QuantMode
+
+    ctx = _Ctx({"data": 4, "model": 4})
+    qt = QTensor.from_dense(jnp.zeros((128, 64)), QuantMode.BNN)
+    tree = {"blocks": [{"mixer": {"wq": qt}}]}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    specs = {sharding._path_str(p): sharding.param_spec(p, v, ctx)
+             for p, v in flat}
+    # bits (n=64, kw=4): n shards over heads(model), kw=4 over fsdp(data)
+    assert specs["blocks/0/mixer/wq/payload/bits"] == P("model", "data")
+    # per-channel scale (n=64,): shards over heads — must NOT be eaten by
+    # the Q8 optimizer-moment '/scale' strip (regression: dead rule)
+    assert specs["blocks/0/mixer/wq/scale"] == P("model")
 
 
 def test_pad_helpers():
