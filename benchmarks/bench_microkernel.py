@@ -106,7 +106,7 @@ def _trace_pipeline(algo: str, fused: bool):
     return jax.make_jaxpr(unfused)(x)
 
 
-def run():
+def run() -> Dict[str, Dict]:
     kmax32 = (1 << 31) - 1
     kmax16 = quantize.k_max(1, 16, signed_unit=True)
     rows = {
@@ -117,6 +117,7 @@ def run():
         "tbn": (kmax32, kmax16),
         "bnn": (kmax32, kmax16),
     }
+    results: Dict[str, Dict] = {}
     kwords = max(K // 32, 1)
     print(f"\nTable II analogue — primitive counts for one "
           f"{M}x{N}x{K} matmul (jaxpr of the XLA path):")
@@ -126,6 +127,7 @@ def run():
         c = _count(_trace(algo))
         ins = (c["COM"] + c["MOV"]) / (M * N * kwords)
         km32, km16 = rows[algo]
+        results[algo] = {**c, "ins_per_elem": ins}
         print(f"{algo:>6s} {c['COM']:6d} {c['MOV']:6d} {c['OTH']:6d} "
               f"{ins:9.4f} {km32!s:>11s} {km16!s:>9s}")
     print("\npaper Table II (ARM NEON, per iteration): "
@@ -141,11 +143,14 @@ def run():
     for algo in ["tnn", "tbn", "bnn"]:
         cf = _count(_trace_pipeline(algo, fused=True))
         cu = _count(_trace_pipeline(algo, fused=False))
+        results[algo]["fused_pipeline"] = cf
+        results[algo]["unfused_pipeline"] = cu
         print(f"{algo:>6s} {cf['COM']:6d} {cf['MOV']:6d} {cf['OTH']:6d}   "
               f"{cu['COM']:8d} {cu['MOV']:8d} {cu['OTH']:8d}")
     print("(the fused trace carries the scale multiply inside the one "
           "computation — on device this removes the int32 (m, n) HBM "
           "round-trip between matmul and rescale)")
+    return results
 
 
 def main():

@@ -1,15 +1,20 @@
 """Benchmark orchestrator — one section per paper table/figure plus the
-roofline report.
+roofline report, with a consolidated JSON artifact tracking the perf
+trajectory across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json BENCH_results.json]
 
 Default is quick-ish (container CPU); --full runs the paper's whole
-H x W x D grid.
+H x W x D grid.  ``--json`` writes every section (microkernel primitive
+counts, Table III ratios, fused-vs-unfused timings, conv timings, and
+the autotuner's tuned-vs-default tiling columns) into ONE file — the CI
+artifact that makes regressions diffable run-over-run.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -18,6 +23,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full Table III grid (slow on 1 CPU core)")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="write the consolidated results of every section "
+                         "to this JSON file (e.g. BENCH_results.json)")
     args = ap.parse_args()
     quick = not args.full
 
@@ -26,19 +34,25 @@ def main():
     print("repro benchmarks — fast low-bit matmul (Trusov et al. 2022) on TPU")
     print("=" * 72)
 
-    print("\n[1/4] Table II analogue — microkernel operation model")
+    results = {}
+
+    print("\n[1/5] Table II analogue — microkernel operation model")
     from benchmarks import bench_microkernel
-    bench_microkernel.run()
+    results["microkernel"] = bench_microkernel.run()
 
-    print("\n[2/4] Table III analogue — matmul speed-ratio matrix")
+    print("\n[2/5] Table III analogue — matmul speed-ratio matrix")
     from benchmarks import bench_matmul
-    bench_matmul.run(quick=quick)
+    results["table3"] = bench_matmul.run(quick=quick)
+    results["fused"] = bench_matmul.run_fused(quick=quick)
 
-    print("\n[3/4] GeMM-based convolution")
+    print("\n[3/5] GeMM-based convolution")
     from benchmarks import bench_conv
-    bench_conv.run(quick=quick)
+    results["conv"] = bench_conv.run(quick=quick)
 
-    print("\n[4/4] Roofline report (from dry-run artifacts, if present)")
+    print("\n[4/5] Autotuned vs default kernel tiling (repro.tune)")
+    results["tuned_vs_default"] = bench_matmul.run_tuned(quick=quick)
+
+    print("\n[5/5] Roofline report (from dry-run artifacts, if present)")
     from benchmarks import roofline
     try:
         rows = roofline.run(mesh="pod")
@@ -47,6 +61,17 @@ def main():
                   "`python -m repro.launch.dryrun` first)")
     except Exception as e:
         print(f"  roofline skipped: {e}")
+
+    if args.json:
+        from repro.tune import cache as plan_cache
+        results["meta"] = {
+            "quick": quick,
+            "device_kind": plan_cache.device_kind(),
+            "plan_cache": plan_cache.get_cache().path,
+        }
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"\nwrote consolidated results to {args.json}")
 
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
     return 0

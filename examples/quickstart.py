@@ -55,8 +55,30 @@ print("TNN  ops.qmm(x, QTensor) == QAT forward")
 # --- 4. the kernel registry: what can run, enumerated --------------------
 print("registered kernels (mode x backend x fused):")
 for spec in registry.available(fused=True):
+    tun = "-" if spec.tunable is None else spec.tunable.kind
     print(f"  {spec.mode.value:4s} {spec.backend:7s} "
-          f"epilogue={spec.epilogue:10s} compute={spec.compute}")
+          f"epilogue={spec.epilogue:10s} compute={spec.compute:12s} "
+          f"tunable={tun}")
+
+# --- 4b. autotuning: per-shape tile search + persistent plan cache -------
+# Tune this (m, n, k) problem once (fixed seeds, median-of-k on the live
+# device); ops.qmm then resolves the tuned blocking from the plan cache
+# at trace time — zero call-site changes.  `python -m repro.tune` runs
+# the same search offline; REPRO_TUNE_CACHE moves the cache file.
+from repro.tune import cache as plan_cache
+from repro.tune import tuner
+
+x2 = jax.random.normal(k2, (48, 256))            # a fresh batch extent
+plan, measured = tuner.ensure_plan(QuantMode.TNN, "xla", fused=True,
+                                   m=48, n=64, k=256, save=False)
+print(f"tuned plan {plan.key}: {plan.tiles.kernel_kwargs()} "
+      f"({'measured' if measured else 'cache hit'})")
+y_tuned = ops.qmm(x2, qt)                        # traces with tuned tiles
+np.testing.assert_allclose(np.asarray(y_tuned),
+                           np.asarray(ops.qmm(x2, qt, backend="dense")),
+                           rtol=1e-5, atol=1e-5)
+print(f"tuned qmm == untuned dense reference (tiling never changes "
+      f"numerics); cache: {plan_cache.get_cache().path}")
 
 # --- 5. the paper's overflow guard, eq. (4)/(5) --------------------------
 print("k_max for 16-bit accumulation of ternary products:",

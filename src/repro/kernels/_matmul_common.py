@@ -32,7 +32,8 @@ back.
 
 from __future__ import annotations
 
-from typing import Sequence
+import dataclasses
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,47 @@ from jax.experimental import pallas as pl
 
 def ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class TileConfig:
+    """One blocking choice for a low-bit matmul kernel.
+
+    ``block_m/block_n/block_kw`` are the Pallas grid tile sizes of
+    :func:`lowbit_matmul_call`; ``word_chunk`` is the number of uint32
+    words consumed per inner k step (the VPU analogue of the paper's
+    8-byte NEON k-step).  The XLA scan kernels honour only
+    ``word_chunk``; the Pallas kernels honour all four.
+    """
+    block_m: int = 128
+    block_n: int = 128
+    block_kw: int = 256
+    word_chunk: int = 8
+
+    def kernel_kwargs(self) -> Dict[str, int]:
+        return {"block_m": self.block_m, "block_n": self.block_n,
+                "block_kw": self.block_kw, "word_chunk": self.word_chunk}
+
+    def to_json(self) -> Dict[str, int]:
+        return self.kernel_kwargs()
+
+    @classmethod
+    def from_json(cls, d: Dict[str, int]) -> "TileConfig":
+        return cls(block_m=int(d["block_m"]), block_n=int(d["block_n"]),
+                   block_kw=int(d["block_kw"]),
+                   word_chunk=int(d["word_chunk"]))
+
+
+# The seed blocking of each mode's kernels (previously triplicated as
+# literal defaults in bnn/tnn/tbn_matmul.py).  BNN streams one bit plane
+# per operand so it affords a deeper k block than the two-plane ternary
+# kernels at the same VMEM budget.  The autotuner's deterministic
+# fallback (repro/tune/cache.py) reads this same table.
+DEFAULT_TILES: Dict[str, TileConfig] = {
+    "bnn": TileConfig(block_m=128, block_n=128, block_kw=512, word_chunk=8),
+    "tnn": TileConfig(block_m=128, block_n=128, block_kw=256, word_chunk=8),
+    "tbn": TileConfig(block_m=128, block_n=128, block_kw=256, word_chunk=8),
+}
 
 
 def pad2d(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:

@@ -25,11 +25,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels._matmul_common import (
+    DEFAULT_TILES,
     lowbit_matmul_call,
     chunked_reduce,
     popcount_i32,
     scale_epilogue,
 )
+
+_TILES = DEFAULT_TILES["bnn"]
 
 __all__ = ["bnn_matmul_pallas", "bnn_matmul_fused_pallas"]
 
@@ -50,10 +53,10 @@ def bnn_matmul_pallas(
     b_bits_t: jnp.ndarray,     # (n, kw) uint32
     k_valid: int,
     *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_kw: int = 512,
-    word_chunk: int = 8,
+    block_m: int = _TILES.block_m,
+    block_n: int = _TILES.block_n,
+    block_kw: int = _TILES.block_kw,
+    word_chunk: int = _TILES.word_chunk,
     interpret: bool = True,
 ) -> jnp.ndarray:
 
@@ -91,10 +94,10 @@ def bnn_matmul_fused_pallas(
     col_scale: jnp.ndarray,    # (1, n) float32
     bias: jnp.ndarray | None = None,   # (1, n) float32
     *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_kw: int = 512,
-    word_chunk: int = 8,
+    block_m: int = _TILES.block_m,
+    block_n: int = _TILES.block_n,
+    block_kw: int = _TILES.block_kw,
+    word_chunk: int = _TILES.word_chunk,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """eq. (6) + eq. (2) in one pass: float32 (m, n) output."""

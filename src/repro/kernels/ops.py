@@ -42,7 +42,10 @@ import jax.numpy as jnp
 # core -> qlinear -> kernels cycle.
 from repro.kernels.modes import DEFAULT_BACKEND, QuantMode
 from repro.kernels import registry
+from repro.kernels._matmul_common import TileConfig
 from repro.kernels.qtensor import PAYLOAD_KEYS, QTensor
+from repro.tune import cache as tune_cache
+from repro.tune.space import PALLAS_SPACE, XLA_SPACE
 
 from repro.core import encoding, quantize
 from repro.kernels import ref as kref
@@ -135,20 +138,26 @@ def _tbn_product(a_sl, b_sl):
     return _pc((ap | bb) & (am | nbb)) - _pc((ap | nbb) & (am | bb))
 
 
-def bnn_matmul_xla(a_bits, b_bits_t, k_valid: int):
-    pc = _chunked_bitwise_matmul(_bnn_product, [a_bits], [b_bits_t])
+def bnn_matmul_xla(a_bits, b_bits_t, k_valid: int, *,
+                   word_chunk: int = _WORD_CHUNK):
+    pc = _chunked_bitwise_matmul(_bnn_product, [a_bits], [b_bits_t],
+                                 word_chunk=word_chunk)
     return jnp.int32(k_valid) - 2 * pc
 
 
-def tnn_matmul_xla(a_plus, a_minus, b_plus_t, b_minus_t, k_valid: int = 0):
+def tnn_matmul_xla(a_plus, a_minus, b_plus_t, b_minus_t, k_valid: int = 0, *,
+                   word_chunk: int = _WORD_CHUNK):
     del k_valid
     return _chunked_bitwise_matmul(_tnn_product, [a_plus, a_minus],
-                                   [b_plus_t, b_minus_t])
+                                   [b_plus_t, b_minus_t],
+                                   word_chunk=word_chunk)
 
 
-def tbn_matmul_xla(a_plus, a_minus, b_bits_t, k_valid: int = 0):
+def tbn_matmul_xla(a_plus, a_minus, b_bits_t, k_valid: int = 0, *,
+                   word_chunk: int = _WORD_CHUNK):
     del k_valid
-    return _chunked_bitwise_matmul(_tbn_product, [a_plus, a_minus], [b_bits_t])
+    return _chunked_bitwise_matmul(_tbn_product, [a_plus, a_minus],
+                                   [b_bits_t], word_chunk=word_chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -165,36 +174,48 @@ def _scale_epilogue_f32(acc, row_scale, col_scale, bias):
 
 
 def bnn_matmul_xla_fused(a_bits, b_bits_t, k_valid: int,
-                         row_scale, col_scale, bias=None):
+                         row_scale, col_scale, bias=None, *,
+                         word_chunk: int = _WORD_CHUNK):
     def epi(pc):
         return _scale_epilogue_f32(jnp.int32(k_valid) - 2 * pc,
                                    row_scale, col_scale, bias)
     return _chunked_bitwise_matmul(_bnn_product, [a_bits], [b_bits_t],
-                                   epilogue=epi)
+                                   word_chunk=word_chunk, epilogue=epi)
 
 
 def tnn_matmul_xla_fused(a_plus, a_minus, b_plus_t, b_minus_t, k_valid: int,
-                         row_scale, col_scale, bias=None):
+                         row_scale, col_scale, bias=None, *,
+                         word_chunk: int = _WORD_CHUNK):
     del k_valid
     def epi(acc):
         return _scale_epilogue_f32(acc, row_scale, col_scale, bias)
     return _chunked_bitwise_matmul(_tnn_product, [a_plus, a_minus],
-                                   [b_plus_t, b_minus_t], epilogue=epi)
+                                   [b_plus_t, b_minus_t],
+                                   word_chunk=word_chunk, epilogue=epi)
 
 
 def tbn_matmul_xla_fused(a_plus, a_minus, b_bits_t, k_valid: int,
-                         row_scale, col_scale, bias=None):
+                         row_scale, col_scale, bias=None, *,
+                         word_chunk: int = _WORD_CHUNK):
     del k_valid
     def epi(acc):
         return _scale_epilogue_f32(acc, row_scale, col_scale, bias)
     return _chunked_bitwise_matmul(_tbn_product, [a_plus, a_minus],
-                                   [b_bits_t], epilogue=epi)
+                                   [b_bits_t], word_chunk=word_chunk,
+                                   epilogue=epi)
 
 
 # ---------------------------------------------------------------------------
 # Kernel registry entries — normalized (a_planes, b_planes, ...) adapters
 # around the mode-specific kernels above.  benchmarks/tests enumerate
 # these; the ROADMAP's dense-Pallas and conv-im2col kernels plug in here.
+#
+# Tunable adapters take a ``tiles=`` keyword (TileConfig).  ``tiles=None``
+# — the dispatch default — resolves the blocking from the autotuning plan
+# cache at TRACE time (repro.tune.cache.plan_for: tuned plan on a cache
+# hit, DEFAULT_TILES otherwise); the tuner passes explicit candidates.
+# Resolution is deterministic per (shape-bucket, cache content), so
+# repeated calls with the same shapes keep hitting one jit trace.
 # ---------------------------------------------------------------------------
 
 def _unpack_operand(planes, k: int, binary: bool):
@@ -203,42 +224,63 @@ def _unpack_operand(planes, k: int, binary: bool):
     return encoding.unpack_ternary(planes[0], planes[1], k, jnp.bfloat16)
 
 
+def _resolve_tiles(mode: QuantMode, backend: str, fused: bool,
+                   a_planes, b_planes, k: int,
+                   tiles: Optional[TileConfig]) -> TileConfig:
+    if tiles is not None:
+        return tiles
+    m = int(a_planes[0].shape[0])
+    n = int(b_planes[0].shape[0])
+    return tune_cache.plan_for(mode, backend, fused=fused,
+                               m=m, n=n, k=int(k)).tiles
+
+
 def _register_all_kernels():
     M = QuantMode
-    pallas_unfused = {
-        M.BNN: lambda a, b, k, *, interpret=True: bnn_matmul_pallas(
-            a[0], b[0], k, interpret=interpret),
-        M.TNN: lambda a, b, k, *, interpret=True: tnn_matmul_pallas(
-            a[0], a[1], b[0], b[1], k, interpret=interpret),
-        M.TBN: lambda a, b, k, *, interpret=True: tbn_matmul_pallas(
-            a[0], a[1], b[0], k, interpret=interpret),
+
+    def make_pallas(mode, kernel, fused):
+        split = 2 if mode in (M.TNN, M.TBN) else 1  # a-side plane count
+
+        def unfused_fn(a, b, k, *, interpret=True, tiles=None):
+            t = _resolve_tiles(mode, "pallas", False, a, b, k, tiles)
+            return kernel(*a[:split], *b, k, interpret=interpret,
+                          **t.kernel_kwargs())
+
+        def fused_fn(a, b, k, r, c, bias, *, interpret=True, tiles=None):
+            t = _resolve_tiles(mode, "pallas", True, a, b, k, tiles)
+            return kernel(*a[:split], *b, k, r, c, bias,
+                          interpret=interpret, **t.kernel_kwargs())
+
+        return fused_fn if fused else unfused_fn
+
+    def make_xla(mode, kernel, fused):
+        def unfused_fn(a, b, k, *, interpret=True, tiles=None):
+            del interpret
+            t = _resolve_tiles(mode, "xla", False, a, b, k, tiles)
+            return kernel(*a, *b, k, word_chunk=t.word_chunk)
+
+        def fused_fn(a, b, k, r, c, bias, *, interpret=True, tiles=None):
+            del interpret
+            t = _resolve_tiles(mode, "xla", True, a, b, k, tiles)
+            return kernel(*a, *b, k, r, c, bias, word_chunk=t.word_chunk)
+
+        return fused_fn if fused else unfused_fn
+
+    pallas_kernels = {
+        (M.BNN, False): bnn_matmul_pallas,
+        (M.BNN, True): bnn_matmul_fused_pallas,
+        (M.TNN, False): tnn_matmul_pallas,
+        (M.TNN, True): tnn_matmul_fused_pallas,
+        (M.TBN, False): tbn_matmul_pallas,
+        (M.TBN, True): tbn_matmul_fused_pallas,
     }
-    pallas_fused = {
-        M.BNN: lambda a, b, k, r, c, bias, *, interpret=True:
-            bnn_matmul_fused_pallas(a[0], b[0], k, r, c, bias,
-                                    interpret=interpret),
-        M.TNN: lambda a, b, k, r, c, bias, *, interpret=True:
-            tnn_matmul_fused_pallas(a[0], a[1], b[0], b[1], k, r, c, bias,
-                                    interpret=interpret),
-        M.TBN: lambda a, b, k, r, c, bias, *, interpret=True:
-            tbn_matmul_fused_pallas(a[0], a[1], b[0], k, r, c, bias,
-                                    interpret=interpret),
-    }
-    xla_unfused = {
-        M.BNN: lambda a, b, k, *, interpret=True: bnn_matmul_xla(
-            a[0], b[0], k),
-        M.TNN: lambda a, b, k, *, interpret=True: tnn_matmul_xla(
-            a[0], a[1], b[0], b[1]),
-        M.TBN: lambda a, b, k, *, interpret=True: tbn_matmul_xla(
-            a[0], a[1], b[0]),
-    }
-    xla_fused = {
-        M.BNN: lambda a, b, k, r, c, bias, *, interpret=True:
-            bnn_matmul_xla_fused(a[0], b[0], k, r, c, bias),
-        M.TNN: lambda a, b, k, r, c, bias, *, interpret=True:
-            tnn_matmul_xla_fused(a[0], a[1], b[0], b[1], k, r, c, bias),
-        M.TBN: lambda a, b, k, r, c, bias, *, interpret=True:
-            tbn_matmul_xla_fused(a[0], a[1], b[0], k, r, c, bias),
+    xla_kernels = {
+        (M.BNN, False): bnn_matmul_xla,
+        (M.BNN, True): bnn_matmul_xla_fused,
+        (M.TNN, False): tnn_matmul_xla,
+        (M.TNN, True): tnn_matmul_xla_fused,
+        (M.TBN, False): tbn_matmul_xla,
+        (M.TBN, True): tbn_matmul_xla_fused,
     }
     ternary_a = {M.BNN: False, M.TNN: True, M.TBN: True}
     ternary_b = {M.BNN: False, M.TNN: True, M.TBN: False}
@@ -246,33 +288,35 @@ def _register_all_kernels():
     for mode in (M.BNN, M.TNN, M.TBN):
         registry.register(
             mode, "pallas", fused=False, epilogue="none",
-            compute="vpu-popcount",
+            compute="vpu-popcount", tunable=PALLAS_SPACE,
             description="Pallas bit-plane kernel, int32 accumulator",
-        )(pallas_unfused[mode])
+        )(make_pallas(mode, pallas_kernels[(mode, False)], fused=False))
         registry.register(
             mode, "pallas", fused=True, epilogue="in-kernel",
-            compute="vpu-popcount",
+            compute="vpu-popcount", tunable=PALLAS_SPACE,
             description="Pallas kernel; eq. (2) epilogue at pid_k==num_k-1",
-        )(pallas_fused[mode])
+        )(make_pallas(mode, pallas_kernels[(mode, True)], fused=True))
         registry.register(
             mode, "xla", fused=False, epilogue="none",
-            compute="vpu-popcount",
+            compute="vpu-popcount", tunable=XLA_SPACE,
             description="k-chunked lax.scan popcount path",
-        )(xla_unfused[mode])
+        )(make_xla(mode, xla_kernels[(mode, False)], fused=False))
         registry.register(
             mode, "xla", fused=True, epilogue="scan-carry",
-            compute="vpu-popcount",
+            compute="vpu-popcount", tunable=XLA_SPACE,
             description="popcount scan; epilogue fused onto the final carry",
-        )(xla_fused[mode])
+        )(make_xla(mode, xla_kernels[(mode, True)], fused=True))
 
-        def dense_unfused(a, b, k, *, interpret=True, _m=mode):
-            del interpret
+        def dense_unfused(a, b, k, *, interpret=True, tiles=None, _m=mode):
+            del interpret, tiles    # XLA picks the dense tiling itself
             av = _unpack_operand(a, k, binary=not ternary_a[_m])
             bv = _unpack_operand(b, k, binary=not ternary_b[_m])
             return jnp.dot(av, bv.T,
                            preferred_element_type=jnp.float32).astype(jnp.int32)
 
-        def dense_fused(a, b, k, r, c, bias, *, interpret=True, _m=mode):
+        def dense_fused(a, b, k, r, c, bias, *, interpret=True, tiles=None,
+                        _m=mode):
+            del tiles
             acc = registry.lookup(_m, "dense", fused=False).fn(
                 a, b, k, interpret=interpret)
             return _scale_epilogue_f32(acc, r, c, bias)
@@ -426,8 +470,10 @@ def qmm_trace_count(mode: QuantMode, backend: str = DEFAULT_BACKEND) -> int:
     return _QMM_TRACES[(mode, backend)]
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
-def _qmm_jit(x, qt: QTensor, backend: str, interpret: bool):
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "interpret", "tiles"))
+def _qmm_jit(x, qt: QTensor, backend: str, interpret: bool,
+             tiles: Optional[TileConfig] = None):
     _QMM_TRACES[(qt.mode, backend)] += 1   # runs at trace time only
     m, k = x.shape
     n = qt.out_features
@@ -447,7 +493,7 @@ def _qmm_jit(x, qt: QTensor, backend: str, interpret: bool):
         spec = registry.lookup(mode, backend, fused=True)
         a_pl = tuple(xa[kk] for kk in _A_KEYS[mode])
         return spec.fn(a_pl, _b_planes(qt, mode), k, row, col, b2,
-                       interpret=interpret)
+                       interpret=interpret, tiles=tiles)
 
     # affine u8/u4: runtime activation calibration + eq. (3) core + eq. (2)
     nbits = 8 if mode == QuantMode.INT8 else 4
@@ -494,8 +540,26 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
         raise ValueError(
             f"depth mismatch: x has k={x.shape[-1]} but QTensor was packed "
             f"with k_valid={qt.k_valid} (logical shape {qt.shape})")
-    return _qmm_jit(x, qt, backend=backend or DEFAULT_BACKEND,
-                    interpret=interpret)
+    backend = backend or DEFAULT_BACKEND
+    tiles = None
+    if qt.is_lowbit:
+        if tune_cache.get_policy() == "on_first_use":
+            # Tune this shape before resolving, so even the very first
+            # call dispatches tuned tiles — a warm plan cache makes this
+            # a pure dict lookup per call.
+            from repro.tune import tuner
+            tuner.ensure_plan(qt.mode, backend, fused=True,
+                              m=int(x.shape[0]), n=qt.out_features,
+                              k=qt.k_valid, interpret=interpret)
+        # Resolve the blocking OUTSIDE the jitted body and pass it as a
+        # static argument: the plan is part of the jit cache key, so a
+        # plan-cache update retraces (tuned tiles really take effect)
+        # while a stable plan keeps hitting one trace per shape.
+        tiles = tune_cache.plan_for(qt.mode, backend, fused=True,
+                                    m=int(x.shape[0]), n=qt.out_features,
+                                    k=qt.k_valid).tiles
+    return _qmm_jit(x, qt, backend=backend, interpret=interpret,
+                    tiles=tiles)
 
 
 def fused_qmm(x: jnp.ndarray, wb, mode: Optional[QuantMode] = None,

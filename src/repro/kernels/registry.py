@@ -13,21 +13,28 @@ Normalized kernel signatures (planes are tuples of uint32 bit-plane
 arrays — 1 plane for binary operands, 2 (plus, minus) for ternary):
 
 * unfused (``fused=False``) — the integer core:
-      fn(a_planes, b_planes, k_valid, *, interpret) -> int32 (m, n)
+      fn(a_planes, b_planes, k_valid, *, interpret, tiles=None)
+          -> int32 (m, n)
 * fused (``fused=True``) — core + eq. (2) scale/bias epilogue:
       fn(a_planes, b_planes, k_valid, row_scale, col_scale, bias, *,
-         interpret) -> float32 (m, n)
+         interpret, tiles=None) -> float32 (m, n)
+
+``tiles`` (a ``TileConfig``) overrides the kernel's blocking; ``None``
+resolves it from the autotuning plan cache at trace time (tuned plan on
+a hit, ``DEFAULT_TILES`` fallback otherwise).  Kernels with no tunable
+blocking (``tunable=None``, e.g. the dense backend) accept and ignore
+the keyword.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.kernels.modes import QuantMode
 
 __all__ = ["KernelSpec", "register", "lookup", "available", "backends",
-           "modes"]
+           "modes", "capability_table"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +48,12 @@ class KernelSpec:
     epilogue: str             # "in-kernel" | "scan-carry" | "xla-fused" | "none"
     compute: str              # "vpu-popcount" | "mxu-dense" | ...
     description: str = ""
+    # Autotuning descriptor (repro.tune.space.TuningSpace) — the set of
+    # (block_m, block_n, block_kw, word_chunk) candidates the tuner may
+    # measure for this kernel.  None means the kernel has no tunable
+    # blocking (e.g. the dense backend, where XLA picks the tiling).
+    # Tunable kernels must accept a ``tiles=`` keyword (TileConfig).
+    tunable: Optional[Any] = None
 
     @property
     def key(self) -> Tuple[QuantMode, str, bool]:
@@ -51,14 +64,15 @@ _REGISTRY: Dict[Tuple[QuantMode, str, bool], KernelSpec] = {}
 
 
 def register(mode: QuantMode, backend: str, *, fused: bool,
-             epilogue: str, compute: str, description: str = ""):
+             epilogue: str, compute: str, description: str = "",
+             tunable: Optional[Any] = None):
     """Decorator: register ``fn`` as THE kernel for (mode, backend, fused).
     Re-registration overwrites (lets tests/backends shadow an entry)."""
 
     def deco(fn: Callable) -> Callable:
         spec = KernelSpec(mode=mode, backend=backend, fused=fused, fn=fn,
                           epilogue=epilogue, compute=compute,
-                          description=description)
+                          description=description, tunable=tunable)
         _REGISTRY[spec.key] = spec
         return fn
 
@@ -96,3 +110,41 @@ def backends(mode: Optional[QuantMode] = None) -> List[str]:
 def modes(backend: Optional[str] = None) -> List[QuantMode]:
     seen = {s.mode for s in available(backend=backend)}
     return sorted(seen, key=lambda m: m.value)
+
+
+def capability_table() -> str:
+    """Human-readable mode x backend x fused x tunable table — the quick
+    triage view behind ``python -m repro.kernels.registry``."""
+    header = (f"{'mode':>5s} {'backend':>8s} {'fused':>6s} {'epilogue':>11s} "
+              f"{'compute':>13s} {'tunable':>18s}  description")
+    lines = [header, "-" * len(header)]
+    for s in available():
+        if s.tunable is None:
+            tun = "-"
+        else:
+            axes = (len(s.tunable.block_m), len(s.tunable.block_n),
+                    len(s.tunable.block_kw), len(s.tunable.word_chunk))
+            tun = f"{s.tunable.kind}({'x'.join(map(str, axes))})"
+        lines.append(f"{s.mode.value:>5s} {s.backend:>8s} "
+                     f"{str(s.fused).lower():>6s} {s.epilogue:>11s} "
+                     f"{s.compute:>13s} {tun:>18s}  {s.description}")
+    return "\n".join(lines)
+
+
+def _main() -> int:
+    # ``python -m repro.kernels.registry`` imports this module as
+    # __main__; the populated table lives in the re-imported instance, so
+    # enumerate through that (importing ops registers every kernel).
+    import repro.kernels.ops  # noqa: F401  (side effect: registration)
+    from repro.kernels import registry as populated
+
+    print(populated.capability_table())
+    n = len(populated.available())
+    print(f"\n{n} kernels registered "
+          f"({len(populated.modes())} modes x {len(populated.backends())} "
+          f"backends; 'tunable' = TuningSpace kind(axis sizes))")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

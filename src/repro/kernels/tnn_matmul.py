@@ -29,11 +29,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels._matmul_common import (
+    DEFAULT_TILES,
     lowbit_matmul_call,
     chunked_reduce,
     popcount_i32,
     scale_epilogue,
 )
+
+_TILES = DEFAULT_TILES["tnn"]
 
 __all__ = ["tnn_matmul_pallas", "tnn_matmul_fused_pallas"]
 
@@ -57,10 +60,10 @@ def tnn_matmul_pallas(
     b_plus_t: jnp.ndarray, b_minus_t: jnp.ndarray,  # (n, kw) uint32
     k_valid: int = 0,
     *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_kw: int = 256,
-    word_chunk: int = 8,
+    block_m: int = _TILES.block_m,
+    block_n: int = _TILES.block_n,
+    block_kw: int = _TILES.block_kw,
+    word_chunk: int = _TILES.word_chunk,
     interpret: bool = True,
 ) -> jnp.ndarray:
     del k_valid  # exact without correction; kept for a uniform signature
@@ -95,10 +98,10 @@ def tnn_matmul_fused_pallas(
     col_scale: jnp.ndarray,    # (1, n) float32
     bias: jnp.ndarray | None = None,   # (1, n) float32
     *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_kw: int = 256,
-    word_chunk: int = 8,
+    block_m: int = _TILES.block_m,
+    block_n: int = _TILES.block_n,
+    block_kw: int = _TILES.block_kw,
+    word_chunk: int = _TILES.word_chunk,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """eq. (7) + eq. (2) in one pass: float32 (m, n) output."""

@@ -55,6 +55,22 @@ class ServeConfig:
     # decode streams 1/8 (ternary) or 1/16 (binary) of the bf16 weight
     # bytes.  Only meaningful when the config's quant policy is low-bit.
     pack_params: bool = False
+    # Kernel autotuning for the packed projections (repro.tune):
+    #   "off"          — dispatch uses cached plans if present, else the
+    #                    DEFAULT_TILES fallback; never measures.
+    #   "offline"      — at engine build, sweep every packed (mode, k, n)
+    #                    problem at the decode m (num_slots) and each
+    #                    prefill bucket m, persisting plans to the cache
+    #                    (REPRO_TUNE_CACHE) before the first request.
+    #   "on_first_use" — each new qmm shape is tuned synchronously on
+    #                    its first call, then served from the cache.
+    # Only meaningful with pack_params=True (QAT-path projections re-pack
+    # per call and keep the default blocking).  The on-first-use switch
+    # is a PROCESS-WIDE policy (ops.qmm has one global dispatch hook):
+    # building a pack_params engine applies its autotune setting to the
+    # process, so a later Engine(..., autotune="off") disarms a policy a
+    # previous "on_first_use" engine left behind.
+    autotune: str = "off"
 
 
 @dataclasses.dataclass
@@ -139,10 +155,16 @@ class Engine:
 
     def __init__(self, params, cfg: ModelConfig, layout: ShardLayout,
                  scfg: ServeConfig, seed: int = 0):
+        if scfg.autotune not in ("off", "offline", "on_first_use"):
+            raise ValueError(
+                f"ServeConfig.autotune must be 'off', 'offline' or "
+                f"'on_first_use', got {scfg.autotune!r}")
         if scfg.pack_params:
             from repro.models.packing import pack_lm_params
             params = pack_lm_params(params, cfg)
         self.params, self.cfg, self.layout, self.scfg = params, cfg, layout, scfg
+        if scfg.pack_params:
+            self._autotune()
         b, L = scfg.num_slots, scfg.max_len
         self.caches = init_caches(cfg, layout, b, L)
         self._prefill_caches = {
@@ -166,6 +188,41 @@ class Engine:
             out.append(s)
             s *= 2
         return out or [self.scfg.max_len]
+
+    # -------------------------------------------------------- autotuning
+
+    def _autotune(self):
+        """Wire the packed projections into the kernel autotuner.
+
+        "offline": tune every distinct packed (mode, k, n) problem at the
+        engine's own matmul m extents — decode runs every projection at
+        m = num_slots (B slots x 1 token), prefill at m = bucket (1
+        prompt x bucket tokens) — and persist the plans, so the first
+        request already traces with tuned tiles.  "on_first_use": arm the
+        process-wide policy and let ops.qmm tune each shape lazily.
+        "off"/"offline": explicitly disarm it — the ServeConfig contract
+        is that an "off" engine never measures at dispatch time, even if
+        an earlier engine in this process armed on-first-use tuning.
+        """
+        from repro.kernels.modes import DEFAULT_BACKEND
+        from repro.tune import cache as tune_cache
+
+        if self.scfg.autotune == "on_first_use":
+            tune_cache.set_policy("on_first_use")
+            return
+        tune_cache.set_policy("off")
+        if self.scfg.autotune == "off":
+            return
+        from repro.tune import tuner
+
+        problems = tuner.collect_problems(self.params)
+        ms = sorted({self.scfg.num_slots, *self._buckets()})
+        for mode, k, n in problems:
+            for m in ms:
+                tuner.ensure_plan(mode, DEFAULT_BACKEND, fused=True,
+                                  m=m, n=n, k=k, save=False)
+        if problems:
+            tune_cache.get_cache().save()
 
     def submit(self, req: Request):
         self.queue.append(req)

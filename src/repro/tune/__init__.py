@@ -1,0 +1,32 @@
+"""Kernel autotuning subsystem: per-shape tile search + persistent plans.
+
+Three layers (see each module's docstring):
+
+* :mod:`repro.tune.space` — ``TuningSpace``: the candidate
+  ``(block_m, block_n, block_kw, word_chunk)`` blockings a kernel
+  declares on its registry entry (``KernelSpec.tunable``);
+* :mod:`repro.tune.tuner` — measures candidates on the live device
+  (fixed seeds, median-of-k) and returns a ``Plan``;
+* :mod:`repro.tune.cache` — persists plans as JSON keyed by
+  ``(mode, backend, fused, device_kind, m-bucket, n, k)`` with atomic
+  writes, an ``REPRO_TUNE_CACHE`` path override and a deterministic
+  ``DEFAULT_TILES`` fallback.
+
+Dispatch integration is zero-call-site-change: the registry adapters in
+``repro.kernels.ops`` consult ``cache.plan_for`` at trace time, so a
+warmed cache re-tiles every ``ops.qmm`` / ``packed_matmul`` without any
+consumer edits.  ``python -m repro.tune`` runs offline sweeps;
+``ServeConfig(autotune=...)`` tunes the serving engine's bucket shapes
+at build.
+
+NOTE: ``tuner`` is intentionally NOT imported here — it reaches into
+``repro.kernels.ops`` (lazily), and ``ops`` imports this package at
+module scope; import ``repro.tune.tuner`` where you call it.
+"""
+
+from repro.tune import cache, space                       # noqa: F401
+from repro.tune.cache import Plan, PlanCache, plan_for    # noqa: F401
+from repro.tune.space import TuningSpace                  # noqa: F401
+
+__all__ = ["cache", "space", "Plan", "PlanCache", "plan_for",
+           "TuningSpace"]

@@ -1,0 +1,99 @@
+"""Offline autotuning sweeps: ``python -m repro.tune``.
+
+    PYTHONPATH=src python -m repro.tune \
+        --shapes 16x256x512 128x256x512 --modes tnn bnn --backends xla \
+        --cache plans.json --report tune_report.json
+
+Measures every (shape x mode x backend) with a registered tunable
+kernel, persists the winning plans to the cache file (atomic write) and
+prints one line per plan.  A second identical run is a pure cache hit:
+it measures nothing (``measured=0`` in the summary line) and re-saves a
+byte-identical plan file — that invariance is the CI tune-smoke gate.
+
+``--report`` additionally dumps the per-candidate timing table (raw
+medians) to a *separate* JSON; timings never enter the plan cache, so
+the cache artifact stays reproducible byte-for-byte.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Tuple
+
+
+def _parse_shape(s: str) -> Tuple[int, int, int]:
+    try:
+        m, n, k = (int(v) for v in s.lower().split("x"))
+        if min(m, n, k) < 1:
+            raise ValueError
+        return m, n, k
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"shape must be MxNxK positive ints, got {s!r}") from None
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune",
+        description="offline per-shape tile search for the low-bit "
+                    "matmul kernels")
+    ap.add_argument("--shapes", type=_parse_shape, nargs="+",
+                    default=[(16, 256, 512), (128, 256, 512)],
+                    metavar="MxNxK",
+                    help="problem shapes (activation m x out n x depth k)")
+    ap.add_argument("--modes", nargs="+",
+                    default=["bnn", "tnn", "tbn"],
+                    help="quantization modes to tune")
+    ap.add_argument("--backends", nargs="+", default=["xla", "pallas"],
+                    help="kernel backends to tune")
+    ap.add_argument("--unfused", action="store_true",
+                    help="tune the unfused integer-core kernels instead "
+                         "of the fused (qmm hot path) ones")
+    ap.add_argument("--cache", type=str, default=None,
+                    help="plan cache path (default: $REPRO_TUNE_CACHE or "
+                         "~/.cache/repro/tune_plans.json)")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="timed repetitions per candidate (median kept)")
+    ap.add_argument("--warmup", type=int, default=2,
+                    help="untimed warmup iterations per candidate")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for the synthesized operands")
+    ap.add_argument("--report", type=str, default=None,
+                    help="also write the per-candidate timing table here")
+    args = ap.parse_args(argv)
+
+    from repro.kernels.modes import QuantMode
+    from repro.tune import cache as plan_cache
+    from repro.tune import tuner
+
+    modes = [QuantMode(m) for m in args.modes]
+    if args.cache:
+        plan_cache.set_cache_path(args.cache)
+    cache = plan_cache.get_cache()
+
+    print(f"tuning {len(args.shapes)} shapes x {args.modes} x "
+          f"{args.backends} ({'unfused' if args.unfused else 'fused'}) "
+          f"on device '{plan_cache.device_kind()}'")
+    _, stats, reports = tuner.tune_shapes(
+        args.shapes, modes, args.backends, fused=not args.unfused,
+        reps=args.reps, warmup=args.warmup, seed=args.seed, verbose=True)
+
+    if args.report:
+        # single measurement pass: the report comes from the same sweep
+        # that chose the persisted plans (cache hits have no fresh
+        # timings and appear as {}), so it can never contradict them
+        with open(args.report, "w") as f:
+            json.dump(reports, f, indent=2, sort_keys=True)
+        print(f"wrote timing report ({len(reports)} measured entries) "
+              f"to {args.report}")
+
+    print(f"tune summary: measured={stats['measured']} "
+          f"cached={stats['cached']} skipped={stats['skipped']} "
+          f"plans={len(cache)} cache={cache.path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

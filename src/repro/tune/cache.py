@@ -1,0 +1,272 @@
+"""Persistent autotuning plan cache.
+
+Plans map one *problem* — ``(mode, backend, fused, device_kind,
+m-bucket, n, k)`` — to the :class:`TileConfig` the tuner selected for
+it.  They persist as one JSON file so offline sweeps (``python -m
+repro.tune``, ``ServeConfig(autotune="offline")``) survive process
+restarts and ship as build artifacts.
+
+Design points:
+
+* **m-bucketing** — activations vary per batch while weights are fixed,
+  so the m axis is bucketed to the next power of two (the serving
+  engine's prefill buckets are already powers of two; decode is a fixed
+  slot count).  n and k identify the packed weight exactly.
+* **atomic writes** — the file is written to a same-directory temp file
+  and ``os.replace``d into place, so a crash mid-save can never leave a
+  torn cache; readers see the old complete file or the new complete
+  file, nothing in between.
+* **canonical serialization** — sorted keys, fixed indentation, no
+  timestamps: re-saving an unchanged cache is byte-identical, which is
+  what makes repeated tuning runs reproducible artifacts.
+* **deterministic fallback** — a lookup miss (or a corrupt/missing
+  cache file) falls back to the mode's ``DEFAULT_TILES`` entry, i.e.
+  exactly the blocking the kernels shipped with before autotuning
+  existed.  A missing cache can therefore never change numerics or
+  regress dispatch below the seed behaviour.
+
+The cache path resolves from the ``REPRO_TUNE_CACHE`` environment
+variable, else ``~/.cache/repro/tune_plans.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import warnings
+from typing import Dict, Optional
+
+from repro.kernels._matmul_common import DEFAULT_TILES, TileConfig
+from repro.kernels.modes import QuantMode
+
+__all__ = ["Plan", "PlanCache", "plan_key", "bucket_m", "device_kind",
+           "default_cache_path", "get_cache", "set_cache_path",
+           "plan_for", "get_policy", "set_policy",
+           "ENV_CACHE_PATH", "SCHEMA_VERSION", "POLICIES"]
+
+ENV_CACHE_PATH = "REPRO_TUNE_CACHE"
+SCHEMA_VERSION = 1
+
+# Runtime autotune policy — what a plan-cache MISS does at dispatch time:
+#   "off"          -> fall back to DEFAULT_TILES (never measure)
+#   "on_first_use" -> ops.qmm tunes the shape synchronously on its first
+#                     call (before tracing), then every later call hits
+#                     the cache
+POLICIES = ("off", "on_first_use")
+_POLICY = "off"
+
+
+def get_policy() -> str:
+    return _POLICY
+
+
+def set_policy(policy: str) -> None:
+    global _POLICY
+    if policy not in POLICIES:
+        raise ValueError(f"autotune policy must be one of {POLICIES}, "
+                         f"got {policy!r}")
+    _POLICY = policy
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One tuned (or default-fallback) blocking decision."""
+    mode: QuantMode
+    backend: str
+    fused: bool
+    device_kind: str
+    m_bucket: int
+    n: int
+    k: int
+    tiles: TileConfig
+    source: str = "tuned"          # "tuned" | "default"
+
+    @property
+    def key(self) -> str:
+        return plan_key(self.mode, self.backend, self.fused,
+                        self.device_kind, self.m_bucket, self.n, self.k)
+
+    def to_json(self) -> Dict:
+        return {"mode": self.mode.value, "backend": self.backend,
+                "fused": self.fused, "device_kind": self.device_kind,
+                "m_bucket": self.m_bucket, "n": self.n, "k": self.k,
+                "tiles": self.tiles.to_json(), "source": self.source}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "Plan":
+        return cls(mode=QuantMode(d["mode"]), backend=str(d["backend"]),
+                   fused=bool(d["fused"]),
+                   device_kind=str(d["device_kind"]),
+                   m_bucket=int(d["m_bucket"]), n=int(d["n"]),
+                   k=int(d["k"]),
+                   tiles=TileConfig.from_json(d["tiles"]),
+                   source=str(d.get("source", "tuned")))
+
+
+def bucket_m(m: int) -> int:
+    """Next power of two >= m (min 8, one TPU sublane group): decode and
+    ragged prefill batches with nearby m share one plan."""
+    b = 8
+    while b < m:
+        b *= 2
+    return b
+
+
+def device_kind() -> str:
+    """Sanitized kind of the default device ("cpu", "tpu-v4", ...)."""
+    import jax
+
+    kind = jax.devices()[0].device_kind
+    return str(kind).strip().lower().replace(" ", "-")
+
+
+def plan_key(mode: QuantMode, backend: str, fused: bool, dev: str,
+             m_bucket: int, n: int, k: int) -> str:
+    fu = "fused" if fused else "unfused"
+    return f"{mode.value}/{backend}/{fu}/{dev}/m{m_bucket}/n{n}/k{k}"
+
+
+def default_cache_path() -> str:
+    env = os.environ.get(ENV_CACHE_PATH)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "tune_plans.json")
+
+
+class PlanCache:
+    """In-memory plan table backed by one atomic JSON file."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._plans: Dict[str, Plan] = {}
+        self._loaded = False
+
+    # -- persistence ---------------------------------------------------------
+
+    def load(self) -> "PlanCache":
+        """(Re)read the backing file.  A missing or corrupt file yields
+        an empty cache (with a warning for corruption) — lookups then
+        fall back to DEFAULT_TILES, they never fail."""
+        self._plans = {}
+        self._loaded = True
+        try:
+            with open(self.path, "r") as f:
+                raw = json.load(f)
+            if not isinstance(raw, dict) or "plans" not in raw:
+                raise ValueError("missing 'plans' table")
+            for key, d in raw["plans"].items():
+                plan = Plan.from_json(d)
+                if plan.key != key:
+                    raise ValueError(f"key mismatch: {key!r} vs computed "
+                                     f"{plan.key!r}")
+                self._plans[key] = plan
+        except FileNotFoundError:
+            pass
+        except (ValueError, KeyError, TypeError, OSError) as e:
+            warnings.warn(
+                f"corrupt tune plan cache at {self.path} ({e}); ignoring "
+                f"it and falling back to DEFAULT_TILES", stacklevel=2)
+            self._plans = {}
+        return self
+
+    def save(self) -> None:
+        """Atomic write: temp file in the destination directory, fsync,
+        ``os.replace``.  A crash at any point leaves the previous cache
+        file fully intact."""
+        # Saving a never-read cache must not wipe existing plans on disk
+        # — load first (the read paths all do; keep save symmetric).
+        self._ensure_loaded()
+        payload = {
+            "version": SCHEMA_VERSION,
+            "plans": {k: p.to_json()
+                      for k, p in sorted(self._plans.items())},
+        }
+        dirname = os.path.dirname(os.path.abspath(self.path)) or "."
+        os.makedirs(dirname, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=".tune_plans.", suffix=".tmp",
+                                   dir=dirname)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+                f.write("\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- table ---------------------------------------------------------------
+
+    def _ensure_loaded(self):
+        if not self._loaded:
+            self.load()
+
+    def get(self, key: str) -> Optional[Plan]:
+        self._ensure_loaded()
+        return self._plans.get(key)
+
+    def put(self, plan: Plan) -> None:
+        self._ensure_loaded()
+        self._plans[plan.key] = plan
+
+    def plans(self) -> Dict[str, Plan]:
+        self._ensure_loaded()
+        return dict(self._plans)
+
+    def __len__(self) -> int:
+        self._ensure_loaded()
+        return len(self._plans)
+
+
+# -- process-wide cache singleton -------------------------------------------
+
+_CACHE: Optional[PlanCache] = None
+
+
+def get_cache() -> PlanCache:
+    global _CACHE
+    if _CACHE is None or _CACHE.path != default_cache_path():
+        # the env override changed (tests do this) -> re-resolve
+        _CACHE = PlanCache()
+    return _CACHE
+
+
+def set_cache_path(path: Optional[str]) -> PlanCache:
+    """Point the process-wide cache at ``path`` (None -> re-resolve from
+    the environment).  Returns the new active cache."""
+    global _CACHE
+    if path is None:
+        os.environ.pop(ENV_CACHE_PATH, None)
+    else:
+        os.environ[ENV_CACHE_PATH] = path
+    _CACHE = PlanCache()
+    return _CACHE
+
+
+def default_plan(mode: QuantMode, backend: str, fused: bool,
+                 m: int, n: int, k: int) -> Plan:
+    """The deterministic no-cache fallback: the mode's seed blocking."""
+    return Plan(mode=mode, backend=backend, fused=fused,
+                device_kind=device_kind(), m_bucket=bucket_m(m), n=n, k=k,
+                tiles=DEFAULT_TILES[mode.value], source="default")
+
+
+def plan_for(mode: QuantMode, backend: str, *, fused: bool,
+             m: int, n: int, k: int) -> Plan:
+    """Dispatch-time lookup (pure: never measures).  Called by the
+    registry adapters at trace time — a cache hit returns the tuned
+    tiles, a miss the DEFAULT_TILES fallback.  Deterministic per
+    (shape-bucket, cache content), so repeated traces of the same shape
+    resolve to the same blocking and the jit cache keeps hitting."""
+    key = plan_key(mode, backend, fused, device_kind(), bucket_m(m), n, k)
+    hit = get_cache().get(key)
+    if hit is not None:
+        return hit
+    return default_plan(mode, backend, fused, m, n, k)

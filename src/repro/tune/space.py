@@ -1,0 +1,136 @@
+"""Tuning spaces: the candidate blockings the autotuner may measure.
+
+The paper's throughput comes from hardware-matched blocking — the 16x8
+register microkernel and the L1/L2 cache block sizes of Algorithm 2 are
+chosen for the Cortex-A73, and the 4-bit predecessor (arXiv:2009.06488)
+makes the same point: block geometry, not the bit-trick alone, decides
+speed.  Our Pallas/XLA kernels expose the analogous knobs as a
+:class:`~repro.kernels._matmul_common.TileConfig`; a :class:`TuningSpace`
+is the per-:class:`~repro.kernels.registry.KernelSpec` declaration of
+which ``(block_m, block_n, block_kw, word_chunk)`` combinations are
+worth trying.
+
+Candidates are validated and *normalized* against the grid/padding
+constraints of ``_matmul_common.lowbit_matmul_call`` before they are
+measured:
+
+* ``block_kw`` is clamped to ``ceil_to(min(block_kw, max(wc, kw)), wc)``
+  — exactly the clamp the kernel applies, so two raw candidates that the
+  kernel would execute identically dedupe to one measurement;
+* ``block_m``/``block_n`` are clamped to the padded operand extents
+  (sublane multiple 8 / lane multiple 128 — the TPU f32 tile minima), so
+  a 128-row block is never measured against an 8-row matrix;
+* XLA scan kernels honour only ``word_chunk`` (``kind="xla"``): the
+  block axes collapse to the default and ``word_chunk`` is clamped to
+  the word count like ``_chunked_bitwise_matmul`` does.
+
+Every candidate list contains the mode's ``DEFAULT_TILES`` entry (first,
+after normalization), so a tuned plan can never select a blocking worse
+than the untuned default — at worst the default wins its own bake-off.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Tuple
+
+from repro.kernels._matmul_common import TileConfig, ceil_to
+
+__all__ = ["TuningSpace", "PALLAS_SPACE", "XLA_SPACE", "words_for"]
+
+_SUBLANE = 8      # f32 sublane multiple (second-to-last dim)
+_LANE = 128       # lane multiple (last dim)
+
+
+def words_for(k: int) -> int:
+    """uint32 words covering a logical reduction depth of ``k``."""
+    return max(1, ceil_to(k, 32) // 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningSpace:
+    """Candidate axes for one kernel's blocking.
+
+    ``kind`` selects the normalization semantics: ``"pallas"`` kernels
+    honour all four axes, ``"xla"`` kernels only ``word_chunk``.
+    """
+    kind: str = "pallas"                               # "pallas" | "xla"
+    block_m: Tuple[int, ...] = (8, 32, 128)
+    block_n: Tuple[int, ...] = (128, 256)
+    block_kw: Tuple[int, ...] = (128, 256, 512)
+    word_chunk: Tuple[int, ...] = (4, 8, 16)
+
+    def __post_init__(self):
+        if self.kind not in ("pallas", "xla"):
+            raise ValueError(f"unknown TuningSpace kind {self.kind!r}")
+        for name in ("block_m", "block_n", "block_kw", "word_chunk"):
+            vals = getattr(self, name)
+            if not vals or any(v < 1 for v in vals):
+                raise ValueError(f"TuningSpace.{name} must be non-empty "
+                                 f"positive ints, got {vals}")
+        if any(v % _SUBLANE for v in self.block_m):
+            raise ValueError(f"block_m candidates must be multiples of "
+                             f"{_SUBLANE}, got {self.block_m}")
+        if any(v % _LANE for v in self.block_n):
+            raise ValueError(f"block_n candidates must be multiples of "
+                             f"{_LANE}, got {self.block_n}")
+
+    # -- normalization -------------------------------------------------------
+
+    def normalize(self, tc: TileConfig, m: int, n: int, k: int) -> TileConfig:
+        """The blocking the kernel would *actually* run for this shape —
+        the dedupe key that keeps the measured set minimal."""
+        kw = words_for(k)
+        if self.kind == "xla":
+            d = TileConfig()
+            return TileConfig(block_m=d.block_m, block_n=d.block_n,
+                              block_kw=d.block_kw,
+                              word_chunk=min(tc.word_chunk, kw))
+        wc = tc.word_chunk
+        bkw = ceil_to(min(tc.block_kw, max(wc, kw)), wc)
+        bm = min(tc.block_m, ceil_to(m, _SUBLANE))
+        bn = min(tc.block_n, ceil_to(n, _LANE))
+        return TileConfig(block_m=bm, block_n=bn, block_kw=bkw,
+                          word_chunk=wc)
+
+    # -- enumeration ---------------------------------------------------------
+
+    def candidates(self, m: int, n: int, k: int, *,
+                   default: TileConfig) -> List[TileConfig]:
+        """Deduped, validated candidate list for one (m, n, k) problem.
+
+        Candidate 0 is the **raw** default — bit-for-bit the blocking an
+        untuned cache-miss dispatch executes (no normalization: Pallas
+        pads m up to ``block_m``, so a clamped variant is a *different*,
+        usually faster schedule and enters the bake-off as its own
+        candidate).  Then the axis product, normalized and deduped, in
+        declaration order.  Deterministic order + argmin-with-earliest-
+        tie-break means repeated tuning runs on the same device pick the
+        same plan, and the tuned plan can never lose to the true
+        untuned baseline.
+        """
+        out: List[TileConfig] = [default]
+        seen = set()
+        if self.kind == "xla" or self.normalize(default, m, n, k) == default:
+            # the normalized form executes identically to the raw
+            # default (xla clamps word_chunk internally; pallas only
+            # when normalization was a no-op) — don't measure it twice
+            seen.add(self.normalize(default, m, n, k))
+        for bm, bn, bkw, wc in itertools.product(
+                self.block_m, self.block_n, self.block_kw,
+                self.word_chunk):
+            eff = self.normalize(TileConfig(bm, bn, bkw, wc), m, n, k)
+            if eff not in seen:
+                seen.add(eff)
+                out.append(eff)
+        return out
+
+
+# The shared spaces the built-in kernels register with.  Small on
+# purpose: the Pallas kernels run in interpret mode on CPU containers,
+# so every extra candidate is a Python-loop grid sweep.
+PALLAS_SPACE = TuningSpace(kind="pallas")
+XLA_SPACE = TuningSpace(kind="xla",
+                        block_m=(128,), block_n=(128,), block_kw=(256,),
+                        word_chunk=(2, 4, 8, 16, 32))

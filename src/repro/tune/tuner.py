@@ -1,0 +1,225 @@
+"""The measuring half of the autotuner: run each candidate blocking on
+the live device, keep the median-of-k wall time, return a
+:class:`~repro.tune.cache.Plan`.
+
+Determinism contract (the "shape-stable" acceptance bar):
+
+* operands are synthesized from a fixed PRNG seed, so every run measures
+  the same bits;
+* candidate order is deterministic (``TuningSpace.candidates``: default
+  first, then the axis product) and the winner is the argmin of median
+  times with ties resolving to the *earlier* candidate;
+* the persisted JSON carries only the decision (tiles + key), never the
+  raw timings, so a re-run that reaches the same decision re-saves a
+  byte-identical file — and a re-run against a warm cache measures
+  nothing at all.
+
+The tuner times the *registered kernel entry* (``KernelSpec.fn`` with an
+explicit ``tiles=`` override), i.e. exactly the code path ``ops.qmm``
+dispatches to, on the same device and with the same ``interpret``
+setting — not a proxy model.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels import registry
+from repro.kernels.modes import QuantMode
+from repro.tune import cache as plan_cache
+from repro.tune.space import TuningSpace
+
+# NOTE: repro.kernels.ops / repro.core are imported lazily inside the
+# functions below — ops imports this package's siblings at module scope,
+# and repro.core's own __init__ re-enters ops; a top-level import here
+# would close that cycle during interpreter start-up.
+
+__all__ = ["tune_one", "ensure_plan", "tune_shapes", "collect_problems",
+           "measure"]
+
+
+def measure(call, *, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall time of ``call()`` (which must return a JAX array).
+    The warmup iterations absorb compilation; reps are timed
+    individually so one scheduler hiccup cannot skew the median."""
+    for _ in range(max(1, warmup)):
+        call().block_until_ready()
+    ts = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        call().block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _make_problem(mode: QuantMode, m: int, n: int, k: int, seed: int):
+    """Fixed-seed packed operands for one (mode, m, n, k) problem:
+    (a_planes, b_planes, row_scale, col_scale)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    w = jax.random.normal(k2, (k, n), jnp.float32)
+    xa = ops.quantize_activations(x, mode)
+    qt = ops.pack_weights(w, mode)
+    a_planes = tuple(xa[key] for key in ops._A_KEYS[mode])
+    b_planes = ops._b_planes(qt, mode)
+    row = ops._as_row_scale(xa["scale"], m)
+    col = ops._as_col_vec(qt.scale, n)
+    return a_planes, b_planes, row, col
+
+
+def tune_one(mode: QuantMode, backend: str, *, fused: bool = True,
+             m: int, n: int, k: int,
+             space: Optional[TuningSpace] = None,
+             reps: int = 3, warmup: int = 1, seed: int = 0,
+             interpret: bool = True,
+             ) -> Tuple[plan_cache.Plan, Dict]:
+    """Measure every candidate blocking for one problem and return the
+    winning :class:`Plan` plus a per-candidate timing report.
+
+    The problem is measured at its **m-bucket** (the plan's cache
+    granularity), so every shape that later resolves to this plan was
+    represented by the measurement.
+    """
+    spec = registry.lookup(mode, backend, fused=fused)
+    space = space if space is not None else spec.tunable
+    mb = plan_cache.bucket_m(m)
+    if space is None:
+        # untunable kernel: the default plan IS the decision
+        plan = plan_cache.default_plan(mode, backend, fused, m, n, k)
+        return plan, {"candidates": [], "best_index": -1,
+                      "untunable": True}
+    default = plan_cache.default_plan(mode, backend, fused, m, n, k).tiles
+    cands = space.candidates(mb, n, k, default=default)
+    a_pl, b_pl, row, col = _make_problem(mode, mb, n, k, seed)
+
+    import jax
+
+    times: List[float] = []
+    for tc in cands:
+        # Measure the jitted kernel — the form ops.qmm dispatches (its
+        # whole pipeline is one jit trace); timing eager dispatch would
+        # rank candidates by Python overhead instead of kernel time.
+        if fused:
+            jfn = jax.jit(lambda a, b, r, c, tc=tc: spec.fn(
+                a, b, k, r, c, None, interpret=interpret, tiles=tc))
+            call = lambda jfn=jfn: jfn(a_pl, b_pl, row, col)
+        else:
+            jfn = jax.jit(lambda a, b, tc=tc: spec.fn(
+                a, b, k, interpret=interpret, tiles=tc))
+            call = lambda jfn=jfn: jfn(a_pl, b_pl)
+        times.append(measure(call, warmup=warmup, reps=reps))
+
+    best = int(np.argmin(times))          # ties -> earliest candidate
+    plan = plan_cache.Plan(
+        mode=mode, backend=backend, fused=fused,
+        device_kind=plan_cache.device_kind(), m_bucket=mb, n=n, k=k,
+        tiles=cands[best], source="tuned")
+    report = {
+        "candidates": [{"tiles": tc.to_json(), "median_s": t}
+                       for tc, t in zip(cands, times)],
+        "best_index": best,
+        "default_s": times[0],            # candidate 0 is the default
+        "best_s": times[best],
+    }
+    return plan, report
+
+
+def ensure_plan(mode: QuantMode, backend: str, *, fused: bool = True,
+                m: int, n: int, k: int,
+                reps: int = 3, warmup: int = 1, seed: int = 0,
+                interpret: bool = True, save: bool = True,
+                reports: Optional[Dict[str, Dict]] = None,
+                ) -> Tuple[plan_cache.Plan, bool]:
+    """Cache-or-measure: returns ``(plan, measured)``.  A warm cache is a
+    pure dict lookup — this is what ``ops.qmm`` calls per invocation
+    under the "on_first_use" policy, so the hit path must stay cheap.
+
+    ``reports`` (optional dict) collects the per-candidate timing table
+    of every measurement actually performed, keyed by plan key — the
+    single-pass source for ``python -m repro.tune --report`` (re-running
+    the sweep just for the report could crown a different winner on
+    timing noise and contradict the persisted plan)."""
+    cache = plan_cache.get_cache()
+    key = plan_cache.plan_key(mode, backend, fused,
+                              plan_cache.device_kind(),
+                              plan_cache.bucket_m(m), n, k)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit, False
+    plan, report = tune_one(mode, backend, fused=fused, m=m, n=n, k=k,
+                            reps=reps, warmup=warmup, seed=seed,
+                            interpret=interpret)
+    if reports is not None:
+        reports[plan.key] = report
+    cache.put(plan)
+    if save:
+        cache.save()
+    return plan, True
+
+
+def tune_shapes(shapes: Iterable[Tuple[int, int, int]],
+                modes: Sequence[QuantMode],
+                backends: Sequence[str], *,
+                fused: bool = True, reps: int = 3, warmup: int = 1,
+                seed: int = 0, interpret: bool = True,
+                verbose: bool = False,
+                ) -> Tuple[List[plan_cache.Plan], Dict[str, int],
+                           Dict[str, Dict]]:
+    """Offline sweep: ensure a plan for every (shape x mode x backend)
+    that has a registered tunable kernel.  Returns ``(plans, stats,
+    reports)``: ``{"measured": .., "cached": ..}`` stats (the CI smoke
+    gate asserts a second run reports measured == 0) and the
+    per-candidate timing tables of the entries measured in THIS run."""
+    plans: List[plan_cache.Plan] = []
+    stats = {"measured": 0, "cached": 0, "skipped": 0}
+    reports: Dict[str, Dict] = {}
+    for (m, n, k) in shapes:
+        for mode in modes:
+            for backend in backends:
+                try:
+                    spec = registry.lookup(mode, backend, fused=fused)
+                except KeyError:
+                    stats["skipped"] += 1
+                    continue
+                if spec.tunable is None:
+                    stats["skipped"] += 1
+                    continue
+                plan, measured = ensure_plan(
+                    mode, backend, fused=fused, m=m, n=n, k=k,
+                    reps=reps, warmup=warmup, seed=seed,
+                    interpret=interpret, save=False, reports=reports)
+                stats["measured" if measured else "cached"] += 1
+                plans.append(plan)
+                if verbose:
+                    src = "measured" if measured else "cache-hit"
+                    print(f"  {plan.key:<46s} -> {plan.tiles.kernel_kwargs()}"
+                          f"  [{src}]")
+    cache = plan_cache.get_cache()
+    cache.save()
+    return plans, stats, reports
+
+
+def collect_problems(params) -> List[Tuple[QuantMode, int, int]]:
+    """All distinct (mode, k, n) packed-weight problems in a parameter
+    tree — what the serving engine tunes at build time.  Stacked
+    (scanned / expert) QTensors contribute their logical 2-D shape."""
+    import jax
+
+    from repro.kernels.qtensor import QTensor
+
+    seen = []
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor) and leaf.is_lowbit:
+            prob = (leaf.mode, leaf.k_valid, leaf.out_features)
+            if prob not in seen:
+                seen.append(prob)
+    return seen

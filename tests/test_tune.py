@@ -1,0 +1,399 @@
+"""The autotuning subsystem (repro.tune): tuning spaces, the plan cache
+(JSON round-trip, atomic-write crash safety, corrupt-cache fallback),
+tuned dispatch through ops.qmm (retrace guard), the on-first-use policy,
+the offline CLI (second run = pure byte-identical cache hit) and the
+serving engine's build-time sweep."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, registry
+from repro.kernels._matmul_common import DEFAULT_TILES, TileConfig
+from repro.kernels.ops import QuantMode
+from repro.tune import cache as plan_cache
+from repro.tune import tuner
+from repro.tune.__main__ import main as tune_cli
+from repro.tune.space import TuningSpace
+
+MODES = [QuantMode.BNN, QuantMode.TNN, QuantMode.TBN]
+
+
+@pytest.fixture
+def tcache(tmp_path):
+    """Isolated plan cache per test; restores the prior cache path and
+    switches the runtime policy back off afterwards."""
+    prev_env = os.environ.get(plan_cache.ENV_CACHE_PATH)
+    cache = plan_cache.set_cache_path(str(tmp_path / "plans.json"))
+    yield cache
+    plan_cache.set_policy("off")
+    plan_cache.set_cache_path(prev_env)
+
+
+def _mk_plan(mode=QuantMode.TNN, backend="xla", m=16, n=32, k=256,
+             tiles=TileConfig(word_chunk=2), fused=True, source="tuned"):
+    return plan_cache.Plan(
+        mode=mode, backend=backend, fused=fused,
+        device_kind=plan_cache.device_kind(),
+        m_bucket=plan_cache.bucket_m(m), n=n, k=k, tiles=tiles,
+        source=source)
+
+
+# ---------------------------------------------------------------------------
+# tuning space
+# ---------------------------------------------------------------------------
+
+def test_candidates_raw_default_first_then_normalized():
+    space = TuningSpace(kind="pallas")
+    default = DEFAULT_TILES["tnn"]
+    cands = space.candidates(16, 128, 256, default=default)
+    # candidate 0 is the RAW default — exactly what an untuned cache
+    # miss dispatches (pallas pads m up to block_m, so the clamped
+    # variant is a different schedule and competes separately)
+    assert cands[0] == default
+    assert space.normalize(default, 16, 128, 256) in cands[1:]
+    assert len(set(cands)) == len(cands)           # deduped
+    for tc in cands[1:]:
+        assert tc.block_kw % tc.word_chunk == 0    # kernel k-step constraint
+        assert tc.block_m <= 16 and tc.block_m % 8 == 0
+        assert tc.block_n == 128
+    # determinism: same call, same order
+    assert cands == space.candidates(16, 128, 256, default=default)
+
+
+def test_xla_space_only_word_chunk_varies():
+    space = TuningSpace(kind="xla", word_chunk=(2, 4, 8, 16, 32))
+    cands = space.candidates(8, 64, 96, default=DEFAULT_TILES["bnn"])
+    assert cands[0] == DEFAULT_TILES["bnn"]
+    # k=96 -> 3 words: chunks clamp to <= 3, block axes collapse, and
+    # the raw default (wc=8 -> executes as 3) dedupes the wc>=3 product
+    assert [tc.word_chunk for tc in cands[1:]] == [2]
+    assert len({(tc.block_m, tc.block_n, tc.block_kw)
+                for tc in cands[1:]}) == 1
+
+
+def test_space_validates_axes():
+    with pytest.raises(ValueError, match="kind"):
+        TuningSpace(kind="cuda")
+    with pytest.raises(ValueError, match="block_m"):
+        TuningSpace(block_m=(12,))
+    with pytest.raises(ValueError, match="block_n"):
+        TuningSpace(block_n=(64,))
+    with pytest.raises(ValueError, match="word_chunk"):
+        TuningSpace(word_chunk=())
+
+
+def test_registry_declares_tunables():
+    for mode in MODES:
+        for backend, fused in (("pallas", True), ("pallas", False),
+                               ("xla", True), ("xla", False)):
+            assert registry.lookup(mode, backend,
+                                   fused=fused).tunable is not None
+        assert registry.lookup(mode, "dense", fused=True).tunable is None
+    table = registry.capability_table()
+    assert "pallas" in table and "tunable" in table
+
+
+# ---------------------------------------------------------------------------
+# plan cache: round-trip / atomicity / corruption
+# ---------------------------------------------------------------------------
+
+def test_plan_json_roundtrip(tcache):
+    p1 = _mk_plan()
+    p2 = _mk_plan(mode=QuantMode.BNN, backend="pallas",
+                  tiles=TileConfig(8, 128, 64, 4), m=5, n=8, k=64)
+    tcache.put(p1)
+    tcache.put(p2)
+    tcache.save()
+    fresh = plan_cache.PlanCache(tcache.path).load()
+    assert len(fresh) == 2
+    assert fresh.get(p1.key) == p1
+    assert fresh.get(p2.key) == p2
+    # canonical serialization: re-saving unchanged plans is byte-identical
+    before = open(tcache.path, "rb").read()
+    fresh.save()
+    assert open(tcache.path, "rb").read() == before
+
+
+def test_atomic_write_crash_leaves_old_cache_intact(tcache, monkeypatch):
+    p1 = _mk_plan()
+    tcache.put(p1)
+    tcache.save()
+    good = open(tcache.path, "rb").read()
+
+    def boom(*a, **kw):
+        raise RuntimeError("simulated crash mid-serialization")
+
+    monkeypatch.setattr(plan_cache.json, "dump", boom)
+    tcache.put(_mk_plan(mode=QuantMode.BNN))
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        tcache.save()
+    # the published file is untouched and still loads; the temp file of
+    # the failed write was cleaned up
+    assert open(tcache.path, "rb").read() == good
+    assert plan_cache.PlanCache(tcache.path).load().get(p1.key) == p1
+    leftovers = [f for f in os.listdir(os.path.dirname(tcache.path))
+                 if f.endswith(".tmp")]
+    assert leftovers == []
+
+
+def test_corrupt_cache_falls_back_to_default(tcache):
+    with open(tcache.path, "w") as f:
+        f.write('{"version": 1, "plans": {"oops": not json')
+    with pytest.warns(UserWarning, match="corrupt tune plan cache"):
+        fresh = plan_cache.PlanCache(tcache.path).load()
+    assert len(fresh) == 0
+    plan = plan_cache.plan_for(QuantMode.TNN, "pallas", fused=True,
+                               m=16, n=32, k=256)
+    assert plan.source == "default"
+    assert plan.tiles == DEFAULT_TILES["tnn"]
+
+
+def test_corrupt_entry_and_key_mismatch_rejected(tcache):
+    p = _mk_plan()
+    payload = {"version": 1, "plans": {"wrong/key": p.to_json()}}
+    with open(tcache.path, "w") as f:
+        json.dump(payload, f)
+    with pytest.warns(UserWarning, match="key mismatch"):
+        fresh = plan_cache.PlanCache(tcache.path).load()
+    assert len(fresh) == 0
+
+
+def test_save_on_unread_cache_preserves_existing_plans(tcache):
+    """save() on a cache object that never loaded must not wipe plans
+    already on disk (the read paths lazily load; save is symmetric)."""
+    p = _mk_plan()
+    tcache.put(p)
+    tcache.save()
+    fresh = plan_cache.PlanCache(tcache.path)       # constructed, never read
+    fresh.save()
+    assert plan_cache.PlanCache(tcache.path).load().get(p.key) == p
+
+
+def test_missing_cache_gives_deterministic_default(tcache):
+    a = plan_cache.plan_for(QuantMode.BNN, "xla", fused=True,
+                            m=7, n=16, k=128)
+    b = plan_cache.plan_for(QuantMode.BNN, "xla", fused=True,
+                            m=7, n=16, k=128)
+    assert a == b and a.source == "default"
+    assert a.tiles == DEFAULT_TILES["bnn"]
+    assert a.m_bucket == 8                     # power-of-two m bucketing
+
+
+# ---------------------------------------------------------------------------
+# tuned dispatch: plans are honoured, traces don't multiply
+# ---------------------------------------------------------------------------
+
+def test_dispatch_consults_plan_cache_at_trace_time(tcache):
+    """With a plan in the cache, tiles=None dispatch lowers exactly like
+    an explicit tiles=<plan tiles> call — and differently from the
+    default blocking (word_chunk changes the scan structure)."""
+    mode, m, n, k = QuantMode.TNN, 16, 32, 512          # kw = 16 words
+    tuned = TileConfig(word_chunk=2)
+    tcache.put(_mk_plan(mode=mode, backend="xla", m=m, n=n, k=k,
+                        tiles=tuned))
+    spec = registry.lookup(mode, "xla", fused=True)
+    a_pl, b_pl, row, col = tuner._make_problem(mode, m, n, k, seed=0)
+
+    def jx(tiles):
+        return str(jax.make_jaxpr(
+            lambda: spec.fn(a_pl, b_pl, k, row, col, None,
+                            tiles=tiles))())
+
+    assert jx(None) == jx(tuned)
+    assert jx(None) != jx(DEFAULT_TILES["tnn"])
+
+
+def test_qmm_tuned_single_trace_per_shape(tcache, rng):
+    """Cache hits must not multiply traces: repeated qmm calls on a
+    tuned shape compile once per (shape, mode, backend)."""
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (131, 10))
+    x = jax.random.normal(k2, (13, 131))
+    for mode in MODES:
+        for backend in ("xla", "pallas"):
+            tcache.put(_mk_plan(
+                mode=mode, backend=backend, m=13, n=10, k=131,
+                tiles=TileConfig(block_m=16, block_n=128, block_kw=8,
+                                 word_chunk=4)))
+            qt = ops.pack_weights(w, mode)
+            before = ops.qmm_trace_count(mode, backend)
+            for _ in range(4):
+                ops.qmm(x, qt, backend=backend).block_until_ready()
+            ops.qmm(x + 1.0, ops.pack_weights(w, mode), backend=backend)
+            assert ops.qmm_trace_count(mode, backend) - before == 1, \
+                f"{mode} {backend} retraced on a plan-cache hit"
+
+
+def test_qmm_tuned_matches_default_numerics(tcache, rng):
+    """Tuning only re-tiles the schedule — outputs stay identical to the
+    untuned dispatch on every backend.  The plans are inserted BEFORE
+    the first qmm call on this (unique) shape, so the first — and only —
+    trace really lowers the tuned tiles (the jit cache would otherwise
+    keep serving a default-tiled trace)."""
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (173, 9))
+    x = jax.random.normal(k2, (11, 173))
+    for mode in MODES:
+        for backend in ("xla", "pallas"):
+            tcache.put(_mk_plan(
+                mode=mode, backend=backend, m=11, n=9, k=173,
+                tiles=TileConfig(block_m=8, block_n=128, block_kw=12,
+                                 word_chunk=2)))
+        qt = ops.pack_weights(w, mode)
+        # the dense backend ignores tiling: untuned reference (exact —
+        # ±1/0 operands are exact in bf16, sums are integers < 2^24)
+        want = np.asarray(ops.qmm(x, qt, backend="dense"))
+        for backend in ("xla", "pallas"):
+            got = np.asarray(ops.qmm(x, ops.pack_weights(w, mode),
+                                     backend=backend))
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6,
+                                       err_msg=f"{mode} {backend}")
+
+
+def test_plan_update_after_first_trace_takes_effect(tcache, rng):
+    """qmm resolves the plan OUTSIDE the jitted body and passes it as a
+    static argument — so tuning a shape after it was already traced with
+    the default blocking retraces once and really dispatches the tuned
+    tiles (no stale-trace pinning)."""
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (127, 7))
+    x = jax.random.normal(k2, (9, 127))
+    qt = ops.pack_weights(w, QuantMode.TNN)
+    before = ops.qmm_trace_count(QuantMode.TNN, "xla")
+    y0 = np.asarray(ops.qmm(x, qt, backend="xla"))      # default tiles
+    assert ops.qmm_trace_count(QuantMode.TNN, "xla") - before == 1
+    tcache.put(_mk_plan(mode=QuantMode.TNN, backend="xla", m=9, n=7,
+                        k=127, tiles=TileConfig(word_chunk=2)))
+    y1 = np.asarray(ops.qmm(x, qt, backend="xla"))      # tuned tiles
+    assert ops.qmm_trace_count(QuantMode.TNN, "xla") - before == 2
+    np.testing.assert_allclose(y1, y0, rtol=1e-6, atol=1e-6)
+    ops.qmm(x, qt, backend="xla")                       # stable plan: cached
+    assert ops.qmm_trace_count(QuantMode.TNN, "xla") - before == 2
+
+
+def test_tuner_selection_deterministic(tcache, monkeypatch):
+    """With a deterministic timer, repeated tune_one calls pick the same
+    candidate; candidate 0 is always the default blocking."""
+
+    def fake_measure(call, *, warmup=1, reps=3):
+        del warmup, reps
+        call().block_until_ready()       # still execute the kernel once
+        return 1.0                       # all tie -> earliest must win
+
+    monkeypatch.setattr(tuner, "measure", fake_measure)
+    p1, r1 = tuner.tune_one(QuantMode.TNN, "xla", fused=True,
+                            m=8, n=16, k=96)
+    p2, _ = tuner.tune_one(QuantMode.TNN, "xla", fused=True,
+                           m=8, n=16, k=96)
+    assert p1 == p2
+    assert r1["best_index"] == 0                   # tie -> default wins
+    assert p1.source == "tuned"
+    # candidate 0 is the raw default blocking (the untuned baseline)
+    assert p1.tiles == DEFAULT_TILES["tnn"]
+
+
+def test_on_first_use_policy_tunes_then_serves_from_cache(tcache, rng):
+    plan_cache.set_policy("on_first_use")
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (97, 12))
+    x = jax.random.normal(k2, (6, 97))
+    qt = ops.pack_weights(w, QuantMode.TBN)
+    before = ops.qmm_trace_count(QuantMode.TBN, "xla")
+    for _ in range(3):
+        ops.qmm(x, qt, backend="xla").block_until_ready()
+    assert ops.qmm_trace_count(QuantMode.TBN, "xla") - before == 1
+    key = plan_cache.plan_key(QuantMode.TBN, "xla", True,
+                              plan_cache.device_kind(),
+                              plan_cache.bucket_m(6), 12, 97)
+    stored = tcache.get(key)
+    assert stored is not None and stored.source == "tuned"
+    assert os.path.exists(tcache.path)     # persisted for the next process
+
+
+# ---------------------------------------------------------------------------
+# offline CLI: second run is a pure, byte-identical cache hit
+# ---------------------------------------------------------------------------
+
+def test_cli_second_run_is_pure_byte_identical_cache_hit(
+        tcache, capsys):
+    argv = ["--shapes", "8x32x96", "--modes", "tnn", "bnn",
+            "--backends", "xla", "--reps", "1", "--warmup", "1",
+            "--cache", tcache.path]
+    assert tune_cli(argv) == 0
+    out1 = capsys.readouterr().out
+    assert "measured=2" in out1 and "cached=0" in out1
+    bytes1 = open(tcache.path, "rb").read()
+
+    assert tune_cli(argv) == 0
+    out2 = capsys.readouterr().out
+    assert "measured=0" in out2 and "cached=2" in out2
+    assert open(tcache.path, "rb").read() == bytes1
+
+
+def test_cli_rejects_bad_shape():
+    with pytest.raises(SystemExit):
+        tune_cli(["--shapes", "16x0x8"])
+
+
+# ---------------------------------------------------------------------------
+# serving engine build-time sweep
+# ---------------------------------------------------------------------------
+
+def test_engine_offline_autotune_persists_plans(tcache, rng):
+    from repro.configs import get_smoke
+    from repro.models import model as model_mod
+    from repro.models.common import ShardLayout
+    from repro.serving import Engine, SamplerConfig, ServeConfig
+
+    layout = ShardLayout(tp=1)
+    cfg = get_smoke("tinyllama-1.1b").with_(dtype=jnp.float32,
+                                            quant_policy="tnn")
+    params = model_mod.init_lm(rng, cfg, layout)
+    scfg = ServeConfig(num_slots=2, max_len=16, prefill_bucket=8,
+                       sampler=SamplerConfig(temperature=0.0),
+                       pack_params=True, autotune="offline")
+    Engine(params, cfg, layout, scfg, seed=0)
+    plans = plan_cache.PlanCache(tcache.path).load().plans()
+    assert plans, "offline autotune produced no persisted plans"
+    buckets = {p.m_bucket for p in plans.values()}
+    # decode m (num_slots=2 -> bucket 8) and prefill buckets (8, 16)
+    assert buckets <= {8, 16}
+    assert all(p.fused and p.source == "tuned" for p in plans.values())
+
+
+def test_engine_off_disarms_on_first_use_policy(tcache, rng):
+    """The autotune policy is process-wide: a pack_params engine built
+    with autotune="off" must disarm a policy a previous on-first-use
+    engine (or anything else) left armed — "off" means never measures."""
+    from repro.configs import get_smoke
+    from repro.models import model as model_mod
+    from repro.models.common import ShardLayout
+    from repro.serving import Engine, ServeConfig
+
+    plan_cache.set_policy("on_first_use")
+    layout = ShardLayout(tp=1)
+    cfg = get_smoke("tinyllama-1.1b").with_(dtype=jnp.float32,
+                                            quant_policy="tnn")
+    params = model_mod.init_lm(rng, cfg, layout)
+    Engine(params, cfg, layout,
+           ServeConfig(num_slots=2, max_len=16, prefill_bucket=8,
+                       pack_params=True, autotune="off"), seed=0)
+    assert plan_cache.get_policy() == "off"
+
+
+def test_engine_rejects_unknown_autotune_value(rng):
+    from repro.configs import get_smoke
+    from repro.models import model as model_mod
+    from repro.models.common import ShardLayout
+    from repro.serving import Engine, ServeConfig
+
+    layout = ShardLayout(tp=1)
+    cfg = get_smoke("tinyllama-1.1b").with_(dtype=jnp.float32)
+    params = model_mod.init_lm(rng, cfg, layout)
+    with pytest.raises(ValueError, match="autotune"):
+        Engine(params, cfg, layout, ServeConfig(autotune="always"))
