@@ -1,0 +1,40 @@
+# Developer entry points.  CI runs the same commands (see
+# .github/workflows/ci.yml); PYTHONPATH=src mirrors the tier-1 contract.
+
+PY      := PYTHONPATH=src python
+TOL     := 0.25
+
+.PHONY: test test-fast lint bench bench-baseline bench-check
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow and not property"
+
+lint:
+	ruff check src tests benchmarks
+
+# Full benchmark pass -> BENCH_results.json (the CI artifact).
+bench:
+	$(PY) -m benchmarks.run --json BENCH_results.json
+
+# Deliberately refresh the committed perf baseline.  Run on an IDLE
+# reference container: three full runs, folded by benchmarks.compare
+# --merge-baseline (element-wise min of the gated ratios + family caps)
+# so one lucky measurement can never commit an unreachably high floor.
+# Inspect the diff, then commit BENCH_baseline.json.
+bench-baseline:
+	for i in 1 2 3; do \
+		$(PY) -m benchmarks.run --json /tmp/bench_base_run$$i.json; \
+	done
+	$(PY) -m benchmarks.compare --merge-baseline \
+		/tmp/bench_base_run1.json /tmp/bench_base_run2.json \
+		/tmp/bench_base_run3.json --out BENCH_baseline.json
+	@echo "refreshed BENCH_baseline.json — review and commit it"
+
+# What the CI bench-smoke job enforces: fresh run, then the
+# perf-regression gate against the committed baseline.
+bench-check: bench
+	$(PY) -m benchmarks.compare --baseline BENCH_baseline.json \
+		--current BENCH_results.json --tolerance $(TOL)

@@ -159,7 +159,8 @@ def run_fused(quick: bool = False, backend: str = "xla") -> Dict[str, Dict]:
     grid = _grid(quick)
     key = jax.random.PRNGKey(7)
     out: Dict[str, Dict] = {}
-    specs = registry.available(backend=backend, fused=True)
+    specs = registry.available(backend=backend, fused=True,
+                               layout=registry.LAYOUT_GEMM)
     print(f"\nFused pipeline (ops.qmm, {backend} backend) vs the "
           f"three-pass unfused oracle, mean over {len(grid)} shapes:")
     print(f"{'mode':>6s} {'epilogue':>12s} {'unfused(us)':>12s} "
@@ -199,7 +200,8 @@ def run_tuned(quick: bool = False) -> Dict[str, Dict]:
                                              (128, 256, 512)]
     reps, warmup = (3, 1) if quick else (5, 2)
     out: Dict[str, Dict] = {}
-    specs = [s for s in registry.available(fused=True)
+    specs = [s for s in registry.available(fused=True,
+                                           layout=registry.LAYOUT_GEMM)
              if s.tunable is not None]
     print(f"\nTuned vs default tiling (median of {reps}, plan cache: "
           f"{plan_cache.get_cache().path}):")

@@ -1,0 +1,210 @@
+"""CI perf-regression gate: compare a BENCH_results.json run against the
+committed baseline and fail when any fused/tuned kernel regresses.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        --baseline BENCH_baseline.json --current BENCH_results.json \
+        --tolerance 0.25
+
+Only **speedup ratios** are compared, never absolute times: ratios
+(fused vs unfused, fused-im2col vs materializing, tuned vs default) are
+what the kernel work actually buys and they transfer across machines,
+while wall-clock depends on the runner's CPU.  A metric regresses when
+
+    current < baseline * (1 - tolerance)
+
+A metric present in the baseline but missing from the current run also
+fails (a silently dropped kernel/benchmark is a coverage regression);
+metrics new in the current run pass (new kernels enter the gate when the
+baseline is refreshed via ``make bench-baseline``).
+
+``--merge-baseline run1.json run2.json ... --out BENCH_baseline.json``
+builds the committed baseline from repeated runs: each gated ratio is
+the element-wise MINIMUM across the runs, additionally capped (1.15x
+for fused/conv, 1.0x for tuned-vs-default, which is >= 1.0 by
+construction since the default blocking is candidate 0 of its own
+bake-off).  On a 2-core runner timing jitter is large; the cap keeps
+one lucky measurement from committing an unreachably high floor, so the
+gate catches perf *collapses* and dropped kernels without flaking —
+dispatch correctness is pinned by the tier-1 tests instead.  This is
+the ONLY supported way to refresh the baseline (``make bench-baseline``
+drives it); a raw single-run JSON would re-introduce the flake mode.
+
+The module is import-safe (no jax needed) so the gate logic is unit
+tested in ``tests/test_bench_compare.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+__all__ = ["extract_metrics", "compare", "merge_baseline", "main"]
+
+# Per-family caps applied by --merge-baseline (see module docstring).
+BASELINE_CAPS = {"fused": 1.15, "conv": 1.15, "tuned": 1.0}
+
+
+def extract_metrics(results: Dict) -> Dict[str, float]:
+    """Flatten one BENCH_results.json into {metric_name: speedup_ratio}.
+
+    Covered sections (each optional — a section absent from BOTH files
+    contributes nothing):
+
+    * ``fused``            — ops.qmm fused-vs-unfused per mode;
+    * ``tuned_vs_default`` — autotuner tuned-vs-default tiling per
+      (mode, backend, shape);
+    * ``conv``             — fused-im2col vs materializing conv2d_packed
+      per (layer, mode).
+    """
+    out: Dict[str, float] = {}
+    for mode, d in (results.get("fused") or {}).items():
+        if isinstance(d, dict) and "speedup" in d:
+            out[f"fused/{mode}"] = float(d["speedup"])
+    for key, d in (results.get("tuned_vs_default") or {}).items():
+        if isinstance(d, dict) and "speedup" in d:
+            out[f"tuned/{key}"] = float(d["speedup"])
+    for layer, modes in (results.get("conv") or {}).items():
+        if not isinstance(modes, dict):
+            continue
+        for mode, d in modes.items():
+            if isinstance(d, dict) and "fused_speedup" in d:
+                out[f"conv/{layer}/{mode}"] = float(d["fused_speedup"])
+    return out
+
+
+def compare(baseline: Dict, current: Dict, tolerance: float
+            ) -> Tuple[List[str], List[str]]:
+    """(regressions, report_lines) for one baseline/current pair.
+
+    ``regressions`` is empty iff the gate passes.  ``report_lines`` is
+    the full human-readable table (every compared metric, one line).
+    """
+    if not 0 <= tolerance < 1:
+        raise ValueError(f"tolerance must be in [0, 1), got {tolerance}")
+    base_m = extract_metrics(baseline)
+    cur_m = extract_metrics(current)
+    regressions: List[str] = []
+    lines: List[str] = []
+    for name in sorted(base_m):
+        b = base_m[name]
+        if name not in cur_m:
+            regressions.append(f"{name}: missing from current run "
+                               f"(baseline {b:.2f}x)")
+            lines.append(f"  MISSING {name:<40s} baseline={b:6.2f}x")
+            continue
+        c = cur_m[name]
+        floor = b * (1.0 - tolerance)
+        status = "ok" if c >= floor else "REGRESSED"
+        lines.append(f"  {status:>9s} {name:<40s} baseline={b:6.2f}x "
+                     f"current={c:6.2f}x floor={floor:6.2f}x")
+        if c < floor:
+            regressions.append(
+                f"{name}: {c:.2f}x < {floor:.2f}x "
+                f"(baseline {b:.2f}x, tolerance {tolerance:.0%})")
+    for name in sorted(set(cur_m) - set(base_m)):
+        lines.append(f"  {'new':>9s} {name:<40s} "
+                     f"current={cur_m[name]:6.2f}x (not gated yet)")
+    return regressions, lines
+
+
+def _set_metric(doc: Dict, name: str, value: float) -> None:
+    """Write one flattened metric name back into a results document."""
+    family, rest = name.split("/", 1)
+    if family == "fused":
+        doc["fused"][rest]["speedup"] = value
+    elif family == "tuned":
+        doc["tuned_vs_default"][rest]["speedup"] = value
+    else:
+        layer, mode = rest.rsplit("/", 1)
+        doc["conv"][layer][mode]["fused_speedup"] = value
+
+
+def merge_baseline(runs: List[Dict]) -> Dict:
+    """Fold repeated benchmark runs into one committed-baseline document:
+    run 0's document with every gated ratio replaced by
+    ``min(min_over_runs, family_cap)`` (see ``BASELINE_CAPS``).  Raises
+    if the runs do not cover the same metric set — a partial run must
+    not silently shrink the gate."""
+    if not runs:
+        raise ValueError("merge_baseline needs at least one run")
+    metric_sets = [extract_metrics(r) for r in runs]
+    names = set(metric_sets[0])
+    for i, ms in enumerate(metric_sets[1:], 2):
+        if set(ms) != names:
+            missing = names.symmetric_difference(ms)
+            raise ValueError(f"run 1 and run {i} cover different metrics: "
+                             f"{sorted(missing)}")
+    out = json.loads(json.dumps(runs[0]))      # deep copy
+    for name in sorted(names):
+        cap = BASELINE_CAPS[name.split("/", 1)[0]]
+        _set_metric(out, name, min(min(ms[name] for ms in metric_sets),
+                                   cap))
+    out.setdefault("meta", {})["baseline_note"] = (
+        f"gated speedup ratios are the element-wise min of "
+        f"{len(runs)} run(s), capped at {BASELINE_CAPS} so runner timing "
+        f"jitter stays inside the gate tolerance; refresh only via "
+        f"`make bench-baseline` (benchmarks.compare --merge-baseline)")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.compare",
+        description="fail when any fused/tuned kernel speedup ratio "
+                    "regresses past the tolerance vs the baseline")
+    ap.add_argument("--baseline",
+                    help="committed BENCH_baseline.json")
+    ap.add_argument("--current",
+                    help="freshly produced BENCH_results.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative drop of each speedup ratio "
+                         "(default 0.25 = fail below 75%% of baseline)")
+    ap.add_argument("--merge-baseline", nargs="+", metavar="RUN_JSON",
+                    help="instead of gating: fold these runs into a new "
+                         "baseline (element-wise min + family caps) and "
+                         "write it to --out")
+    ap.add_argument("--out", default="BENCH_baseline.json",
+                    help="output path for --merge-baseline")
+    args = ap.parse_args(argv)
+
+    if args.merge_baseline:
+        runs = []
+        for path in args.merge_baseline:
+            with open(path) as f:
+                runs.append(json.load(f))
+        merged = merge_baseline(runs)
+        with open(args.out, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+        n = len(extract_metrics(merged))
+        print(f"wrote {args.out}: {n} gated metrics folded from "
+              f"{len(runs)} run(s) (min + caps {BASELINE_CAPS})")
+        return 0
+
+    if not (args.baseline and args.current):
+        ap.error("--baseline and --current are required "
+                 "(or use --merge-baseline)")
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    regressions, lines = compare(baseline, current, args.tolerance)
+    n = len(extract_metrics(baseline))
+    print(f"perf gate: {n} baseline metrics, tolerance "
+          f"{args.tolerance:.0%} ({args.baseline} vs {args.current})")
+    print("\n".join(lines))
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} metric(s) regressed:")
+        for r in regressions:
+            print(f"  - {r}")
+        print("(intentional change? refresh the baseline with "
+              "`make bench-baseline` and commit it)")
+        return 1
+    print(f"\nPASS: no metric below {1 - args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,9 +13,14 @@ Two regimes, mirroring core/qlinear.py:
   ``ops.quantized_matmul``);
 * ``pack_conv_filters`` + ``conv2d_packed`` — deployment: filters are
   bit-plane packed once, offline, into a :class:`QTensor` whose
-  ``geometry`` aux records (kh, kw, cin, cout); each conv is then
-  im2col + ONE fused ``ops.qmm`` call (quantize -> pack -> popcount
-  GeMM -> scale) with mode/depth/scale/bias coming from the container.
+  ``geometry`` aux records (kh, kw, cin, cout).  Each conv then
+  dispatches to a fused-im2col kernel (``ops.qconv``, registry layout
+  ``im2col_fused``) when one is registered for (mode, backend) — patch
+  extraction folds into the kernel's A-operand load path and the patch
+  matrix never exists in HBM.  ``fused=False`` forces the materializing
+  path (im2col + ONE fused ``ops.qmm`` call), which is kept as the
+  bit-exact correctness oracle: both paths quantize with the same
+  scalar statistics (``conv_fused.conv_act_stats``).
 """
 
 from __future__ import annotations
@@ -27,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core import quantize
 from repro.kernels import ops
+from repro.kernels.conv_fused import conv_act_stats, conv_spatial_pad
 from repro.kernels.modes import DEFAULT_BACKEND, QuantMode
 from repro.kernels.qtensor import QTensor
 
@@ -40,19 +46,12 @@ def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1,
 
     Built from kh*kw static slices (differentiable, fusion-friendly); the
     column order is (dy, dx, c), matching the filter reshape below.
+    Spatial padding comes from ``conv_fused.conv_spatial_pad`` — the same
+    helper the fused-im2col kernels use, so the two paths can never
+    disagree about the patch grid.
     """
-    b, h, w, c = x.shape
-    if padding == "SAME":
-        oh, ow = -(-h // stride), -(-w // stride)
-        ph = max((oh - 1) * stride + kh - h, 0)
-        pw = max((ow - 1) * stride + kw - w, 0)
-        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
-                        (pw // 2, pw - pw // 2), (0, 0)))
-    elif padding == "VALID":
-        oh = (h - kh) // stride + 1
-        ow = (w - kw) // stride + 1
-    else:
-        raise ValueError(padding)
+    b, _, _, c = x.shape
+    x, (oh, ow) = conv_spatial_pad(x, kh, kw, stride, padding)
 
     cols = []
     for dy in range(kh):
@@ -123,12 +122,19 @@ def pack_conv_filters(filters: jnp.ndarray, mode: QuantMode,
 def conv2d_packed(x: jnp.ndarray, packed: QTensor, *,
                   stride: int = 1, padding: str = "SAME",
                   backend: str = DEFAULT_BACKEND,
-                  paper_accum_i16: bool = False) -> jnp.ndarray:
-    """Deployment conv: im2col + ONE fused quantize/pack/popcount/scale
-    GeMM (ops.qmm).  ``packed`` comes from :func:`pack_conv_filters`;
+                  paper_accum_i16: bool = False,
+                  fused: Optional[bool] = None) -> jnp.ndarray:
+    """Deployment conv.  ``packed`` comes from :func:`pack_conv_filters`;
     mode, depth, scale, bias and geometry all ride inside it — repeated
     calls with the same QTensor hit the same jit cache entry (no
     retrace, no container rebuild).
+
+    ``fused=None`` (default) dispatches to the fused-im2col kernel
+    (``ops.qconv``) whenever one is registered for (mode, backend): the
+    patch matrix is never materialized.  ``fused=False`` forces the
+    materializing oracle — im2col + ONE fused ``ops.qmm`` call — whose
+    output is bit-identical to the fused path (both quantize with the
+    shared ``conv_act_stats`` scalars).
     """
     if packed.geometry is None:
         raise ValueError("conv2d_packed needs a QTensor packed with "
@@ -136,6 +142,16 @@ def conv2d_packed(x: jnp.ndarray, packed: QTensor, *,
     kh, kw, cin, cout = packed.geometry
     if paper_accum_i16:
         check_conv_depth(cin, kh, kw)
+    if fused is None:
+        fused = packed.is_lowbit and ops.has_conv_kernel(packed.mode, backend)
+    if fused:
+        y = ops.qconv(x, packed, stride=stride, padding=padding,
+                      backend=backend)
+        return y.astype(x.dtype)
+    stats = None
+    if packed.is_lowbit:
+        stats = conv_act_stats(x.astype(jnp.float32), packed.mode, kh, kw,
+                               stride, padding)
     a, (b, oh, ow) = im2col(x.astype(jnp.float32), kh, kw, stride, padding)
-    y = ops.qmm(a, packed, backend=backend)
+    y = ops.qmm(a, packed, backend=backend, act_stats=stats)
     return y.reshape(b, oh, ow, cout).astype(x.dtype)

@@ -58,10 +58,11 @@ from repro.kernels.int4_matmul import (
 )
 
 __all__ = [
-    "QuantMode", "QTensor", "qmm", "pack_weights", "quantize_activations",
+    "QuantMode", "QTensor", "qmm", "qconv", "pack_weights",
+    "quantize_activations",
     "packed_matmul", "quantized_matmul", "lowbit_matmul",
     "int8_affine_matmul", "int4_affine_matmul", "DEFAULT_BACKEND",
-    "fused_qmm", "qmm_trace_count",
+    "fused_qmm", "qmm_trace_count", "qconv_trace_count", "has_conv_kernel",
     "bnn_matmul_xla_fused", "tnn_matmul_xla_fused", "tbn_matmul_xla_fused",
 ]
 
@@ -136,6 +137,16 @@ def _tbn_product(a_sl, b_sl):
     (bb,) = b_sl
     nbb = jnp.bitwise_not(bb)
     return _pc((ap | bb) & (am | nbb)) - _pc((ap | nbb) & (am | bb))
+
+
+# Per-word signed contribution of each mode — shared with the fused conv
+# kernels (kernels/conv_fused.py), which run the same popcount core over
+# patch-gathered words.
+_PRODUCT_FNS: Dict[QuantMode, Any] = {
+    QuantMode.BNN: _bnn_product,
+    QuantMode.TNN: _tnn_product,
+    QuantMode.TBN: _tbn_product,
+}
 
 
 def bnn_matmul_xla(a_bits, b_bits_t, k_valid: int, *,
@@ -335,6 +346,12 @@ def _register_all_kernels():
 
 _register_all_kernels()
 
+# Registers the fused-im2col conv kernels (layout="im2col_fused") as an
+# import side effect.  Must come after _register_all_kernels() and after
+# the core imports above so conv_fused's lazy repro.core references
+# always resolve.
+from repro.kernels import conv_fused as _conv_fused  # noqa: E402,F401
+
 
 # ---------------------------------------------------------------------------
 # Affine (u8/u4) full pipelines: kernel + eq. (3) correction
@@ -386,20 +403,35 @@ def pack_weights(w: jnp.ndarray, mode: QuantMode, *,
     return QTensor.from_dense(w, mode, per_channel=per_channel)
 
 
-def quantize_activations(x: jnp.ndarray, mode: QuantMode) -> Dict[str, Any]:
+def quantize_activations(x: jnp.ndarray, mode: QuantMode, *,
+                         stats: Optional[Dict[str, Any]] = None
+                         ) -> Dict[str, Any]:
     """Runtime activation quantization.  ``x`` is (m, k) float.
 
     Activations are transient (packed inside the fused trace, never
     stored), so they stay a plain dict of planes rather than a QTensor.
+
+    ``stats`` optionally supplies externally-computed per-tensor
+    statistics ({"thr", "scale"} for ternary modes, {"scale"} for BNN)
+    instead of deriving them from ``x`` — the conv path uses this so the
+    materializing oracle and the fused-im2col kernels quantize with the
+    exact same scalars (conv_fused.conv_act_stats computes them once
+    from the un-materialized input).
     """
     if mode in (QuantMode.F32, QuantMode.BF16):
         return {"x": x}
     if mode in (QuantMode.TNN, QuantMode.TBN):
-        t, scale = quantize.ternarize(x)
+        if stats is not None:
+            t, _ = quantize.ternarize(x, threshold=stats["thr"])
+            scale = stats["scale"]
+        else:
+            t, scale = quantize.ternarize(x)
         plus, minus = encoding.pack_ternary(t)
         return {"plus": plus, "minus": minus, "scale": scale}
     if mode == QuantMode.BNN:
         b, scale = quantize.binarize(x)
+        if stats is not None:
+            scale = stats["scale"]
         return {"bits": encoding.pack_binary(b), "scale": scale}
     if mode in (QuantMode.INT8, QuantMode.INT4):
         bits = 8 if mode == QuantMode.INT8 else 4
@@ -473,7 +505,7 @@ def qmm_trace_count(mode: QuantMode, backend: str = DEFAULT_BACKEND) -> int:
 @functools.partial(jax.jit,
                    static_argnames=("backend", "interpret", "tiles"))
 def _qmm_jit(x, qt: QTensor, backend: str, interpret: bool,
-             tiles: Optional[TileConfig] = None):
+             tiles: Optional[TileConfig] = None, act_stats=None):
     _QMM_TRACES[(qt.mode, backend)] += 1   # runs at trace time only
     m, k = x.shape
     n = qt.out_features
@@ -486,7 +518,8 @@ def _qmm_jit(x, qt: QTensor, backend: str, interpret: bool,
         return y if qt.bias is None else y + qt.bias
 
     if mode.is_lowbit:
-        xa = quantize_activations(x.astype(jnp.float32), mode)
+        xa = quantize_activations(x.astype(jnp.float32), mode,
+                                  stats=act_stats)
         row = _as_row_scale(xa["scale"], m)
         col = _as_col_vec(qt.scale, n)
         b2 = None if qt.bias is None else _as_col_vec(qt.bias, n)
@@ -508,7 +541,8 @@ def _qmm_jit(x, qt: QTensor, backend: str, interpret: bool,
 
 
 def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
-        interpret: bool = True) -> jnp.ndarray:
+        interpret: bool = True,
+        act_stats: Optional[Dict[str, Any]] = None) -> jnp.ndarray:
     """Quantized matmul: float ``x`` (m, k) against an offline-packed
     :class:`QTensor` -> float32 (m, n), in ONE jitted computation.
 
@@ -528,6 +562,11 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
     Float modes are a dense dot (+ bias); u8/u4 run the affine eq. (3)
     pipeline.  Numerics match the unfused oracle exactly: the integer
     core is identical and the epilogue uses the same multiply order.
+
+    ``act_stats`` optionally overrides the per-tensor activation
+    quantization statistics (see :func:`quantize_activations`) — the
+    materializing conv oracle passes the shared conv stats here so it
+    stays bit-identical with the fused-im2col kernels.
     """
     if not isinstance(qt, QTensor):
         raise TypeError(
@@ -559,7 +598,96 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
                                     m=int(x.shape[0]), n=qt.out_features,
                                     k=qt.k_valid).tiles
     return _qmm_jit(x, qt, backend=backend, interpret=interpret,
-                    tiles=tiles)
+                    tiles=tiles, act_stats=act_stats)
+
+
+# ---------------------------------------------------------------------------
+# qconv — packed conv through the fused-im2col kernels (layout
+# "im2col_fused" in the registry): the patch matrix is never materialized
+# ---------------------------------------------------------------------------
+
+_QCONV_TRACES: collections.Counter = collections.Counter()
+
+
+def qconv_trace_count(mode: QuantMode, backend: str = DEFAULT_BACKEND) -> int:
+    return _QCONV_TRACES[(mode, backend)]
+
+
+def has_conv_kernel(mode: QuantMode, backend: str) -> bool:
+    """True when a fused-im2col conv kernel is registered for (mode,
+    backend) — what conv2d_packed's auto-dispatch consults."""
+    return registry.has(mode, backend, fused=True,
+                        layout=registry.LAYOUT_IM2COL)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "stride", "padding",
+                                    "interpret", "tiles"))
+def _qconv_jit(x, qt: QTensor, act_stats, backend: str, stride: int,
+               padding: str, interpret: bool,
+               tiles: Optional[TileConfig] = None):
+    _QCONV_TRACES[(qt.mode, backend)] += 1   # runs at trace time only
+    spec = registry.lookup(qt.mode, backend, fused=True,
+                           layout=registry.LAYOUT_IM2COL)
+    cout = qt.geometry[3]
+    col = _as_col_vec(qt.scale, cout)
+    b2 = None if qt.bias is None else _as_col_vec(qt.bias, cout)
+    return spec.fn(x.astype(jnp.float32), _b_planes(qt, qt.mode),
+                   qt.geometry, stride, padding, act_stats, col, b2,
+                   interpret=interpret, tiles=tiles)
+
+
+def qconv(x: jnp.ndarray, qt: QTensor, *, stride: int = 1,
+          padding: str = "SAME", backend: Optional[str] = None,
+          interpret: bool = True,
+          act_stats: Optional[Dict[str, Any]] = None) -> jnp.ndarray:
+    """Fused-im2col packed conv: float ``x`` (B, H, W, Cin) against a
+    conv QTensor (``pack_conv_filters``) -> float32 (B, OH, OW, Cout) in
+    ONE jitted computation that never materializes the im2col patch
+    matrix — the kernels compute patch coordinates in their A-operand
+    load path and quantize/pack activation tiles on the fly.
+
+    Bit-identical to the materializing oracle (``im2col`` +
+    :func:`qmm` with the same ``act_stats``): per-tensor quantization
+    commutes with patch gathering, the popcount core sums the same
+    integers, and the epilogue uses the same multiply order.
+    """
+    if not isinstance(qt, QTensor):
+        raise TypeError(f"qconv expects a QTensor, got {type(qt).__name__}")
+    if qt.geometry is None:
+        raise ValueError("qconv needs a QTensor packed with "
+                         "pack_conv_filters (geometry aux missing)")
+    if not qt.is_lowbit:
+        raise ValueError(f"qconv only handles low-bit modes, got {qt.mode}")
+    if x.ndim != 4:
+        raise ValueError(f"qconv expects x of rank 4 (B, H, W, Cin), got "
+                         f"shape {x.shape}")
+    kh, kw_, cin, _ = qt.geometry
+    if x.shape[-1] != cin:
+        raise ValueError(f"channel mismatch: x has Cin={x.shape[-1]} but "
+                         f"QTensor geometry is {qt.geometry}")
+    backend = backend or DEFAULT_BACKEND
+    from repro.kernels import conv_fused
+
+    if act_stats is None:
+        act_stats = conv_fused.conv_act_stats(x, qt.mode, kh, kw_,
+                                              stride, padding)
+    m, n, k, tag = conv_fused.conv_problem_dims(x.shape, qt.geometry,
+                                                stride, padding)
+    if tune_cache.get_policy() == "on_first_use":
+        from repro.tune import tuner
+        tuner.ensure_plan(qt.mode, backend, fused=True,
+                          interpret=interpret,
+                          conv=tuner.ConvProblem.from_input(
+                              x.shape, qt.geometry, stride, padding))
+    # Like qmm: resolve the plan OUTSIDE the jitted body and pass the
+    # tiles as a static argument, so a plan-cache update retraces while
+    # a stable plan keeps hitting one trace per conv geometry.
+    tiles = tune_cache.plan_for(qt.mode, backend, fused=True, m=m, n=n,
+                                k=k, layout=registry.LAYOUT_IM2COL,
+                                geom=tag).tiles
+    return _qconv_jit(x, qt, act_stats, backend=backend, stride=stride,
+                      padding=padding, interpret=interpret, tiles=tiles)
 
 
 def fused_qmm(x: jnp.ndarray, wb, mode: Optional[QuantMode] = None,

@@ -1,23 +1,33 @@
-"""Kernel registry: one table from (mode, backend, fused) to the kernel
-that implements it, with capability metadata.
+"""Kernel registry: one table from (mode, backend, fused, layout) to the
+kernel that implements it, with capability metadata.
 
 This replaces the duplicated mode x backend if/elif ladders that used to
 live inside ``ops.packed_matmul`` and ``ops.fused_qmm``: kernels register
 themselves once, dispatch is a dict lookup, and benchmarks / tests / the
 serving engine can *enumerate* what exists instead of hard-coding mode
-lists.  New kernels (the ROADMAP's dense-backend Pallas fusion, the conv
-im2col-fused kernel) plug in by registering a new entry — no dispatch
-code changes.
+lists.  New kernels (the ROADMAP's dense-backend Pallas fusion) plug in
+by registering a new entry — no dispatch code changes.
+
+``layout`` names the *operand layout* the kernel consumes:
+
+* ``"gemm"`` (default) — A is an explicit (m, k) activation matrix;
+* ``"im2col_fused"`` — A is the raw (B, H, W, Cin) activation tensor and
+  the kernel folds im2col patch extraction into its A-operand load path
+  (kernels/conv_fused.py); ``conv2d_packed`` dispatches here.
 
 Normalized kernel signatures (planes are tuples of uint32 bit-plane
 arrays — 1 plane for binary operands, 2 (plus, minus) for ternary):
 
-* unfused (``fused=False``) — the integer core:
+* gemm, unfused (``fused=False``) — the integer core:
       fn(a_planes, b_planes, k_valid, *, interpret, tiles=None)
           -> int32 (m, n)
-* fused (``fused=True``) — core + eq. (2) scale/bias epilogue:
+* gemm, fused (``fused=True``) — core + eq. (2) scale/bias epilogue:
       fn(a_planes, b_planes, k_valid, row_scale, col_scale, bias, *,
          interpret, tiles=None) -> float32 (m, n)
+* im2col_fused (always ``fused=True``) — patch extraction + quantize +
+  pack + core + epilogue in one kernel/trace:
+      fn(x, b_planes, geometry, stride, padding, stats, col_scale,
+         bias, *, interpret, tiles=None) -> float32 (B, OH, OW, Cout)
 
 ``tiles`` (a ``TileConfig``) overrides the kernel's blocking; ``None``
 resolves it from the autotuning plan cache at trace time (tuned plan on
@@ -33,8 +43,12 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.kernels.modes import QuantMode
 
-__all__ = ["KernelSpec", "register", "lookup", "available", "backends",
-           "modes", "capability_table"]
+__all__ = ["KernelSpec", "register", "lookup", "has", "available",
+           "backends", "modes", "capability_table", "LAYOUT_GEMM",
+           "LAYOUT_IM2COL"]
+
+LAYOUT_GEMM = "gemm"              # A operand is an (m, k) matrix
+LAYOUT_IM2COL = "im2col_fused"    # A operand is (B, H, W, Cin); kernel im2cols
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,53 +68,69 @@ class KernelSpec:
     # blocking (e.g. the dense backend, where XLA picks the tiling).
     # Tunable kernels must accept a ``tiles=`` keyword (TileConfig).
     tunable: Optional[Any] = None
+    layout: str = LAYOUT_GEMM  # "gemm" | "im2col_fused"
 
     @property
-    def key(self) -> Tuple[QuantMode, str, bool]:
-        return (self.mode, self.backend, self.fused)
+    def key(self) -> Tuple[QuantMode, str, bool, str]:
+        return (self.mode, self.backend, self.fused, self.layout)
 
 
-_REGISTRY: Dict[Tuple[QuantMode, str, bool], KernelSpec] = {}
+_REGISTRY: Dict[Tuple[QuantMode, str, bool, str], KernelSpec] = {}
 
 
 def register(mode: QuantMode, backend: str, *, fused: bool,
              epilogue: str, compute: str, description: str = "",
-             tunable: Optional[Any] = None):
-    """Decorator: register ``fn`` as THE kernel for (mode, backend, fused).
-    Re-registration overwrites (lets tests/backends shadow an entry)."""
+             tunable: Optional[Any] = None, layout: str = LAYOUT_GEMM):
+    """Decorator: register ``fn`` as THE kernel for (mode, backend,
+    fused, layout).  Re-registration overwrites (lets tests/backends
+    shadow an entry)."""
 
     def deco(fn: Callable) -> Callable:
         spec = KernelSpec(mode=mode, backend=backend, fused=fused, fn=fn,
                           epilogue=epilogue, compute=compute,
-                          description=description, tunable=tunable)
+                          description=description, tunable=tunable,
+                          layout=layout)
         _REGISTRY[spec.key] = spec
         return fn
 
     return deco
 
 
-def lookup(mode: QuantMode, backend: str, *, fused: bool) -> KernelSpec:
+def lookup(mode: QuantMode, backend: str, *, fused: bool,
+           layout: str = LAYOUT_GEMM) -> KernelSpec:
     try:
-        return _REGISTRY[(mode, backend, fused)]
+        return _REGISTRY[(mode, backend, fused, layout)]
     except KeyError:
         have = sorted(f"{m.value}/{b}{'/fused' if f else ''}"
-                      for (m, b, f) in _REGISTRY)
+                      f"{'/' + lay if lay != LAYOUT_GEMM else ''}"
+                      for (m, b, f, lay) in _REGISTRY)
         raise KeyError(
             f"no {'fused ' if fused else ''}kernel registered for "
-            f"mode={mode.value} backend={backend!r}; registered: {have}"
+            f"mode={mode.value} backend={backend!r} layout={layout!r}; "
+            f"registered: {have}"
         ) from None
+
+
+def has(mode: QuantMode, backend: str, *, fused: bool,
+        layout: str = LAYOUT_GEMM) -> bool:
+    return (mode, backend, fused, layout) in _REGISTRY
 
 
 def available(mode: Optional[QuantMode] = None,
               backend: Optional[str] = None,
-              fused: Optional[bool] = None) -> List[KernelSpec]:
+              fused: Optional[bool] = None,
+              layout: Optional[str] = None) -> List[KernelSpec]:
     """All registered kernels matching the given filters, in a stable
-    (mode, backend, fused) order — what benchmarks and tests enumerate."""
+    (mode, backend, fused, layout) order — what benchmarks and tests
+    enumerate.  ``layout=None`` matches every layout; pass
+    ``layout=LAYOUT_GEMM`` to enumerate only the matmul-shaped kernels."""
     out = [s for s in _REGISTRY.values()
            if (mode is None or s.mode == mode)
            and (backend is None or s.backend == backend)
-           and (fused is None or s.fused == fused)]
-    return sorted(out, key=lambda s: (s.mode.value, s.backend, s.fused))
+           and (fused is None or s.fused == fused)
+           and (layout is None or s.layout == layout)]
+    return sorted(out, key=lambda s: (s.mode.value, s.backend, s.fused,
+                                      s.layout))
 
 
 def backends(mode: Optional[QuantMode] = None) -> List[str]:
@@ -113,10 +143,11 @@ def modes(backend: Optional[str] = None) -> List[QuantMode]:
 
 
 def capability_table() -> str:
-    """Human-readable mode x backend x fused x tunable table — the quick
-    triage view behind ``python -m repro.kernels.registry``."""
-    header = (f"{'mode':>5s} {'backend':>8s} {'fused':>6s} {'epilogue':>11s} "
-              f"{'compute':>13s} {'tunable':>18s}  description")
+    """Human-readable mode x backend x layout x fused x tunable table —
+    the quick triage view behind ``python -m repro.kernels.registry``."""
+    header = (f"{'mode':>5s} {'backend':>8s} {'layout':>13s} {'fused':>6s} "
+              f"{'epilogue':>11s} {'compute':>13s} {'tunable':>18s}  "
+              f"description")
     lines = [header, "-" * len(header)]
     for s in available():
         if s.tunable is None:
@@ -125,7 +156,7 @@ def capability_table() -> str:
             axes = (len(s.tunable.block_m), len(s.tunable.block_n),
                     len(s.tunable.block_kw), len(s.tunable.word_chunk))
             tun = f"{s.tunable.kind}({'x'.join(map(str, axes))})"
-        lines.append(f"{s.mode.value:>5s} {s.backend:>8s} "
+        lines.append(f"{s.mode.value:>5s} {s.backend:>8s} {s.layout:>13s} "
                      f"{str(s.fused).lower():>6s} {s.epilogue:>11s} "
                      f"{s.compute:>13s} {tun:>18s}  {s.description}")
     return "\n".join(lines)

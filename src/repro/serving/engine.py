@@ -71,6 +71,17 @@ class ServeConfig:
     # process, so a later Engine(..., autotune="off") disarms a policy a
     # previous "on_first_use" engine left behind.
     autotune: str = "off"
+    # Input extents to tune conv-packed QTensors against during an
+    # "offline" sweep: each entry is (batch, height, width) or (batch,
+    # height, width, stride, padding) — stride/padding default to
+    # 1/"SAME" and must match how the convs are actually served, since
+    # they are part of the plan key's geometry tag.  Conv weights carry
+    # their kernel geometry in the container but not the image size, so
+    # the engine cannot infer the fused-im2col problem shapes on its
+    # own; with an empty tuple conv problems are skipped (they fall
+    # back to DEFAULT_TILES at dispatch, exactly like an untuned GeMM
+    # shape).
+    tune_conv_inputs: tuple = ()
 
 
 @dataclasses.dataclass
@@ -217,10 +228,24 @@ class Engine:
 
         problems = tuner.collect_problems(self.params)
         ms = sorted({self.scfg.num_slots, *self._buckets()})
-        for mode, k, n in problems:
-            for m in ms:
-                tuner.ensure_plan(mode, DEFAULT_BACKEND, fused=True,
-                                  m=m, n=n, k=k, save=False)
+        for mode, k, n, geometry in problems:
+            if geometry is None:
+                for m in ms:
+                    tuner.ensure_plan(mode, DEFAULT_BACKEND, fused=True,
+                                      m=m, n=n, k=k, save=False)
+            else:
+                # conv-packed weights: tune the fused-im2col kernel at
+                # the configured input extents (no extents -> skip;
+                # dispatch then uses the DEFAULT_TILES fallback)
+                for entry in self.scfg.tune_conv_inputs:
+                    b, h, w = entry[:3]
+                    stride = entry[3] if len(entry) > 3 else 1
+                    padding = entry[4] if len(entry) > 4 else "SAME"
+                    prob = tuner.ConvProblem.from_input(
+                        (b, h, w, geometry[2]), geometry,
+                        stride=stride, padding=padding)
+                    tuner.ensure_plan(mode, DEFAULT_BACKEND, fused=True,
+                                      conv=prob, save=False)
         if problems:
             tune_cache.get_cache().save()
 

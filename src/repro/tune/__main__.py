@@ -34,6 +34,21 @@ def _parse_shape(s: str) -> Tuple[int, int, int]:
             f"shape must be MxNxK positive ints, got {s!r}") from None
 
 
+def _parse_conv_shape(s: str) -> Tuple[int, ...]:
+    """BxHxWxCINxCOUTxKH[xKW] — one fused-im2col conv geometry."""
+    try:
+        parts = [int(v) for v in s.lower().split("x")]
+        if len(parts) == 6:
+            parts.append(parts[5])          # square kernel shorthand
+        if len(parts) != 7 or min(parts) < 1:
+            raise ValueError
+        return tuple(parts)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"conv shape must be BxHxWxCINxCOUTxKH[xKW] positive ints, "
+            f"got {s!r}") from None
+
+
 def main(argv: List[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.tune",
@@ -43,6 +58,15 @@ def main(argv: List[str] | None = None) -> int:
                     default=[(16, 256, 512), (128, 256, 512)],
                     metavar="MxNxK",
                     help="problem shapes (activation m x out n x depth k)")
+    ap.add_argument("--conv-shapes", type=_parse_conv_shape, nargs="+",
+                    default=[], metavar="BxHxWxCINxCOUTxKH[xKW]",
+                    help="fused-im2col conv geometries to tune (registry "
+                         "layout im2col_fused); e.g. 4x16x16x32x64x3")
+    ap.add_argument("--conv-stride", type=int, default=1,
+                    help="stride for the --conv-shapes problems")
+    ap.add_argument("--conv-padding", type=str, default="SAME",
+                    choices=["SAME", "VALID"],
+                    help="padding for the --conv-shapes problems")
     ap.add_argument("--modes", nargs="+",
                     default=["bnn", "tnn", "tbn"],
                     help="quantization modes to tune")
@@ -73,12 +97,21 @@ def main(argv: List[str] | None = None) -> int:
         plan_cache.set_cache_path(args.cache)
     cache = plan_cache.get_cache()
 
-    print(f"tuning {len(args.shapes)} shapes x {args.modes} x "
-          f"{args.backends} ({'unfused' if args.unfused else 'fused'}) "
+    conv_problems = [
+        tuner.ConvProblem(batch=b, height=h, width=w, cin=ci, cout=co,
+                          kernel_h=kh, kernel_w=kw,
+                          stride=args.conv_stride,
+                          padding=args.conv_padding)
+        for (b, h, w, ci, co, kh, kw) in args.conv_shapes]
+
+    print(f"tuning {len(args.shapes)} shapes + {len(conv_problems)} conv "
+          f"geometries x {args.modes} x {args.backends} "
+          f"({'unfused' if args.unfused else 'fused'}) "
           f"on device '{plan_cache.device_kind()}'")
     _, stats, reports = tuner.tune_shapes(
         args.shapes, modes, args.backends, fused=not args.unfused,
-        reps=args.reps, warmup=args.warmup, seed=args.seed, verbose=True)
+        reps=args.reps, warmup=args.warmup, seed=args.seed, verbose=True,
+        conv_problems=conv_problems)
 
     if args.report:
         # single measurement pass: the report comes from the same sweep

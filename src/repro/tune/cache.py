@@ -72,7 +72,14 @@ def set_policy(policy: str) -> None:
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """One tuned (or default-fallback) blocking decision."""
+    """One tuned (or default-fallback) blocking decision.
+
+    ``layout`` mirrors the kernel registry's layout axis ("gemm" for the
+    matmul kernels, "im2col_fused" for the fused conv kernels); conv
+    plans additionally carry a ``geom`` tag (e.g. "3x3s1same") because
+    two convs with the same (m, n, k) but different kernel geometry run
+    different gather schedules.
+    """
     mode: QuantMode
     backend: str
     fused: bool
@@ -82,17 +89,24 @@ class Plan:
     k: int
     tiles: TileConfig
     source: str = "tuned"          # "tuned" | "default"
+    layout: str = "gemm"           # "gemm" | "im2col_fused"
+    geom: Optional[str] = None     # conv geometry tag (layout != "gemm")
 
     @property
     def key(self) -> str:
         return plan_key(self.mode, self.backend, self.fused,
-                        self.device_kind, self.m_bucket, self.n, self.k)
+                        self.device_kind, self.m_bucket, self.n, self.k,
+                        layout=self.layout, geom=self.geom)
 
     def to_json(self) -> Dict:
-        return {"mode": self.mode.value, "backend": self.backend,
-                "fused": self.fused, "device_kind": self.device_kind,
-                "m_bucket": self.m_bucket, "n": self.n, "k": self.k,
-                "tiles": self.tiles.to_json(), "source": self.source}
+        out = {"mode": self.mode.value, "backend": self.backend,
+               "fused": self.fused, "device_kind": self.device_kind,
+               "m_bucket": self.m_bucket, "n": self.n, "k": self.k,
+               "tiles": self.tiles.to_json(), "source": self.source,
+               "layout": self.layout}
+        if self.geom is not None:
+            out["geom"] = self.geom
+        return out
 
     @classmethod
     def from_json(cls, d: Dict) -> "Plan":
@@ -102,7 +116,10 @@ class Plan:
                    m_bucket=int(d["m_bucket"]), n=int(d["n"]),
                    k=int(d["k"]),
                    tiles=TileConfig.from_json(d["tiles"]),
-                   source=str(d.get("source", "tuned")))
+                   source=str(d.get("source", "tuned")),
+                   layout=str(d.get("layout", "gemm")),
+                   geom=(None if d.get("geom") is None
+                         else str(d["geom"])))
 
 
 def bucket_m(m: int) -> int:
@@ -123,9 +140,16 @@ def device_kind() -> str:
 
 
 def plan_key(mode: QuantMode, backend: str, fused: bool, dev: str,
-             m_bucket: int, n: int, k: int) -> str:
+             m_bucket: int, n: int, k: int, *, layout: str = "gemm",
+             geom: Optional[str] = None) -> str:
+    """Cache key for one problem.  The gemm layout keeps the pre-conv
+    key format (existing caches stay valid); conv problems insert the
+    layout and geometry segments."""
     fu = "fused" if fused else "unfused"
-    return f"{mode.value}/{backend}/{fu}/{dev}/m{m_bucket}/n{n}/k{k}"
+    if layout == "gemm":
+        return f"{mode.value}/{backend}/{fu}/{dev}/m{m_bucket}/n{n}/k{k}"
+    return (f"{mode.value}/{backend}/{fu}/{layout}/{geom}/{dev}"
+            f"/m{m_bucket}/n{n}/k{k}")
 
 
 def default_cache_path() -> str:
@@ -251,22 +275,27 @@ def set_cache_path(path: Optional[str]) -> PlanCache:
 
 
 def default_plan(mode: QuantMode, backend: str, fused: bool,
-                 m: int, n: int, k: int) -> Plan:
+                 m: int, n: int, k: int, *, layout: str = "gemm",
+                 geom: Optional[str] = None) -> Plan:
     """The deterministic no-cache fallback: the mode's seed blocking."""
     return Plan(mode=mode, backend=backend, fused=fused,
                 device_kind=device_kind(), m_bucket=bucket_m(m), n=n, k=k,
-                tiles=DEFAULT_TILES[mode.value], source="default")
+                tiles=DEFAULT_TILES[mode.value], source="default",
+                layout=layout, geom=geom)
 
 
 def plan_for(mode: QuantMode, backend: str, *, fused: bool,
-             m: int, n: int, k: int) -> Plan:
+             m: int, n: int, k: int, layout: str = "gemm",
+             geom: Optional[str] = None) -> Plan:
     """Dispatch-time lookup (pure: never measures).  Called by the
     registry adapters at trace time — a cache hit returns the tuned
     tiles, a miss the DEFAULT_TILES fallback.  Deterministic per
     (shape-bucket, cache content), so repeated traces of the same shape
     resolve to the same blocking and the jit cache keeps hitting."""
-    key = plan_key(mode, backend, fused, device_kind(), bucket_m(m), n, k)
+    key = plan_key(mode, backend, fused, device_kind(), bucket_m(m), n, k,
+                   layout=layout, geom=geom)
     hit = get_cache().get(key)
     if hit is not None:
         return hit
-    return default_plan(mode, backend, fused, m, n, k)
+    return default_plan(mode, backend, fused, m, n, k, layout=layout,
+                        geom=geom)

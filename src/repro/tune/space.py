@@ -33,11 +33,12 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from repro.kernels._matmul_common import TileConfig, ceil_to
 
-__all__ = ["TuningSpace", "PALLAS_SPACE", "XLA_SPACE", "words_for"]
+__all__ = ["TuningSpace", "PALLAS_SPACE", "XLA_SPACE", "CONV_PALLAS_SPACE",
+           "words_for"]
 
 _SUBLANE = 8      # f32 sublane multiple (second-to-last dim)
 _LANE = 128       # lane multiple (last dim)
@@ -78,10 +79,19 @@ class TuningSpace:
 
     # -- normalization -------------------------------------------------------
 
-    def normalize(self, tc: TileConfig, m: int, n: int, k: int) -> TileConfig:
+    def normalize(self, tc: TileConfig, m: int, n: int, k: int,
+                  kw: Optional[int] = None) -> TileConfig:
         """The blocking the kernel would *actually* run for this shape —
-        the dedupe key that keeps the measured set minimal."""
-        kw = words_for(k)
+        the dedupe key that keeps the measured set minimal.
+
+        ``kw`` overrides the reduction word count when it differs from
+        ``words_for(k)`` — the fused-im2col conv kernels pack each patch
+        position word-aligned, so their axis has ``kh*kw*ceil(cin/32)``
+        words (> ``ceil(k/32)`` whenever ``cin % 32 != 0``); without the
+        override the ``block_kw`` candidates would clamp to the smaller
+        count and collapse for every odd-channel geometry.
+        """
+        kw = words_for(k) if kw is None else kw
         if self.kind == "xla":
             d = TileConfig()
             return TileConfig(block_m=d.block_m, block_n=d.block_n,
@@ -97,7 +107,8 @@ class TuningSpace:
     # -- enumeration ---------------------------------------------------------
 
     def candidates(self, m: int, n: int, k: int, *,
-                   default: TileConfig) -> List[TileConfig]:
+                   default: TileConfig,
+                   kw: Optional[int] = None) -> List[TileConfig]:
         """Deduped, validated candidate list for one (m, n, k) problem.
 
         Candidate 0 is the **raw** default — bit-for-bit the blocking an
@@ -112,15 +123,16 @@ class TuningSpace:
         """
         out: List[TileConfig] = [default]
         seen = set()
-        if self.kind == "xla" or self.normalize(default, m, n, k) == default:
+        if self.kind == "xla" or self.normalize(default, m, n, k,
+                                                kw) == default:
             # the normalized form executes identically to the raw
             # default (xla clamps word_chunk internally; pallas only
             # when normalization was a no-op) — don't measure it twice
-            seen.add(self.normalize(default, m, n, k))
+            seen.add(self.normalize(default, m, n, k, kw))
         for bm, bn, bkw, wc in itertools.product(
                 self.block_m, self.block_n, self.block_kw,
                 self.word_chunk):
-            eff = self.normalize(TileConfig(bm, bn, bkw, wc), m, n, k)
+            eff = self.normalize(TileConfig(bm, bn, bkw, wc), m, n, k, kw)
             if eff not in seen:
                 seen.add(eff)
                 out.append(eff)
@@ -134,3 +146,15 @@ PALLAS_SPACE = TuningSpace(kind="pallas")
 XLA_SPACE = TuningSpace(kind="xla",
                         block_m=(128,), block_n=(128,), block_kw=(256,),
                         word_chunk=(2, 4, 8, 16, 32))
+
+# Space for the fused-im2col conv Pallas kernels (kernels/conv_fused.py).
+# ``block_m`` blocks the *patch rows* (B*OH*OW) exactly like the GeMM m
+# axis; ``block_kw`` is the patch-blocked reduction axis — the kernel's
+# per-position packed words (kh*kw*ceil(Cin/32)) are consumed block_kw
+# words per outer step, so conv depths (a few dozen to a few hundred
+# words) want smaller k blocks than the LM projections.
+CONV_PALLAS_SPACE = TuningSpace(kind="pallas",
+                                block_m=(8, 32, 128),
+                                block_n=(128, 256),
+                                block_kw=(32, 128, 512),
+                                word_chunk=(4, 8))

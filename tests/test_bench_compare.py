@@ -1,0 +1,152 @@
+"""The CI perf-regression gate (benchmarks/compare.py): ratio
+extraction, tolerance semantics, the injected-synthetic-regression
+failure path, and the CLI exit codes.  Pure python — no jax, no timing —
+so the gate's behaviour itself is deterministic under test."""
+
+import json
+
+import pytest
+
+from benchmarks.compare import (BASELINE_CAPS, compare, extract_metrics,
+                                main, merge_baseline)
+
+
+def _results(fused_tnn=1.8, conv_l1=1.5, tuned=1.2):
+    return {
+        "fused": {
+            "tnn": {"speedup": fused_tnn, "unfused_s": 1e-3,
+                    "fused_s": 1e-3 / fused_tnn},
+            "bnn": {"speedup": 1.4},
+        },
+        "tuned_vs_default": {
+            "tnn/xla/m16n128k256": {"speedup": tuned,
+                                    "tiles": {"block_m": 128}},
+        },
+        "conv": {
+            "32x32x32->64": {
+                "bf16": {"qat_s": 1e-3},                 # no ratio: ignored
+                "tnn": {"qat_s": 1e-3, "packed_materializing_s": 2e-3,
+                        "packed_fused_s": 2e-3 / conv_l1,
+                        "fused_speedup": conv_l1,
+                        "hbm_bytes": {"materialized": 4, "fused": 1,
+                                      "saved": 3}},
+            },
+        },
+        "table3": {"tnn/f32": 3.2},                      # not gated
+        "meta": {"quick": True},
+    }
+
+
+def test_extract_metrics_covers_ratio_sections_only():
+    m = extract_metrics(_results())
+    assert m == {"fused/tnn": 1.8, "fused/bnn": 1.4,
+                 "tuned/tnn/xla/m16n128k256": 1.2,
+                 "conv/32x32x32->64/tnn": 1.5}
+
+
+def test_identical_runs_pass():
+    regs, lines = compare(_results(), _results(), 0.25)
+    assert regs == []
+    assert all("ok" in ln for ln in lines)
+
+
+def test_injected_synthetic_regression_fails():
+    """The acceptance-criterion case: degrade one fused kernel past the
+    tolerance and the gate must fail, naming the metric."""
+    current = _results(conv_l1=1.5 * 0.6)      # 40% drop > 25% tolerance
+    regs, _ = compare(_results(), current, 0.25)
+    assert len(regs) == 1
+    assert "conv/32x32x32->64/tnn" in regs[0]
+
+
+def test_drop_within_tolerance_passes():
+    current = _results(fused_tnn=1.8 * 0.8)    # 20% drop < 25% tolerance
+    regs, _ = compare(_results(), current, 0.25)
+    assert regs == []
+
+
+def test_boundary_is_inclusive():
+    current = _results(fused_tnn=1.8 * 0.75)   # exactly at the floor
+    regs, _ = compare(_results(), current, 0.25)
+    assert regs == []
+
+
+def test_missing_metric_is_a_regression():
+    current = _results()
+    del current["conv"]
+    regs, _ = compare(_results(), current, 0.25)
+    assert len(regs) == 1 and "missing" in regs[0]
+
+
+def test_new_metric_not_gated():
+    current = _results()
+    current["fused"]["tbn"] = {"speedup": 9.9}
+    regs, lines = compare(_results(), current, 0.25)
+    assert regs == []
+    assert any("new" in ln and "fused/tbn" in ln for ln in lines)
+
+
+def test_tolerance_validation():
+    with pytest.raises(ValueError, match="tolerance"):
+        compare(_results(), _results(), 1.0)
+    with pytest.raises(ValueError, match="tolerance"):
+        compare(_results(), _results(), -0.1)
+
+
+def test_merge_baseline_takes_min_and_caps():
+    """The committed baseline is min-over-runs with family caps — one
+    lucky run must not commit an unreachably high floor."""
+    runs = [_results(fused_tnn=2.0, conv_l1=1.12, tuned=3.0),
+            _results(fused_tnn=1.4, conv_l1=1.30, tuned=1.1),
+            _results(fused_tnn=1.9, conv_l1=1.25, tuned=2.2)]
+    merged = extract_metrics(merge_baseline(runs))
+    # fused: min(2.0, 1.4, 1.9)=1.4 capped to 1.15
+    assert merged["fused/tnn"] == BASELINE_CAPS["fused"]
+    # conv: min 1.12 already below the cap -> kept as-is
+    assert merged["conv/32x32x32->64/tnn"] == pytest.approx(1.12)
+    # tuned: >= 1.0 by construction -> capped to exactly 1.0
+    assert merged["tuned/tnn/xla/m16n128k256"] == BASELINE_CAPS["tuned"]
+
+
+def test_merge_baseline_rejects_mismatched_runs():
+    bad = _results()
+    del bad["conv"]
+    with pytest.raises(ValueError, match="different metrics"):
+        merge_baseline([_results(), bad])
+    with pytest.raises(ValueError, match="at least one"):
+        merge_baseline([])
+
+
+def test_merge_baseline_cli_roundtrips_through_gate(tmp_path, capsys):
+    """make bench-baseline's path: merge runs -> written baseline must
+    pass the gate against each of the runs it was folded from."""
+    paths = []
+    for i, r in enumerate([_results(fused_tnn=1.6), _results(fused_tnn=1.3)]):
+        p = tmp_path / f"run{i}.json"
+        p.write_text(json.dumps(r))
+        paths.append(str(p))
+    out = tmp_path / "baseline.json"
+    assert main(["--merge-baseline", *paths, "--out", str(out)]) == 0
+    assert "folded from 2 run(s)" in capsys.readouterr().out
+    merged = json.loads(out.read_text())
+    assert "baseline_note" in merged["meta"]
+    for p in paths:
+        assert main(["--baseline", str(out), "--current", p]) == 0
+        capsys.readouterr()
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    base = tmp_path / "baseline.json"
+    cur = tmp_path / "current.json"
+    base.write_text(json.dumps(_results()))
+
+    cur.write_text(json.dumps(_results()))
+    assert main(["--baseline", str(base), "--current", str(cur)]) == 0
+    assert "PASS" in capsys.readouterr().out
+
+    cur.write_text(json.dumps(_results(tuned=0.5)))
+    assert main(["--baseline", str(base), "--current", str(cur),
+                 "--tolerance", "0.25"]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "tuned/tnn/xla/m16n128k256" in out
+    assert "bench-baseline" in out          # points at the refresh path
