@@ -4,7 +4,7 @@
 PY      := PYTHONPATH=src python
 TOL     := 0.25
 
-.PHONY: test test-fast lint bench bench-baseline bench-check
+.PHONY: test test-fast lint bench bench-dense bench-baseline bench-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -18,6 +18,12 @@ lint:
 # Full benchmark pass -> BENCH_results.json (the CI artifact).
 bench:
 	$(PY) -m benchmarks.run --json BENCH_results.json
+
+# Dense-backend sections only: in-VMEM unpack kernel vs the three-pass
+# oracle plus the dense-vs-pallas crossover -> bench_dense.json.
+bench-dense:
+	$(PY) -m benchmarks.bench_matmul --skip-table3 --backend dense \
+		--crossover --json bench_dense.json
 
 # Deliberately refresh the committed perf baseline.  Run on an IDLE
 # reference container: three full runs, folded by benchmarks.compare

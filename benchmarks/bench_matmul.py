@@ -183,6 +183,48 @@ def run_fused(quick: bool = False, backend: str = "xla") -> Dict[str, Dict]:
     return out
 
 
+def run_dense(quick: bool = False) -> Dict[str, Dict]:
+    """Dense-backend fusion: the in-VMEM bit-plane unpack kernel
+    (``dense_matmul_fused_pallas``, one ``ops.qmm`` dispatch) vs the
+    three-pass unfused dense oracle (quantize / materializing unpack +
+    dot / scale — the pre-fusion dense pipeline).  The ratio is what the
+    CI perf gate tracks for the dense backend."""
+    return run_fused(quick=quick, backend="dense")
+
+
+def run_dense_crossover(quick: bool = False) -> Dict[str, Dict]:
+    """Dense-vs-pallas crossover: ``ops.qmm`` on the same packed QTensor
+    through the MXU dense kernel and the VPU popcount pallas kernel, per
+    (mode, shape).  speedup = t_pallas / t_dense (> 1: the dense kernel
+    wins at that shape) — the number that says which kernel to serve a
+    given projection with."""
+    shapes = [(16, 128, 256)] if quick else [(16, 128, 256),
+                                             (128, 256, 512)]
+    key = jax.random.PRNGKey(13)
+    out: Dict[str, Dict] = {}
+    print("\nDense-vs-pallas crossover (ops.qmm, same packed QTensor; "
+          "speedup = t_pallas / t_dense):")
+    print(f"{'mode':>6s} {'shape':>16s} {'pallas(us)':>11s} "
+          f"{'dense(us)':>10s} {'speedup':>8s}")
+    for mode in registry.modes():
+        for (m, n, d) in shapes:
+            k1, k2 = jax.random.split(jax.random.fold_in(key, m + n + d))
+            x = jax.random.normal(k1, (m, d), jnp.float32)
+            qt = ops.pack_weights(jax.random.normal(k2, (d, n), jnp.float32),
+                                  mode)
+            fp = jax.jit(lambda x, qt=qt: ops.qmm(x, qt, backend="pallas"))
+            fd = jax.jit(lambda x, qt=qt: ops.qmm(x, qt, backend="dense"))
+            reps = 3 if quick else 5
+            tp = _time(lambda: fp(x), reps=reps)
+            td = _time(lambda: fd(x), reps=reps)
+            keyname = f"{mode.value}/m{m}n{n}k{d}"
+            out[keyname] = {"pallas_s": tp, "dense_s": td,
+                            "speedup": tp / td}
+            print(f"{mode.value:>6s} {f'{m}x{n}x{d}':>16s} {tp*1e6:11.0f} "
+                  f"{td*1e6:10.0f} {tp/td:8.2f}x")
+    return out
+
+
 def run_tuned(quick: bool = False) -> Dict[str, Dict]:
     """Tuned vs default tiling for every *tunable* fused registry entry.
 
@@ -244,12 +286,16 @@ def main():
                     help="only run the fused-vs-unfused comparison")
     ap.add_argument("--tuned", action="store_true",
                     help="also run the tuned-vs-default tiling section")
+    ap.add_argument("--crossover", action="store_true",
+                    help="also run the dense-vs-pallas crossover section")
     args = ap.parse_args()
 
     results: Dict[str, Dict] = {}
     if not args.skip_table3:
         results["table3"] = run(quick=args.quick)
     results["fused"] = run_fused(quick=args.quick, backend=args.backend)
+    if args.crossover:
+        results["dense_crossover"] = run_dense_crossover(quick=args.quick)
     if args.tuned:
         results["tuned_vs_default"] = run_tuned(quick=args.quick)
 

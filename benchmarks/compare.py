@@ -43,7 +43,13 @@ from typing import Dict, List, Tuple
 __all__ = ["extract_metrics", "compare", "merge_baseline", "main"]
 
 # Per-family caps applied by --merge-baseline (see module docstring).
-BASELINE_CAPS = {"fused": 1.15, "conv": 1.15, "tuned": 1.0}
+# dense_crossover is a cross-KERNEL ratio (pallas vs dense) rather than
+# a fused-vs-unfused win, so it caps at 1.0: the gate only catches the
+# dense kernel collapsing relative to the popcount kernel, it never
+# demands a margin.
+BASELINE_CAPS = {"fused": 1.15, "conv": 1.15, "tuned": 1.0,
+                 "dense_fused": 1.15, "conv_dense": 1.15,
+                 "dense_crossover": 1.0}
 
 
 def extract_metrics(results: Dict) -> Dict[str, float]:
@@ -53,24 +59,30 @@ def extract_metrics(results: Dict) -> Dict[str, float]:
     contributes nothing):
 
     * ``fused``            — ops.qmm fused-vs-unfused per mode;
+    * ``dense_fused``      — dense backend: in-VMEM unpack kernel vs the
+      three-pass materializing oracle, per mode;
+    * ``dense_crossover``  — ops.qmm dense-vs-pallas kernel ratio per
+      (mode, shape);
     * ``tuned_vs_default`` — autotuner tuned-vs-default tiling per
       (mode, backend, shape);
-    * ``conv``             — fused-im2col vs materializing conv2d_packed
-      per (layer, mode).
+    * ``conv``/``conv_dense`` — fused-im2col vs materializing
+      conv2d_packed per (layer, mode), default and dense backends.
     """
     out: Dict[str, float] = {}
-    for mode, d in (results.get("fused") or {}).items():
-        if isinstance(d, dict) and "speedup" in d:
-            out[f"fused/{mode}"] = float(d["speedup"])
+    for family in ("fused", "dense_fused", "dense_crossover"):
+        for key, d in (results.get(family) or {}).items():
+            if isinstance(d, dict) and "speedup" in d:
+                out[f"{family}/{key}"] = float(d["speedup"])
     for key, d in (results.get("tuned_vs_default") or {}).items():
         if isinstance(d, dict) and "speedup" in d:
             out[f"tuned/{key}"] = float(d["speedup"])
-    for layer, modes in (results.get("conv") or {}).items():
-        if not isinstance(modes, dict):
-            continue
-        for mode, d in modes.items():
-            if isinstance(d, dict) and "fused_speedup" in d:
-                out[f"conv/{layer}/{mode}"] = float(d["fused_speedup"])
+    for family in ("conv", "conv_dense"):
+        for layer, modes in (results.get(family) or {}).items():
+            if not isinstance(modes, dict):
+                continue
+            for mode, d in modes.items():
+                if isinstance(d, dict) and "fused_speedup" in d:
+                    out[f"{family}/{layer}/{mode}"] = float(d["fused_speedup"])
     return out
 
 
@@ -112,13 +124,13 @@ def compare(baseline: Dict, current: Dict, tolerance: float
 def _set_metric(doc: Dict, name: str, value: float) -> None:
     """Write one flattened metric name back into a results document."""
     family, rest = name.split("/", 1)
-    if family == "fused":
-        doc["fused"][rest]["speedup"] = value
+    if family in ("fused", "dense_fused", "dense_crossover"):
+        doc[family][rest]["speedup"] = value
     elif family == "tuned":
         doc["tuned_vs_default"][rest]["speedup"] = value
-    else:
+    else:                                     # conv / conv_dense
         layer, mode = rest.rsplit("/", 1)
-        doc["conv"][layer][mode]["fused_speedup"] = value
+        doc[family][layer][mode]["fused_speedup"] = value
 
 
 def merge_baseline(runs: List[Dict]) -> Dict:

@@ -20,12 +20,14 @@ oracle — consume the same jitted stats computation, so their quantize /
 pack semantics are identical bit for bit.
 
 Operand layout: activations pack along the *channel* axis, one word
-vector per pixel; weights are re-expressed in the matching per-patch-
-position layout (a no-op re-view when ``Cin % 32 == 0``, a cheap
-in-trace repack otherwise).  Word-aligned pads are zero on both sides —
-(0,0) ternary codes and ``+1`` binary codes on both operands — so the
-popcount sum over the per-position layout equals the contiguous-k sum
-exactly and eq. (6) stays valid with the true ``k_valid``.
+vector per pixel; weights arrive in the matching per-patch-position
+layout (``conv_weight_planes``: a no-op re-view when ``Cin % 32 == 0``,
+the pack-time positional payload of ``POS_PAYLOAD_KEYS`` otherwise,
+with an exact in-trace repack as the legacy-container fallback).
+Word-aligned pads are zero on both sides — (0,0) ternary codes and
+``+1`` binary codes on both operands — so the popcount sum over the
+per-position layout equals the contiguous-k sum exactly and eq. (6)
+stays valid with the true ``k_valid``.
 
 Three backends, mirroring the GeMM kernels:
 
@@ -38,9 +40,10 @@ Three backends, mirroring the GeMM kernels:
   gather the *packed* words with one strided slice per patch position,
   then the k-chunked popcount ``lax.scan`` with the epilogue fused onto
   the final carry;
-* ``dense`` — quantize once, then a native ``lax.conv_general_dilated``
-  over the +-1/0 values on the MXU (integer-exact in f32 accumulation),
-  epilogue fused by XLA.
+* ``dense`` — lives in ``kernels/dense_fused.py``: same program_id patch
+  gather, but the weight bit planes unpack to ±1/0 bf16 tiles in VMEM
+  and the reduction rides ``jnp.dot`` / the MXU (integer-exact f32
+  accumulation), epilogue in-kernel.
 
 All entries register under ``(mode, backend, fused=True,
 layout="im2col_fused")``; ``ops.qconv`` / ``conv2d_packed`` dispatch
@@ -72,7 +75,9 @@ from repro.tune.space import CONV_PALLAS_SPACE, XLA_SPACE
 # imports here would close that cycle during interpreter start-up.
 
 __all__ = ["conv_out_hw", "conv_spatial_pad", "conv_act_stats",
-           "conv_problem_dims", "geom_tag", "im2col_hbm_bytes"]
+           "conv_problem_dims", "geom_tag", "im2col_hbm_bytes",
+           "conv_weight_planes", "gather_patch_tile",
+           "quantize_patch_values"]
 
 
 # ---------------------------------------------------------------------------
@@ -212,16 +217,14 @@ def _pack_activation_planes(xp: jnp.ndarray, mode: QuantMode,
 
 
 def _conv_weight_planes(b_planes, mode: QuantMode, geometry):
-    """Weight bit planes in the per-patch-position layout the conv
-    kernels stream: position p's channel slab packs into its own
-    word-aligned run of ceil(Cin/32) words.  When ``Cin % 32 == 0`` this
-    IS the stored contiguous-k payload (word boundaries coincide);
-    otherwise the planes are re-packed inside the trace (O(n*k) per
-    call — pad codes are zero on both operands so the popcount total is
-    unchanged).  Deployment models that want zero per-call repack should
-    keep Cin a multiple of 32 (the paper's eq. (5)-sized configs already
-    do); storing a second, positional payload layout at pack time for
-    odd channel counts is a ROADMAP follow-up."""
+    """LEGACY fallback: re-derive the per-patch-position weight planes
+    from the contiguous-k payload inside the trace (O(n*k) per trace —
+    pad codes are zero on both operands so the popcount total is
+    unchanged).  New packs store this layout at pack time
+    (``POS_PAYLOAD_KEYS``); only containers migrated from legacy dicts /
+    old checkpoints still route through here.  Bit-identical to the
+    stored planes by construction (same quantized values, same
+    word-aligned pack)."""
     from repro.core import encoding
 
     kh, kw, cin, cout = geometry
@@ -237,6 +240,64 @@ def _conv_weight_planes(b_planes, mode: QuantMode, geometry):
         return (encoding.pack_bits(v3 > 0).reshape(cout, -1),
                 encoding.pack_bits(v3 < 0).reshape(cout, -1))
     return (encoding.pack_bits(v3 < 0).reshape(cout, -1),)
+
+
+def conv_weight_planes(qt) -> Tuple[jnp.ndarray, ...]:
+    """Weight planes in the per-patch-position layout the fused conv
+    kernels stream, resolved from a conv-packed :class:`QTensor`:
+
+    * ``Cin % 32 == 0`` — the stored contiguous-k payload already IS the
+      positional layout (word boundaries coincide): zero-copy;
+    * positional planes stored at pack time (``POS_PAYLOAD_KEYS``, the
+      ``Cin % 32 != 0`` case) — zero-copy;
+    * legacy containers without them — exact in-trace repack via
+      :func:`_conv_weight_planes` (the pre-positional behaviour).
+    """
+    from repro.kernels.qtensor import PAYLOAD_KEYS, POS_PAYLOAD_KEYS
+
+    kh, kw, cin, cout = qt.geometry
+    planes = tuple(qt.payload[k] for k in PAYLOAD_KEYS[qt.mode])
+    if cin % 32 == 0:
+        return planes
+    pos_keys = POS_PAYLOAD_KEYS[qt.mode]
+    if all(k in qt.payload for k in pos_keys):
+        return tuple(qt.payload[k] for k in pos_keys)
+    return _conv_weight_planes(planes, qt.mode, qt.geometry)
+
+
+# ---------------------------------------------------------------------------
+# Shared A-operand load path of the Pallas conv kernels
+# ---------------------------------------------------------------------------
+
+def gather_patch_tile(xv: jnp.ndarray, pid_m, *, block_m: int, m: int,
+                      oh: int, ow: int, stride: int, kh: int,
+                      kw: int) -> jnp.ndarray:
+    """Raw (block_m, kh*kw, Cin) float patch tile for one m block: patch
+    coordinates derived from ``program_id`` — the A-operand load path
+    shared by the popcount (vpu) and dense (mxu) fused conv kernels.
+    Pad rows past ``m`` re-gather row m-1 (their output is sliced off)."""
+    mi = pid_m * block_m + jax.lax.broadcasted_iota(jnp.int32, (block_m,), 0)
+    mi = jnp.minimum(mi, m - 1)
+    bi = mi // (oh * ow)
+    rem = mi % (oh * ow)
+    hi = (rem // ow) * stride
+    wi = (rem % ow) * stride
+    dy = jax.lax.broadcasted_iota(jnp.int32, (kh, kw), 0)
+    dx = jax.lax.broadcasted_iota(jnp.int32, (kh, kw), 1)
+    patch = xv[bi[:, None, None], hi[:, None, None] + dy[None],
+               wi[:, None, None] + dx[None]]          # (bm, kh, kw, C)
+    return patch.reshape(block_m, kh * kw, xv.shape[-1])
+
+
+def quantize_patch_values(patch: jnp.ndarray, mode: QuantMode,
+                          thr) -> jnp.ndarray:
+    """Elementwise per-tensor quantization of a gathered patch tile to
+    its ±1/0 *values* (per-tensor stats commute with gathering) — what
+    the dense kernels feed the MXU; the popcount kernels bit-plane pack
+    the same comparisons.  ``thr`` is ignored for BNN."""
+    if mode == QuantMode.BNN:
+        return jnp.where(patch < 0, -1.0, 1.0)
+    return jnp.sign(patch) * (jnp.abs(patch) > thr)
 
 
 # ---------------------------------------------------------------------------
@@ -265,7 +326,7 @@ def _conv_xla_fused(mode: QuantMode, x, b_planes, geometry, stride, padding,
                                     stride, padding)
     bsz = xp.shape[0]
     a_full = _pack_activation_planes(xp, mode, stats)   # (B, Hp, Wp, cw) each
-    b_conv = _conv_weight_planes(b_planes, mode, geometry)
+    b_conv = tuple(b_planes)      # already per-patch-position layout
     cw = a_full[0].shape[-1]
     alpha = jnp.reshape(stats["scale"], (1, 1))
     product = ops._PRODUCT_FNS[mode]
@@ -318,7 +379,7 @@ def _conv_pallas_fused(mode: QuantMode, x, b_planes, geometry, stride,
                                     stride, padding)
     bsz = xp.shape[0]
     m = bsz * oh * ow
-    b_conv = _conv_weight_planes(b_planes, mode, geometry)
+    b_conv = tuple(b_planes)      # already per-patch-position layout
     words = int(b_conv[0].shape[-1])                    # kh*kw*ceil(cin/32)
     product = ops._PRODUCT_FNS[mode]
 
@@ -352,19 +413,9 @@ def _conv_pallas_fused(mode: QuantMode, x, b_planes, geometry, stride,
         o_ref = refs[-1]
 
         # -- patch coordinates for this m block (A-operand load path) --
-        i = pl.program_id(0)
-        mi = i * block_m + jax.lax.broadcasted_iota(jnp.int32, (block_m,), 0)
-        mi = jnp.minimum(mi, m - 1)          # pad rows re-gather row m-1
-        bi = mi // (oh * ow)
-        rem = mi % (oh * ow)
-        hi = (rem // ow) * stride
-        wi = (rem % ow) * stride
-        dy = jax.lax.broadcasted_iota(jnp.int32, (kh, kw), 0)
-        dx = jax.lax.broadcasted_iota(jnp.int32, (kh, kw), 1)
-        xv = x_ref[...]                      # (B, Hp, Wp, C)
-        patch = xv[bi[:, None, None], hi[:, None, None] + dy[None],
-                   wi[:, None, None] + dx[None]]      # (bm, kh, kw, C)
-        patch = patch.reshape(block_m, kh * kw, cin)
+        patch = gather_patch_tile(x_ref[...], pl.program_id(0),
+                                  block_m=block_m, m=m, oh=oh, ow=ow,
+                                  stride=stride, kh=kh, kw=kw)
 
         # -- quantize + pack the tile in VMEM (same ops as encoding) ---
         if mode == QuantMode.BNN:
@@ -419,38 +470,10 @@ def _conv_pallas_fused(mode: QuantMode, x, b_planes, geometry, stride,
 
 
 # ---------------------------------------------------------------------------
-# Dense backend: quantize once + native MXU conv
-# ---------------------------------------------------------------------------
-
-def _conv_dense_fused(mode: QuantMode, x, b_planes, geometry, stride,
-                      padding, stats, col_scale, bias):
-    from repro.core import encoding
-    from repro.kernels import ops
-
-    kh, kw, cin, cout = geometry
-    k = kh * kw * cin
-    xp, _ = conv_spatial_pad(x.astype(jnp.float32), kh, kw, stride, padding)
-    if mode == QuantMode.BNN:
-        t = jnp.where(xp < 0, -1.0, 1.0)
-    else:
-        t = jnp.sign(xp) * (jnp.abs(xp) > stats["thr"])
-    if mode == QuantMode.TNN:
-        wv = encoding.unpack_ternary(b_planes[0], b_planes[1], k,
-                                     jnp.bfloat16)
-    else:
-        wv = encoding.unpack_binary(b_planes[0], k, jnp.bfloat16)
-    filt = wv.T.reshape(kh, kw, cin, cout)
-    acc = jax.lax.conv_general_dilated(
-        t.astype(jnp.bfloat16), filt, (stride, stride), "VALID",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        preferred_element_type=jnp.float32).astype(jnp.int32)
-    b1 = None if bias is None else bias.reshape((cout,))
-    return ops._scale_epilogue_f32(acc, stats["scale"],
-                                   col_scale.reshape((cout,)), b1)
-
-
-# ---------------------------------------------------------------------------
-# Registration — (mode, backend, fused=True, layout="im2col_fused")
+# Registration — (mode, backend, fused=True, layout="im2col_fused").
+# The dense (MXU) conv kernel lives in kernels/dense_fused.py: it shares
+# gather_patch_tile/quantize_patch_values above but unpacks the weight
+# planes to ±1/0 bf16 tiles in VMEM and rides jnp.dot.
 # ---------------------------------------------------------------------------
 
 def _resolve_conv_tiles(mode: QuantMode, backend: str, x_shape, geometry,
@@ -488,14 +511,6 @@ def _register_conv_kernels():
                                    word_chunk=t.word_chunk)
         return fn
 
-    def make_dense(mode):
-        def fn(x, b_planes, geometry, stride, padding, stats, col_scale,
-               bias, *, interpret=True, tiles=None):
-            del interpret, tiles        # XLA picks the conv tiling itself
-            return _conv_dense_fused(mode, x, b_planes, geometry, stride,
-                                     padding, stats, col_scale, bias)
-        return fn
-
     for mode in (M.BNN, M.TNN, M.TBN):
         registry.register(
             mode, "pallas", fused=True, layout=registry.LAYOUT_IM2COL,
@@ -511,12 +526,6 @@ def _register_conv_kernels():
             description="pack-once activations; packed-word patch gather + "
                         "k-chunked popcount scan",
         )(make_xla(mode))
-        registry.register(
-            mode, "dense", fused=True, layout=registry.LAYOUT_IM2COL,
-            epilogue="xla-fused", compute="mxu-dense",
-            description="quantize once + native lax.conv on the +-1/0 "
-                        "values",
-        )(make_dense(mode))
 
 
 _register_conv_kernels()

@@ -22,7 +22,10 @@ ladders.  Three backends per low-bit mode:
   formulation, written as a k-chunked ``lax.scan`` so the (m, n, chunk)
   broadcast never exceeds a VMEM-sized working set;
 * ``dense``   — a beyond-paper TPU alternative: keep the *storage* packed
-  (the memory win) but unpack to ±1/0 bf16 at use and ride the MXU.
+  (the memory win) and ride the MXU — the fused kernels
+  (kernels/dense_fused.py) unpack bit-plane words to ±1/0 bf16 tiles in
+  VMEM, directly ahead of the dot; the unfused entry keeps the
+  materializing HBM unpack as the bit-exact oracle.
 
 Plus the float-in/float-out ``quantized_matmul`` with straight-through
 (STE) gradients for QAT.
@@ -325,32 +328,26 @@ def _register_all_kernels():
             return jnp.dot(av, bv.T,
                            preferred_element_type=jnp.float32).astype(jnp.int32)
 
-        def dense_fused(a, b, k, r, c, bias, *, interpret=True, tiles=None,
-                        _m=mode):
-            del tiles
-            acc = registry.lookup(_m, "dense", fused=False).fn(
-                a, b, k, interpret=interpret)
-            return _scale_epilogue_f32(acc, r, c, bias)
-
+        # The materializing HBM unpack survives only as the UNFUSED
+        # entry — the bit-exact oracle for the in-VMEM dense kernels of
+        # kernels/dense_fused.py, which register the fused slots.
         registry.register(
-            mode, "dense", fused=False, epilogue="none", compute="mxu-dense",
-            description="packed storage; unpack to bf16 and ride the MXU",
+            mode, "dense", fused=False, epilogue="none", compute="mxu-xla",
+            description="materializing oracle: unpack the whole payload to "
+                        "bf16 in HBM, then one XLA dot",
         )(dense_unfused)
-        registry.register(
-            mode, "dense", fused=True, epilogue="xla-fused",
-            compute="mxu-dense",
-            description="dense core; epilogue fused by XLA in the same trace "
-                        "(in-kernel dense fusion is an open ROADMAP item)",
-        )(dense_fused)
 
 
 _register_all_kernels()
 
-# Registers the fused-im2col conv kernels (layout="im2col_fused") as an
-# import side effect.  Must come after _register_all_kernels() and after
-# the core imports above so conv_fused's lazy repro.core references
-# always resolve.
+# Registers the fused-im2col conv kernels (layout="im2col_fused") and
+# the dense-backend MXU fusion kernels (both layouts) as import side
+# effects.  Must come after _register_all_kernels() and after the core
+# imports above so their lazy repro.core references always resolve;
+# dense_fused imports conv_fused's shared patch-gather helpers, so the
+# order below matters.
 from repro.kernels import conv_fused as _conv_fused  # noqa: E402,F401
+from repro.kernels import dense_fused as _dense_fused  # noqa: E402,F401
 
 
 # ---------------------------------------------------------------------------
@@ -556,8 +553,10 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
       ``pid_k == num_k - 1`` (``*_fused_pallas``), float32 out;
     * ``xla``: the epilogue is fused onto the final ``lax.scan`` carry
       (``*_xla_fused``);
-    * ``dense``: unpack + MXU dot + epilogue in the same trace (kernel-
-      level fusion for this backend is an open roadmap item).
+    * ``dense``: Pallas kernel unpacks the bit-plane words to ±1/0 bf16
+      tiles in VMEM and feeds the MXU, epilogue at ``pid_k == num_k-1``
+      (``dense_matmul_fused_pallas``) — the dense unpack never touches
+      HBM.
 
     Float modes are a dense dot (+ bias); u8/u4 run the affine eq. (3)
     pipeline.  Numerics match the unfused oracle exactly: the integer
@@ -632,7 +631,11 @@ def _qconv_jit(x, qt: QTensor, act_stats, backend: str, stride: int,
     cout = qt.geometry[3]
     col = _as_col_vec(qt.scale, cout)
     b2 = None if qt.bias is None else _as_col_vec(qt.bias, cout)
-    return spec.fn(x.astype(jnp.float32), _b_planes(qt, qt.mode),
+    # Weight planes in the per-patch-position layout every conv kernel
+    # streams: zero-copy from the pack-time positional payload (or the
+    # contiguous payload when Cin is a word multiple); only legacy
+    # containers fall back to an in-trace repack.
+    return spec.fn(x.astype(jnp.float32), _conv_fused.conv_weight_planes(qt),
                    qt.geometry, stride, padding, act_stats, col, b2,
                    interpret=interpret, tiles=tiles)
 

@@ -24,6 +24,12 @@ the GeMM kernels stream contiguous rows of B^T):
     int8 / int4    {"q"}               (k, n) int32-valued grid
     f32 / bf16     {"w"}               (k, n) dense
 
+Conv-packed low-bit weights whose ``Cin % 32 != 0`` additionally carry
+the *positional* planes of ``POS_PAYLOAD_KEYS`` ("pos_plus"/"pos_minus"
+or "pos_bits"): the per-patch-position word-aligned view the fused
+im2col kernels stream, stored once at pack time so serving never
+repacks on the hot path.
+
 Stacked containers (scanned layer periods, MoE experts) are the same
 type with extra leading axes on every leaf — ``jax.vmap`` /
 ``jax.lax.scan`` slice the leaves and keep the aux data, which always
@@ -45,8 +51,8 @@ from repro.kernels.modes import QuantMode
 # core/__init__ -> qlinear -> kernels.ops -> THIS module is a cycle; a
 # top-level core import here would re-enter before QTensor is defined.
 
-__all__ = ["QTensor", "PAYLOAD_KEYS", "LAYOUT_BITPLANE", "LAYOUT_AFFINE",
-           "LAYOUT_DENSE"]
+__all__ = ["QTensor", "PAYLOAD_KEYS", "POS_PAYLOAD_KEYS", "LAYOUT_BITPLANE",
+           "LAYOUT_AFFINE", "LAYOUT_DENSE"]
 
 LAYOUT_BITPLANE = "bitplane32"   # uint32 words, 32 depth elems per word
 LAYOUT_AFFINE = "affine"         # integer grid + scale/zero (eq. (1)-(3))
@@ -64,6 +70,36 @@ PAYLOAD_KEYS: Dict[QuantMode, Tuple[str, ...]] = {
     QuantMode.F32: ("w",),
     QuantMode.BF16: ("w",),
 }
+
+# Optional *positional* conv weight planes, stored at pack time for conv
+# geometries whose Cin is NOT a word multiple: each patch position packs
+# its Cin channels into its own word-aligned run of ceil(Cin/32) uint32
+# words — the layout the fused-im2col kernels stream.  When Cin % 32 ==
+# 0 the contiguous-k payload already IS that layout (word boundaries
+# coincide), so nothing extra is stored; legacy QTensors without these
+# keys fall back to an exact in-trace repack (conv_fused).
+POS_PAYLOAD_KEYS: Dict[QuantMode, Tuple[str, ...]] = {
+    QuantMode.TNN: ("pos_plus", "pos_minus"),
+    QuantMode.TBN: ("pos_bits",),
+    QuantMode.BNN: ("pos_bits",),
+}
+
+
+def _positional_conv_planes(vals_t: jnp.ndarray, mode: QuantMode,
+                            geometry: Tuple[int, int, int, int]
+                            ) -> Dict[str, jnp.ndarray]:
+    """Per-patch-position word view of (n, k) quantized values: position
+    p's Cin channels pack into their own word-aligned run.  Stored at
+    pack time (POS_PAYLOAD_KEYS) so serving never repacks in-trace."""
+    from repro.core import encoding
+
+    kh, kw, cin, _ = geometry
+    n = vals_t.shape[0]
+    v3 = vals_t.reshape(n, kh * kw, cin)
+    if mode == QuantMode.TNN:
+        return {"pos_plus": encoding.pack_bits(v3 > 0).reshape(n, -1),
+                "pos_minus": encoding.pack_bits(v3 < 0).reshape(n, -1)}
+    return {"pos_bits": encoding.pack_bits(v3 < 0).reshape(n, -1)}
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -148,13 +184,19 @@ class QTensor:
             denom = jnp.maximum(jnp.sum(mask, axis=axis), 1)
             scale = jnp.sum(jnp.abs(w) * mask, axis=axis) / denom   # (n,)
             plus, minus = encoding.pack_ternary(t.T)                # (n, kw)
-            return cls(payload={"plus": plus, "minus": minus}, scale=scale,
+            payload = {"plus": plus, "minus": minus}
+            if geometry is not None and geometry[2] % 32 != 0:
+                payload.update(_positional_conv_planes(t.T, mode, geometry))
+            return cls(payload=payload, scale=scale,
                        mode=mode, shape=shape, bias=bias, geometry=geometry)
         if mode in (QuantMode.TBN, QuantMode.BNN):
             axis = 0 if per_channel else None
             scale = jnp.mean(jnp.abs(w), axis=axis)                 # (n,)
             bits = encoding.pack_binary(w.T)                        # (n, kw)
-            return cls(payload={"bits": bits}, scale=scale, mode=mode,
+            payload = {"bits": bits}
+            if geometry is not None and geometry[2] % 32 != 0:
+                payload.update(_positional_conv_planes(w.T, mode, geometry))
+            return cls(payload=payload, scale=scale, mode=mode,
                        shape=shape, bias=bias, geometry=geometry)
         if mode in (QuantMode.INT8, QuantMode.INT4):
             nbits = 8 if mode == QuantMode.INT8 else 4
@@ -216,8 +258,11 @@ class QTensor:
 
     def to_legacy_dict(self) -> Dict[str, Any]:
         """Inverse of :meth:`from_legacy_dict` (minus the depth, which the
-        legacy format could not represent)."""
-        out: Dict[str, Any] = dict(self.payload)
+        legacy format could not represent; positional conv planes are
+        derived data the legacy format never stored, so they are dropped
+        — migration back re-derives them in-trace, exactly)."""
+        out: Dict[str, Any] = {k: self.payload[k]
+                               for k in PAYLOAD_KEYS[self.mode]}
         if self.scale is not None:
             out["scale"] = self.scale
         if self.bias is not None:

@@ -5,8 +5,9 @@ This replaces the duplicated mode x backend if/elif ladders that used to
 live inside ``ops.packed_matmul`` and ``ops.fused_qmm``: kernels register
 themselves once, dispatch is a dict lookup, and benchmarks / tests / the
 serving engine can *enumerate* what exists instead of hard-coding mode
-lists.  New kernels (the ROADMAP's dense-backend Pallas fusion) plug in
-by registering a new entry — no dispatch code changes.
+lists.  New kernels plug in by registering a new entry — no dispatch
+code changes (the fused-im2col conv kernels and the dense-backend MXU
+fusion kernels both landed exactly this way).
 
 ``layout`` names the *operand layout* the kernel consumes:
 
@@ -32,8 +33,10 @@ arrays — 1 plane for binary operands, 2 (plus, minus) for ternary):
 ``tiles`` (a ``TileConfig``) overrides the kernel's blocking; ``None``
 resolves it from the autotuning plan cache at trace time (tuned plan on
 a hit, ``DEFAULT_TILES`` fallback otherwise).  Kernels with no tunable
-blocking (``tunable=None``, e.g. the dense backend) accept and ignore
-the keyword.
+blocking (``tunable=None``, e.g. the materializing dense oracle, where
+XLA picks the tiling) accept and ignore the keyword; every FUSED entry
+— including the dense-backend MXU kernels of kernels/dense_fused.py —
+declares a ``TuningSpace``.
 """
 
 from __future__ import annotations
@@ -59,13 +62,14 @@ class KernelSpec:
     backend: str              # "pallas" | "xla" | "dense" | ...
     fused: bool               # epilogue included in the kernel/trace
     fn: Callable
-    epilogue: str             # "in-kernel" | "scan-carry" | "xla-fused" | "none"
-    compute: str              # "vpu-popcount" | "mxu-dense" | ...
+    epilogue: str             # "in-kernel" | "scan-carry" | "none"
+    compute: str              # "vpu-popcount" | "mxu-dense" | "mxu-xla" | ...
     description: str = ""
     # Autotuning descriptor (repro.tune.space.TuningSpace) — the set of
     # (block_m, block_n, block_kw, word_chunk) candidates the tuner may
     # measure for this kernel.  None means the kernel has no tunable
-    # blocking (e.g. the dense backend, where XLA picks the tiling).
+    # blocking (only the materializing dense oracle, where XLA picks the
+    # tiling — every fused entry declares a space).
     # Tunable kernels must accept a ``tiles=`` keyword (TileConfig).
     tunable: Optional[Any] = None
     layout: str = LAYOUT_GEMM  # "gemm" | "im2col_fused"

@@ -38,7 +38,7 @@ from typing import List, Optional, Tuple
 from repro.kernels._matmul_common import TileConfig, ceil_to
 
 __all__ = ["TuningSpace", "PALLAS_SPACE", "XLA_SPACE", "CONV_PALLAS_SPACE",
-           "words_for"]
+           "DENSE_SPACE", "CONV_DENSE_SPACE", "words_for"]
 
 _SUBLANE = 8      # f32 sublane multiple (second-to-last dim)
 _LANE = 128       # lane multiple (last dim)
@@ -158,3 +158,25 @@ CONV_PALLAS_SPACE = TuningSpace(kind="pallas",
                                 block_n=(128, 256),
                                 block_kw=(32, 128, 512),
                                 word_chunk=(4, 8))
+
+# Dense-backend (MXU) fused GeMM kernels (kernels/dense_fused.py): the
+# grid axes mirror the popcount kernels, but each inner step unpacks a
+# ``word_chunk``-word slice to a (block, word_chunk*32)-element ±1/0
+# bf16 tile and feeds one MXU dot — so word_chunk here sets the k extent
+# of every dot (128/256 elements) and block_kw the VMEM-resident word
+# depth between output revisits.
+DENSE_SPACE = TuningSpace(kind="pallas",
+                          block_m=(8, 32, 128),
+                          block_n=(128, 256),
+                          block_kw=(8, 32, 128),
+                          word_chunk=(4, 8))
+
+# The dense fused-im2col conv kernel tiles only the (patch-row, cout)
+# grid — the whole positional word axis of a B tile unpacks beside the
+# gathered patch tile, one dot per cell — so the kw axes stay single-
+# candidate (the kernel accepts and ignores them).
+CONV_DENSE_SPACE = TuningSpace(kind="pallas",
+                               block_m=(8, 32, 128),
+                               block_n=(128, 256),
+                               block_kw=(512,),
+                               word_chunk=(8,))

@@ -141,7 +141,9 @@ def _make_conv_problem(mode: QuantMode, conv: ConvProblem, seed: int):
     stats = conv_fused.conv_act_stats(x, mode, kh, kw, conv.stride,
                                       conv.padding)
     col = ops._as_col_vec(qt.scale, cout)
-    return x, ops._b_planes(qt, mode), stats, col
+    # conv kernels consume the per-patch-position weight layout (the
+    # same planes ops._qconv_jit dispatches with)
+    return x, conv_fused.conv_weight_planes(qt), stats, col
 
 
 def tune_one(mode: QuantMode, backend: str, *, fused: bool = True,

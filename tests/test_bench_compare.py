@@ -44,6 +44,36 @@ def test_extract_metrics_covers_ratio_sections_only():
                  "conv/32x32x32->64/tnn": 1.5}
 
 
+def _dense_results(fused=1.6, crossover=3.0, conv=1.3):
+    doc = _results()
+    doc["dense_fused"] = {"tnn": {"speedup": fused, "backend": "dense"}}
+    doc["dense_crossover"] = {"tnn/m16n128k256": {
+        "pallas_s": 3e-3, "dense_s": 3e-3 / crossover,
+        "speedup": crossover}}
+    doc["conv_dense"] = {"8x8x128->256": {
+        "tnn": {"packed_materializing_s": 2e-3,
+                "packed_fused_s": 2e-3 / conv, "fused_speedup": conv}}}
+    return doc
+
+
+def test_dense_families_extracted_gated_and_capped():
+    m = extract_metrics(_dense_results())
+    assert m["dense_fused/tnn"] == 1.6
+    assert m["dense_crossover/tnn/m16n128k256"] == 3.0
+    assert m["conv_dense/8x8x128->256/tnn"] == 1.3
+    # regression in the dense family fails the gate
+    regs, _ = compare(_dense_results(), _dense_results(fused=1.6 * 0.6),
+                      0.25)
+    assert len(regs) == 1 and "dense_fused/tnn" in regs[0]
+    # merge-baseline caps: fused-vs-unfused families at 1.15, the
+    # crossover ratio at 1.0 (it never demands a margin)
+    merged = extract_metrics(merge_baseline([_dense_results()]))
+    assert merged["dense_fused/tnn"] == BASELINE_CAPS["dense_fused"]
+    assert merged["conv_dense/8x8x128->256/tnn"] == BASELINE_CAPS["conv_dense"]
+    assert merged["dense_crossover/tnn/m16n128k256"] == \
+        BASELINE_CAPS["dense_crossover"]
+
+
 def test_identical_runs_pass():
     regs, lines = compare(_results(), _results(), 0.25)
     assert regs == []

@@ -69,10 +69,7 @@ def test_registry_has_im2col_fused_entries():
                                    layout=registry.LAYOUT_IM2COL)
             assert spec.layout == registry.LAYOUT_IM2COL
             assert spec.fused and spec.fn is not None
-            if backend == "dense":
-                assert spec.tunable is None      # XLA picks the conv tiling
-            else:
-                assert spec.tunable is not None  # ROADMAP: no silent opt-out
+            assert spec.tunable is not None      # ROADMAP: no silent opt-out
             assert ops.has_conv_kernel(mode, backend)
     # the conv entries never shadow the GeMM entries
     for mode in MODES:

@@ -90,10 +90,12 @@ def test_space_validates_axes():
 def test_registry_declares_tunables():
     for mode in MODES:
         for backend, fused in (("pallas", True), ("pallas", False),
-                               ("xla", True), ("xla", False)):
+                               ("xla", True), ("xla", False),
+                               ("dense", True)):
             assert registry.lookup(mode, backend,
                                    fused=fused).tunable is not None
-        assert registry.lookup(mode, "dense", fused=True).tunable is None
+        # only the materializing dense oracle (unfused) has no blocking
+        assert registry.lookup(mode, "dense", fused=False).tunable is None
     table = registry.capability_table()
     assert "pallas" in table and "tunable" in table
 
