@@ -1,0 +1,155 @@
+"""Sharded low-bit matmul benchmark family (docs/sharding.md).
+
+Parent/child split: multi-device CPU execution needs
+``--xla_force_host_platform_device_count`` in XLA_FLAGS *before* jax is
+imported, so ``run()`` launches one subprocess per device count
+(2 / 4 / 8 forced host devices) and folds their JSON reports.  Each
+child k-word-shards a packed QTensor over the mesh's ``"model"`` axis,
+verifies the sharded output is ``array_equal`` with the single-device
+fused oracle, then reports:
+
+* ``speedup`` — the GATED metric: the cross-device reduction's
+  wire-bytes ratio, f32-psum bytes / actual integer-psum bytes.  With
+  ``psum_accum_dtype`` picking int16 this is exactly 2.0 — analytic
+  (4 B / 2 B per partial element), so the CI gate pins it without
+  timing flake: it regresses only if the reduction falls back to a
+  wider accumulator dtype;
+* ``sharded_vs_single`` — informative wall-clock ratio of the sharded
+  call vs the single-device call.  On forced-host CPU "devices"
+  (threads on the same cores) this measures dispatch overhead, not a
+  speedup — it is reported but deliberately NOT gated.
+
+    PYTHONPATH=src python -m benchmarks.bench_sharded [--json out.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+DEVICE_COUNTS = (2, 4, 8)
+MODES = ("bnn", "tnn", "tbn")
+M, K, N = 16, 512, 128          # kw = 16 words: divides 2/4/8 shards
+
+
+def _child(devices: int, reps: int) -> int:
+    """Runs inside the subprocess (XLA_FLAGS already set by run())."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+    from repro.kernels.modes import QuantMode
+    from repro.kernels.qtensor import QTensor
+    from repro.launch.mesh import make_serve_mesh
+    from repro.parallel import qmm_mesh, sharding
+
+    assert jax.device_count() == devices, \
+        f"forced {devices} devices, got {jax.device_count()}"
+
+    def _median_s(fn):
+        fn()                                    # compile + warm
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal((N,)), jnp.float32)
+    mesh = make_serve_mesh(model=devices)
+    out = {"devices": devices, "modes": {}}
+    for mode_name in MODES:
+        mode = QuantMode[mode_name.upper()]
+        qt = QTensor.from_dense(w, mode, bias=bias)
+        sq = qt.replace(pspec=(None, "model"))  # k-word sharding
+        oracle = np.asarray(ops.qmm(x, qt))
+        t_single = _median_s(lambda: ops.qmm(x, qt))
+        with sharding.use_mesh(mesh, sharding.SERVE_RULES_LOWBIT):
+            plan = qmm_mesh.shard_plan(sq)
+            assert plan is not None and plan.k_shards == devices, plan
+            got = np.asarray(ops.qmm(x, sq))
+            assert np.array_equal(got, oracle), \
+                f"{mode_name}@{devices}dev diverged: " \
+                f"max diff {np.abs(got - oracle).max()}"
+            t_sharded = _median_s(lambda: ops.qmm(x, sq))
+        acc_bytes = np.dtype(plan.acc_dtype).itemsize
+        out["modes"][mode_name] = {
+            "acc_dtype": plan.acc_dtype,
+            "psum_wire_ratio": np.dtype(np.float32).itemsize / acc_bytes,
+            "t_single_s": t_single,
+            "t_sharded_s": t_sharded,
+        }
+    print(json.dumps(out))
+    return 0
+
+
+def run(quick: bool = True) -> dict:
+    """Launch one child per device count, return the consolidated
+    ``{metric_key: {...}}`` section (keys carry ``speedup`` = the
+    deterministic psum wire-bytes ratio, which benchmarks.compare
+    gates)."""
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    results = {}
+    for devices in DEVICE_COUNTS:
+        env = dict(
+            os.environ, JAX_PLATFORMS="cpu",
+            XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+            PYTHONPATH=os.pathsep.join([str(repo / "src"), str(repo)]))
+        cmd = [sys.executable, "-m", "benchmarks.bench_sharded",
+               "--child", str(devices), "--reps", "5" if quick else "20"]
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=600, env=env, cwd=repo)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"bench_sharded child ({devices} devices) failed:\n"
+                f"{proc.stderr[-2000:]}")
+        child = json.loads(proc.stdout.strip().splitlines()[-1])
+        for mode, d in child["modes"].items():
+            rel = d["t_single_s"] / d["t_sharded_s"]
+            results[f"psum_wire/{mode}/d{devices}"] = {
+                "speedup": d["psum_wire_ratio"],
+                "acc_dtype": d["acc_dtype"],
+                "t_single_s": d["t_single_s"],
+                "t_sharded_s": d["t_sharded_s"],
+                "sharded_vs_single": rel,
+            }
+            print(f"  {mode} @ {devices} dev: psum {d['acc_dtype']} "
+                  f"(wire ratio {d['psum_wire_ratio']:.1f}x vs f32), "
+                  f"sharded {d['t_sharded_s'] * 1e3:.2f} ms "
+                  f"vs single {d['t_single_s'] * 1e3:.2f} ms "
+                  f"({rel:.2f}x, informative)")
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.bench_sharded", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--child", type=int, metavar="DEVICES", default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    if args.child is not None:
+        return _child(args.child, args.reps)
+    res = run(quick=not args.full)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,7 +49,12 @@ __all__ = ["extract_metrics", "compare", "merge_baseline", "main"]
 # demands a margin.
 BASELINE_CAPS = {"fused": 1.15, "conv": 1.15, "tuned": 1.0,
                  "dense_fused": 1.15, "conv_dense": 1.15,
-                 "dense_crossover": 1.0}
+                 "dense_crossover": 1.0,
+                 # deterministic psum wire-bytes ratio (f32 bytes over
+                 # integer-accumulator bytes), not a timing: int16 on
+                 # the wire == exactly 2.0, so the cap IS the value and
+                 # the gate trips only if the reduction widens to f32/i32
+                 "sharded": 2.0}
 
 
 def extract_metrics(results: Dict) -> Dict[str, float]:
@@ -65,11 +70,14 @@ def extract_metrics(results: Dict) -> Dict[str, float]:
       (mode, shape);
     * ``tuned_vs_default`` — autotuner tuned-vs-default tiling per
       (mode, backend, shape);
+    * ``sharded``          — k-sharded qmm psum wire-bytes ratio
+      (f32 vs integer accumulator) per (mode, device count) —
+      deterministic, see benchmarks/bench_sharded.py;
     * ``conv``/``conv_dense`` — fused-im2col vs materializing
       conv2d_packed per (layer, mode), default and dense backends.
     """
     out: Dict[str, float] = {}
-    for family in ("fused", "dense_fused", "dense_crossover"):
+    for family in ("fused", "dense_fused", "dense_crossover", "sharded"):
         for key, d in (results.get(family) or {}).items():
             if isinstance(d, dict) and "speedup" in d:
                 out[f"{family}/{key}"] = float(d["speedup"])
@@ -124,7 +132,7 @@ def compare(baseline: Dict, current: Dict, tolerance: float
 def _set_metric(doc: Dict, name: str, value: float) -> None:
     """Write one flattened metric name back into a results document."""
     family, rest = name.split("/", 1)
-    if family in ("fused", "dense_fused", "dense_crossover"):
+    if family in ("fused", "dense_fused", "dense_crossover", "sharded"):
         doc[family][rest]["speedup"] = value
     elif family == "tuned":
         doc["tuned_vs_default"][rest]["speedup"] = value

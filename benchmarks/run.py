@@ -36,20 +36,20 @@ def main():
 
     results = {}
 
-    print("\n[1/6] Table II analogue — microkernel operation model")
+    print("\n[1/7] Table II analogue — microkernel operation model")
     from benchmarks import bench_microkernel
     results["microkernel"] = bench_microkernel.run()
 
-    print("\n[2/6] Table III analogue — matmul speed-ratio matrix")
+    print("\n[2/7] Table III analogue — matmul speed-ratio matrix")
     from benchmarks import bench_matmul
     results["table3"] = bench_matmul.run(quick=quick)
     results["fused"] = bench_matmul.run_fused(quick=quick)
 
-    print("\n[3/6] Dense-backend MXU fusion (in-VMEM unpack kernels)")
+    print("\n[3/7] Dense-backend MXU fusion (in-VMEM unpack kernels)")
     results["dense_fused"] = bench_matmul.run_dense(quick=quick)
     results["dense_crossover"] = bench_matmul.run_dense_crossover(quick=quick)
 
-    print("\n[4/6] GeMM-based convolution")
+    print("\n[4/7] GeMM-based convolution")
     from benchmarks import bench_conv
     results["conv"] = bench_conv.run(quick=quick)
     # dense-backend gated columns only (QAT columns are backend-free and
@@ -57,10 +57,14 @@ def main():
     results["conv_dense"] = bench_conv.run(quick=quick, backend="dense",
                                            qat=False)
 
-    print("\n[5/6] Autotuned vs default kernel tiling (repro.tune)")
+    print("\n[5/7] Autotuned vs default kernel tiling (repro.tune)")
     results["tuned_vs_default"] = bench_matmul.run_tuned(quick=quick)
 
-    print("\n[6/6] Roofline report (from dry-run artifacts, if present)")
+    print("\n[6/7] Sharded qmm — integer-psum reduction at 2/4/8 devices")
+    from benchmarks import bench_sharded
+    results["sharded"] = bench_sharded.run(quick=quick)
+
+    print("\n[7/7] Roofline report (from dry-run artifacts, if present)")
     from benchmarks import roofline
     try:
         rows = roofline.run(mesh="pod")

@@ -1,3 +1,7 @@
+"""Async double-buffered checkpointing: save/restore parameter +
+optimizer trees with shardings rebuilt on the restoring mesh (the
+elastic-restart path re-shards on ``device_put``)."""
+
 from repro.checkpoint.checkpointer import (Checkpointer, CheckpointConfig,
                                            save_tree, restore_tree)
 

@@ -1,3 +1,7 @@
+"""Deterministic synthetic-LM data pipeline: seed + step fully define
+every global batch, so an elastic restart re-deals bit-exact batches
+over a different host set."""
+
 from repro.data.pipeline import (DataState, SyntheticLM, make_pipeline,
                                  global_batch_spec)
 

@@ -85,6 +85,21 @@ DEFAULT_TILES: Dict[str, TileConfig] = {
 }
 
 
+def psum_accum_dtype(k_bits: int) -> jnp.dtype:
+    """Narrowest signed integer dtype that can carry a cross-device
+    popcount partial through a ``psum`` without overflow.
+
+    A per-shard signed contribution is bounded by the padded bit depth
+    (ternary/TBN partials lie in ``[-k_bits, k_bits]``; the BNN
+    ``-2 * popcount`` convention doubles that), and the all-reduce sum
+    of all shards is bounded by the same global total — so ``2 *
+    k_bits`` bounds every intermediate.  int16 halves the bytes the
+    reduction moves; deeper problems fall back to int32.
+    """
+    return jnp.dtype(jnp.int16) if 2 * k_bits < 2 ** 15 \
+        else jnp.dtype(jnp.int32)
+
+
 def pad2d(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
     pr, pc = rows - x.shape[0], cols - x.shape[1]
     if pr == 0 and pc == 0:

@@ -562,10 +562,38 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
     pipeline.  Numerics match the unfused oracle exactly: the integer
     core is identical and the epilogue uses the same multiply order.
 
-    ``act_stats`` optionally overrides the per-tensor activation
-    quantization statistics (see :func:`quantize_activations`) — the
-    materializing conv oracle passes the shared conv stats here so it
-    stays bit-identical with the fused-im2col kernels.
+    Parameters
+    ----------
+    x : jnp.ndarray
+        (m, k) float activations; k must equal ``qt.k_valid``.
+    qt : QTensor
+        Offline-packed weights (:func:`pack_weights` /
+        :meth:`QTensor.from_dense`).  Mode, depth, scale, bias —
+        and, for mesh-sharded containers, the payload partitioning
+        (``qt.pspec``) — all ride inside it.
+    backend : str, optional
+        "pallas" | "xla" | "dense"; None -> :data:`DEFAULT_BACKEND`.
+    interpret : bool
+        Run Pallas kernels in interpret mode (CPU validation).
+    act_stats : dict, optional
+        Overrides the per-tensor activation quantization statistics
+        (see :func:`quantize_activations`) — the materializing conv
+        oracle passes the shared conv stats here so it stays
+        bit-identical with the fused-im2col kernels.
+
+    Returns
+    -------
+    jnp.ndarray
+        (m, n) float32 output, bit-identical across fused/unfused and
+        sharded/unsharded dispatch for the low-bit modes.
+
+    Inside :func:`repro.parallel.sharding.use_mesh`, a container whose
+    ``pspec`` names live mesh axes dispatches to the mesh-aware path
+    (:mod:`repro.parallel.qmm_mesh`): n-sharded planes run the fused
+    kernel per output slice, k-sharded planes psum int16/int32 partial
+    counts across devices and apply the eq. (2) epilogue after the
+    reduction — outputs stay ``array_equal`` with this function's
+    single-device result.
     """
     if not isinstance(qt, QTensor):
         raise TypeError(
@@ -581,6 +609,16 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
     backend = backend or DEFAULT_BACKEND
     tiles = None
     if qt.is_lowbit:
+        from repro.parallel import qmm_mesh, sharding
+
+        ctx = sharding.active()
+        if ctx is not None:
+            plan = qmm_mesh.shard_plan(qt, ctx)
+            if plan is not None:
+                return qmm_mesh.qmm_sharded(x, qt, plan, ctx.mesh,
+                                            backend=backend,
+                                            interpret=interpret,
+                                            act_stats=act_stats)
         if tune_cache.get_policy() == "on_first_use":
             # Tune this shape before resolving, so even the very first
             # call dispatches tuned tiles — a warm plan cache makes this
@@ -654,6 +692,40 @@ def qconv(x: jnp.ndarray, qt: QTensor, *, stride: int = 1,
     :func:`qmm` with the same ``act_stats``): per-tensor quantization
     commutes with patch gathering, the popcount core sums the same
     integers, and the epilogue uses the same multiply order.
+
+    Parameters
+    ----------
+    x : jnp.ndarray
+        (B, H, W, Cin) float input image, NHWC; Cin must match the
+        container's geometry.
+    qt : QTensor
+        Conv-packed low-bit weights (``pack_conv_filters``) carrying
+        the (kh, kw, cin, cout) ``geometry`` aux and, when ``cin`` is
+        not a word multiple, the positional planes the kernels stream.
+    stride : int
+        Spatial stride (same for both dims).
+    padding : str
+        "SAME" or "VALID".
+    backend : str, optional
+        "pallas" | "xla" | "dense"; None -> :data:`DEFAULT_BACKEND`.
+        The fused-im2col kernel for (mode, backend) must be registered
+        (:func:`has_conv_kernel`).
+    interpret : bool
+        Run Pallas kernels in interpret mode (CPU validation).
+    act_stats : dict, optional
+        Pre-computed shared activation statistics
+        (``conv_fused.conv_act_stats``); None derives them from ``x``.
+
+    Returns
+    -------
+    jnp.ndarray
+        (B, OH, OW, Cout) float32 feature map.
+
+    Inside :func:`repro.parallel.sharding.use_mesh`, a container whose
+    ``pspec`` names a live mesh axis for cout runs one fused-im2col
+    kernel per output-channel slice (replicated input, no collective;
+    :mod:`repro.parallel.qmm_mesh`), ``array_equal`` with the
+    single-device result.
     """
     if not isinstance(qt, QTensor):
         raise TypeError(f"qconv expects a QTensor, got {type(qt).__name__}")
@@ -675,6 +747,16 @@ def qconv(x: jnp.ndarray, qt: QTensor, *, stride: int = 1,
     if act_stats is None:
         act_stats = conv_fused.conv_act_stats(x, qt.mode, kh, kw_,
                                               stride, padding)
+    from repro.parallel import qmm_mesh, sharding
+
+    ctx = sharding.active()
+    if ctx is not None:
+        plan = qmm_mesh.shard_plan_conv(qt, ctx)
+        if plan is not None:
+            return qmm_mesh.qconv_sharded(x, qt, plan, ctx.mesh, act_stats,
+                                          backend=backend, stride=stride,
+                                          padding=padding,
+                                          interpret=interpret)
     m, n, k, tag = conv_fused.conv_problem_dims(x.shape, qt.geometry,
                                                 stride, padding)
     if tune_cache.get_policy() == "on_first_use":

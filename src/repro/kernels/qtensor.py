@@ -116,21 +116,29 @@ class QTensor:
     zero: Optional[jnp.ndarray] = None      # affine zero point (u8/u4)
     geometry: Optional[Tuple[int, int, int, int]] = None  # conv (kh,kw,cin,cout)
     layout: str = LAYOUT_BITPLANE
+    # Mesh axis names of the payload planes' trailing (n, k-words) dims,
+    # recorded at pack time (models/packing.py via the payload-plane
+    # rules of parallel/sharding.py).  None = never sharded.  Static aux
+    # — ops.qmm dispatches to the mesh-aware path (parallel/qmm_mesh.py)
+    # on it, and a re-sharded container is a different trace, which is
+    # exactly right (the shard_map partitioning changes with it).
+    pspec: Optional[Tuple[Optional[str], Optional[str]]] = None
 
     # -- pytree protocol ----------------------------------------------------
 
     def tree_flatten_with_keys(self):
         children = [(jax.tree_util.GetAttrKey(k), getattr(self, k))
                     for k in ("payload", "scale", "bias", "zero")]
-        aux = (self.mode, self.shape, self.geometry, self.layout)
+        aux = (self.mode, self.shape, self.geometry, self.layout, self.pspec)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         payload, scale, bias, zero = children
-        mode, shape, geometry, layout = aux
+        mode, shape, geometry, layout, pspec = aux
         return cls(payload=payload, scale=scale, bias=bias, zero=zero,
-                   mode=mode, shape=shape, geometry=geometry, layout=layout)
+                   mode=mode, shape=shape, geometry=geometry, layout=layout,
+                   pspec=pspec)
 
     # -- derived static properties ------------------------------------------
 
@@ -166,7 +174,40 @@ class QTensor:
                    geometry: Optional[Tuple[int, int, int, int]] = None,
                    ) -> "QTensor":
         """Offline packing of a dense (k, n) float matrix — the paper's
-        Algorithm 2 PackedB, producing the typed container."""
+        Algorithm 2 PackedB, producing the typed container.
+
+        Parameters
+        ----------
+        w : jnp.ndarray
+            Dense (k, n) float weight matrix; k is the reduction depth
+            the kernels contract over, n the output-feature count.
+        mode : QuantMode
+            Target representation.  TNN packs two ternary bit planes,
+            TBN/BNN one binary plane (all stored transposed, (n,
+            ceil(k/32)) uint32 words), INT8/INT4 an affine integer
+            grid, F32/BF16 the dense matrix unchanged.
+        per_channel : bool
+            Quantization statistics granularity for the low-bit modes:
+            per output channel (axis 0 of ``w``; the default, matching
+            the paper's per-filter scales) vs one scalar for the whole
+            matrix.
+        bias : jnp.ndarray, optional
+            (n,) epilogue bias, added after the eq. (2) rescale.
+        geometry : tuple, optional
+            Conv filter geometry (kh, kw, cin, cout) when ``w`` is a
+            flattened filter bank.  Low-bit conv weights whose
+            ``cin % 32 != 0`` additionally store the positional planes
+            the fused-im2col kernels stream (POS_PAYLOAD_KEYS).
+
+        Returns
+        -------
+        QTensor
+            Frozen container with the packed payload + dequantization
+            ``scale`` (and optional ``bias``/``zero``) as pytree
+            leaves, and mode / logical ``shape`` (k, n) / geometry /
+            layout as static aux.  Ready for :func:`repro.kernels.ops.qmm`
+            (or ``qconv`` when packed with geometry).
+        """
         from repro.core import encoding, quantize
 
         k, n = w.shape

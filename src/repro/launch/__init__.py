@@ -1,3 +1,5 @@
+"""Mesh construction + the multi-pod lowering dry-run entry points."""
+
 # NOTE: do not import jax at package import time with any device-count
 # side effects; launch modules are imported by tests under a 1-device
 # runtime and by dryrun.py under a 512-device runtime.

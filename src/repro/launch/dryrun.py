@@ -1,14 +1,6 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + (f"--xla_dump_to={os.environ['REPRO_DRYRUN_DUMP']} "
-       f"--xla_dump_hlo_pass_re=spmd-partitioning "
-       if os.environ.get("REPRO_DRYRUN_DUMP") else "")
-    + os.environ.get("XLA_FLAGS", ""))
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-The XLA_FLAGS assignment above runs before ANY other import (jax locks
+The XLA_FLAGS assignment below runs before ANY other import (jax locks
 the device count on first init): this process sees 512 placeholder CPU
 devices so ``make_production_mesh`` can build the 16x16 single-pod mesh
 (256 chips) and the 2x16x16 multi-pod mesh (512 chips).
@@ -41,6 +33,14 @@ Usage:
     python -m repro.launch.dryrun --mesh pod           # single-pod only
     python -m repro.launch.dryrun --force              # ignore cached JSON
 """
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + (f"--xla_dump_to={os.environ['REPRO_DRYRUN_DUMP']} "
+       f"--xla_dump_hlo_pass_re=spmd-partitioning "
+       if os.environ.get("REPRO_DRYRUN_DUMP") else "")
+    + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
 import glob

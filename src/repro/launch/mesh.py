@@ -20,14 +20,19 @@ import numpy as np
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh", "POD_SHAPE"]
+__all__ = ["make_production_mesh", "make_mesh", "make_serve_mesh",
+           "POD_SHAPE"]
 
 POD_SHAPE = (16, 16)   # 256 chips per pod
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, devices=None):
+    """Build a mesh of ``shape`` over ``devices`` (default: all of this
+    process's devices, in order).  An explicit device list is how the
+    elastic path rebuilds on the survivors after a loss — the dead
+    device must not appear in the new mesh."""
     n = int(np.prod(shape))
-    devs = jax.devices()
+    devs = list(devices) if devices is not None else jax.devices()
     if len(devs) < n:
         raise RuntimeError(
             f"need {n} devices for mesh {shape}, have {len(devs)} — the "
@@ -46,3 +51,14 @@ def make_host_mesh():
     """Whatever this host actually has (tests/examples): (1, N) mesh."""
     n = len(jax.devices())
     return make_mesh((1, n), ("data", "model"))
+
+
+def make_serve_mesh(model=None, data=1, devices=None):
+    """(data, model) mesh for the low-bit serving engine
+    (``ServeConfig(mesh=...)``): ``model`` defaults to whatever fills
+    the available devices.  CPU-tested by spawning a process with
+    ``--xla_force_host_platform_device_count=N``."""
+    devs = list(devices) if devices is not None else jax.devices()
+    if model is None:
+        model = len(devs) // data
+    return make_mesh((data, model), ("data", "model"), devices=devs)

@@ -20,6 +20,16 @@ packed leaf BY TYPE (``isinstance(leaf, QTensor)`` — no key sniffing)
 and run one fused ``ops.qmm`` per projection.  This is the technique's
 headline TPU win: decode streams 1/16th (binary) or 1/8th (ternary) of
 the weight bytes every token.
+
+Packing under an active mesh (:func:`repro.parallel.sharding.use_mesh`)
+additionally emits *sharded* containers: each QTensor records the mesh
+axes of its payload planes' (n, k-words) dims (``QTensor.pspec``, via
+the payload-plane rules) and every leaf is ``device_put`` with the
+matching :func:`~repro.parallel.sharding.param_shardings` — so
+``ops.qmm`` dispatches the mesh-aware path (parallel/qmm_mesh.py)
+against planes that already live distributed.  MoE expert containers
+(vmapped, 4-D stacked leaves) stay unannotated: the expert loop maps
+over them, which does not compose with a per-matmul shard_map.
 """
 
 from __future__ import annotations
@@ -34,8 +44,9 @@ import jax.numpy as jnp
 from repro.core.policy import QuantPolicy
 from repro.kernels import ops
 from repro.kernels.ops import QuantMode
-from repro.kernels.qtensor import QTensor
+from repro.kernels.qtensor import PAYLOAD_KEYS, QTensor
 from repro.models.common import ModelConfig
+from repro.parallel import sharding
 
 __all__ = ["pack_lm_params", "packed_matmul_any"]
 
@@ -63,9 +74,35 @@ def _pack_leaf(w: jnp.ndarray, mode: QuantMode) -> QTensor:
     return jax.vmap(lambda ww: _pack_leaf(ww, mode))(w)
 
 
+def _annotate_pspec(packed: QTensor, prefix: str, ctx) -> QTensor:
+    """Record the payload-plane mesh axes on a freshly packed container.
+
+    Resolves through the same rule table param_shardings commits the
+    planes with (sharding.payload_plane_axes), so the recorded pspec and
+    the physical placement can never disagree.  Stacked-period (3-D)
+    planes resolve with a replicated leading dim; vmapped expert
+    containers (4-D) never reach here.
+    """
+    key0 = PAYLOAD_KEYS[packed.mode][0]
+    path = f"{prefix}/payload/{key0}".lstrip("/")
+    axes = sharding.payload_plane_axes(path, packed.payload[key0], ctx)
+    if axes is None:
+        return packed
+    return packed.replace(pspec=axes)
+
+
 def pack_lm_params(params: Dict[str, Any], cfg: ModelConfig,
-                   policy: QuantPolicy | None = None) -> Dict[str, Any]:
+                   policy: QuantPolicy | None = None, *,
+                   shard: bool = True) -> Dict[str, Any]:
+    """Pack a whole LM parameter tree (see module docstring).
+
+    Under an active mesh (and ``shard=True``), low-bit containers with
+    non-expert leaves record their payload partitioning (pspec) and the
+    returned tree is ``device_put`` against
+    :func:`~repro.parallel.sharding.param_shardings`.
+    """
     policy = policy or cfg.policy
+    ctx = sharding.active() if shard else None
 
     def walk(tree, prefix=""):
         if isinstance(tree, dict) and "w" in tree and tree["w"].ndim >= 2:
@@ -77,6 +114,8 @@ def pack_lm_params(params: Dict[str, Any], cfg: ModelConfig,
                         if "b" in tree:
                             packed = dataclasses.replace(packed,
                                                          bias=tree["b"])
+                        if ctx is not None and tree["w"].ndim <= 3:
+                            packed = _annotate_pspec(packed, prefix, ctx)
                         return packed
                     break
             return tree
@@ -86,7 +125,10 @@ def pack_lm_params(params: Dict[str, Any], cfg: ModelConfig,
             return [walk(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
         return tree
 
-    return walk(params)
+    out = walk(params)
+    if ctx is not None:
+        out = jax.device_put(out, sharding.param_shardings(out, ctx))
+    return out
 
 
 def packed_matmul_any(packed: QTensor, x2: jnp.ndarray,

@@ -1,3 +1,6 @@
+"""AdamW with int8-quantized moments + error-feedback gradient
+compression for the cross-pod all-reduce."""
+
 from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
                                cosine_schedule, global_norm, clip_by_global_norm)
 from repro.optim.compression import (compress_int8, decompress_int8,

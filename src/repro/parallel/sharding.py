@@ -30,9 +30,11 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["Rules", "TRAIN_RULES", "SERVE_RULES", "PREFILL_RULES",
+__all__ = ["Rules", "TRAIN_RULES", "SERVE_RULES", "SERVE_RULES_LOWBIT",
+           "PREFILL_RULES",
            "use_mesh", "active", "spec_for", "constrain", "constrain_spec",
-           "param_spec", "named_sharding", "param_shardings"]
+           "param_spec", "named_sharding", "param_shardings",
+           "payload_plane_axes"]
 
 AxisRule = Union[None, str, Tuple[str, ...]]
 
@@ -89,6 +91,18 @@ SERVE_RULES = TRAIN_RULES.replaced(fsdp=None, seq=None)
 # at mixtral decode).  Dense (shared/attention) weights stay TP-only.
 SERVE_RULES_MOE = SERVE_RULES.replaced(ffn=("model", "data"))
 
+# Serving, offline-packed low-bit archs (QTensor payloads): unlike the
+# dense case above, FSDP-style sharding of the *packed* planes over
+# "data" is free at decode — the bit-plane words are 1/8 (ternary) to
+# 1/16 (binary) of the bf16 weight bytes, activations enter the
+# mesh-aware qmm replicated (parallel/qmm_mesh.py), and the only
+# per-step collective is a psum over int16/int32 partial counts, not a
+# weight regather.  Column-parallel planes (wq/wk/wv/gate/up) keep
+# n-sharding over "model"; row-parallel planes (wo/down) k-word-shard
+# over "model"; this ruleset additionally spreads the k words of the
+# column-parallel planes over "data".
+SERVE_RULES_LOWBIT = SERVE_RULES.replaced(fsdp="data")
+
 # Prefill: like serving but context-parallel — a 32k prompt's residual
 # stream is sharded over "model" between blocks (2 GiB/dev -> 128 MiB/dev
 # for chameleon prefill_32k); attention gathers K/V per block internally.
@@ -123,6 +137,7 @@ RULESETS = {
     "train": TRAIN_RULES,
     "prefill": PREFILL_RULES,
     "serve": SERVE_RULES,
+    "serve_lowbit": SERVE_RULES_LOWBIT,
     "serve_ep": SERVE_RULES_EP,
     "train_fsdp": TRAIN_RULES_FSDP,
     "train_hybrid": TRAIN_RULES_HYBRID,
@@ -312,6 +327,46 @@ def param_spec(path, leaf, ctx: Optional[_Active] = None) -> P:
         if spec is not None:
             return spec
     return P(*([None] * ndim))
+
+
+def _single_axis(entry: AxisRule) -> Optional[str]:
+    """Collapse a (possibly multi-axis) spec entry to one mesh axis name.
+
+    The mesh-aware qmm partitions each payload-plane dim over at most
+    one named axis (axis_index/psum address a single axis); when the
+    rule table assigned several, the first (highest-preference) one
+    wins and the rest replicate.
+    """
+    if entry is None or isinstance(entry, str):
+        return entry
+    return entry[0] if entry else None
+
+
+def payload_plane_axes(path: str, plane,
+                       ctx: Optional[_Active] = None
+                       ) -> Optional[Tuple[Optional[str], Optional[str]]]:
+    """Mesh axes of a packed payload plane's trailing (n, k-words) dims.
+
+    ``path`` is the joined tree path of the plane leaf (e.g.
+    ``"blocks/0/mixer/wq/payload/bits"``), ``plane`` the (…, n, kw)
+    uint32 array.  Resolves through the same payload-plane rule table
+    as :func:`param_spec` — so the axes recorded on a QTensor
+    (``QTensor.pspec``) always agree with the sharding its planes were
+    committed with — and returns the last two spec entries collapsed
+    to single axis names, or None when no rule matches / no mesh is
+    active / both dims replicate.
+    """
+    ctx = ctx or active()
+    if ctx is None:
+        return None
+    ndim = plane.ndim if hasattr(plane, "ndim") else np.ndim(plane)
+    spec = _match_rules(path, plane, ndim, ctx)
+    if spec is None or len(tuple(spec)) < 2:
+        return None
+    n_ax, k_ax = (_single_axis(e) for e in tuple(spec)[-2:])
+    if n_ax is None and k_ax is None:
+        return None
+    return (n_ax, k_ax)
 
 
 def param_shardings(params, ctx: Optional[_Active] = None):

@@ -1,3 +1,6 @@
+"""Roofline accounting over dry-run artifacts: FLOPs, HBM and
+collective bytes per (arch, shape) cell against TPU hardware ceilings."""
+
 from repro.roofline.analysis import (HW, RooflineTerms, collective_bytes,
                                      roofline_from_artifact, model_flops)
 

@@ -1,3 +1,7 @@
+"""Runtime resilience: heartbeat watchdog (dead/straggler detection)
+and elastic mesh re-planning after device loss — consumed by Trainer
+and by the serving engine's ``rebuild_after_loss``."""
+
 from repro.runtime.fault_tolerance import (Watchdog, WatchdogConfig,
                                            StragglerReport)
 from repro.runtime.elastic import ElasticPlan, plan_restart

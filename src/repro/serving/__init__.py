@@ -1,3 +1,7 @@
+"""Continuous-batching LM serving over packed low-bit weights:
+slot-scheduled Engine, samplers, and mesh-aware sharded serving
+(ServeConfig(mesh=...) — see docs/sharding.md)."""
+
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.engine import (ServeConfig, Engine, Request, Result,
                                   make_serve_step, make_prefill_fn)

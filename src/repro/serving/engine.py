@@ -24,9 +24,10 @@ stacked caches, so admission is also a jitted op.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +36,7 @@ import numpy as np
 from repro.models import model as model_mod
 from repro.models.common import ModelConfig, ShardLayout
 from repro.models.kvcache import INVALID_POS, init_caches
+from repro.parallel import sharding
 from repro.serving.sampler import SamplerConfig, sample
 
 __all__ = ["ServeConfig", "Request", "Result", "Engine",
@@ -69,7 +71,9 @@ class ServeConfig:
     # is a PROCESS-WIDE policy (ops.qmm has one global dispatch hook):
     # building a pack_params engine applies its autotune setting to the
     # process, so a later Engine(..., autotune="off") disarms a policy a
-    # previous "on_first_use" engine left behind.
+    # previous "on_first_use" engine left behind.  Engine.close() (or
+    # using the engine as a context manager) disarms the policy on
+    # teardown — see docs/autotuning.md for the footgun this closes.
     autotune: str = "off"
     # Input extents to tune conv-packed QTensors against during an
     # "offline" sweep: each entry is (batch, height, width) or (batch,
@@ -82,6 +86,17 @@ class ServeConfig:
     # back to DEFAULT_TILES at dispatch, exactly like an untuned GeMM
     # shape).
     tune_conv_inputs: tuple = ()
+    # Serve against an N-device mesh: pack_lm_params then emits sharded
+    # QTensors (payload planes distributed per the payload-plane rules,
+    # pspec recorded) and every projection dispatches the mesh-aware
+    # qmm (parallel/qmm_mesh.py) — n-sharded planes run per-slice fused
+    # kernels, k-sharded planes psum int16/int32 partial counts.  The
+    # engine enters sharding.use_mesh(mesh, RULESETS[mesh_rules]) around
+    # packing, autotuning, prefill and decode.  CPU-testable by running
+    # the process with --xla_force_host_platform_device_count=N
+    # (launch.mesh.make_serve_mesh).  None = single-device serving.
+    mesh: Optional[Any] = None
+    mesh_rules: str = "serve_lowbit"
 
 
 @dataclasses.dataclass
@@ -170,17 +185,26 @@ class Engine:
             raise ValueError(
                 f"ServeConfig.autotune must be 'off', 'offline' or "
                 f"'on_first_use', got {scfg.autotune!r}")
-        if scfg.pack_params:
-            from repro.models.packing import pack_lm_params
-            params = pack_lm_params(params, cfg)
-        self.params, self.cfg, self.layout, self.scfg = params, cfg, layout, scfg
-        if scfg.pack_params:
-            self._autotune()
-        b, L = scfg.num_slots, scfg.max_len
-        self.caches = init_caches(cfg, layout, b, L)
-        self._prefill_caches = {
-            s: init_caches(cfg, layout, 1, L)
-            for s in self._buckets()}
+        if scfg.mesh is not None and scfg.mesh_rules not in sharding.RULESETS:
+            raise ValueError(
+                f"ServeConfig.mesh_rules must be one of "
+                f"{sorted(sharding.RULESETS)}, got {scfg.mesh_rules!r}")
+        self.cfg, self.layout, self.scfg = cfg, layout, scfg
+        self._seed = seed
+        self._raw_params = params     # retained for the elastic rebuild
+        self._closed = False
+        with self._mesh_scope():
+            if scfg.pack_params:
+                from repro.models.packing import pack_lm_params
+                params = pack_lm_params(params, cfg)
+            self.params = params
+            if scfg.pack_params:
+                self._autotune()
+            b, L = scfg.num_slots, scfg.max_len
+            self.caches = init_caches(cfg, layout, b, L)
+            self._prefill_caches = {
+                s: init_caches(cfg, layout, 1, L)
+                for s in self._buckets()}
         self.serve_step = jax.jit(make_serve_step(cfg, layout, scfg))
         self.prefill = jax.jit(make_prefill_fn(cfg, layout))
         self.key = jax.random.PRNGKey(seed)
@@ -192,6 +216,20 @@ class Engine:
         self.slot_tokens: List[List[int]] = [[] for _ in range(b)]
         self.last_token = np.zeros(b, np.int32)
         self.results: Dict[int, Result] = {}
+
+    @contextlib.contextmanager
+    def _mesh_scope(self):
+        """Enter the engine's mesh + ruleset for the duration of a call
+        (packing, autotuning, prefill, decode) — the mesh context is
+        scoped per call rather than held for the engine's lifetime, so
+        two engines on different meshes (the elastic-rebuild window)
+        never fight over the ambient mesh."""
+        if self.scfg.mesh is None:
+            yield
+            return
+        with sharding.use_mesh(self.scfg.mesh,
+                               sharding.RULESETS[self.scfg.mesh_rules]):
+            yield
 
     def _buckets(self):
         out, s = [], self.scfg.prefill_bucket
@@ -246,6 +284,35 @@ class Engine:
                         stride=stride, padding=padding)
                     tuner.ensure_plan(mode, DEFAULT_BACKEND, fused=True,
                                       conv=prob, save=False)
+        # Under a mesh, dispatch resolves tiles for the LOCAL per-shard
+        # problem (each device runs its slice of the matmul), so sweep
+        # those shapes too: n-sharded planes run the fused kernel at
+        # n/n_shards, k-sharded planes the unfused partial kernel at
+        # k/k_shards (the eq. (2) epilogue moves after the psum).
+        ctx = sharding.active()
+        if ctx is not None:
+            from repro.kernels.qtensor import QTensor
+            from repro.parallel import qmm_mesh
+            leaves = jax.tree_util.tree_flatten(
+                self.params, is_leaf=lambda t: isinstance(t, QTensor))[0]
+            seen = set()
+            for qt in leaves:
+                if not isinstance(qt, QTensor) or not qt.is_lowbit \
+                        or qt.geometry is not None:
+                    continue
+                plan = qmm_mesh.shard_plan(qt, ctx)
+                if plan is None:
+                    continue
+                n_l, k_l = qmm_mesh.local_dims(qt, ctx)
+                key = (qt.mode, plan.k_axis is None, n_l, k_l)
+                if key in seen:
+                    continue
+                seen.add(key)
+                for m in ms:
+                    tuner.ensure_plan(qt.mode, DEFAULT_BACKEND,
+                                      fused=plan.k_axis is None,
+                                      m=m, n=n_l, k=k_l, save=False)
+            problems = problems or seen
         if problems:
             tune_cache.get_cache().save()
 
@@ -317,9 +384,91 @@ class Engine:
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Result]:
         steps = 0
-        while (self.queue or any(u != -1 for u in self.slot_uid)) \
-                and steps < max_steps:
-            self._admit()
-            self._decode_once()
-            steps += 1
+        with self._mesh_scope():
+            while (self.queue or any(u != -1 for u in self.slot_uid)) \
+                    and steps < max_steps:
+                self._admit()
+                self._decode_once()
+                steps += 1
         return self.results
+
+    # ------------------------------------------------ lifecycle / elastic
+
+    def close(self):
+        """Disarm any process-wide dispatch policy this engine armed.
+
+        ``autotune="on_first_use"`` sets a PROCESS-WIDE tuning policy
+        (ops.qmm has one global dispatch hook) which otherwise outlives
+        the engine — the classic footgun is a benchmark that builds a
+        tuned engine, drops it, then times an "untuned" run that
+        silently keeps measuring on every new shape.  ``close()`` (or
+        using the engine as a context manager) resets the policy to
+        "off".  Idempotent; see docs/autotuning.md.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        if self.scfg.pack_params and self.scfg.autotune == "on_first_use":
+            from repro.tune import cache as tune_cache
+            tune_cache.set_policy("off")
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def make_watchdog(self, cfg: Optional[Any] = None,
+                      clock: Optional[Any] = None):
+        """Heartbeat watchdog sized to this engine's mesh (one "host"
+        per mesh device — the container is single-host, so devices
+        stand in for hosts exactly as in the training watchdog)."""
+        from repro.runtime.fault_tolerance import Watchdog, WatchdogConfig
+        if self.scfg.mesh is None:
+            raise RuntimeError("make_watchdog needs a mesh engine")
+        cfg = cfg or WatchdogConfig()
+        n = self.scfg.mesh.devices.size
+        if clock is None:
+            return Watchdog(cfg, n)
+        return Watchdog(cfg, n, clock=clock)
+
+    def rebuild_after_loss(self, dead: Sequence[Any]) -> "Engine":
+        """Rebuild this engine on the devices that survived a loss.
+
+        ``dead`` is an iterable of devices (or device ids) the watchdog
+        declared lost.  runtime.elastic.plan_restart picks the largest
+        restartable (data, model) topology — the model axis is pinned,
+        so every sharded QTensor keeps its per-shard plane geometry and
+        no plan-cache entry is invalidated; the data axis shrinks to
+        the largest surviving divisor.  The new engine re-packs the RAW
+        parameter tree onto the new mesh (packing is deterministic) and
+        re-primes its caches; decode output is identical because the
+        per-shard integer partials psum to the same accumulators on any
+        shard count.  Raises RuntimeError when fewer devices survive
+        than one model-parallel group needs.
+        """
+        if self.scfg.mesh is None:
+            raise RuntimeError("rebuild_after_loss needs a mesh engine")
+        from repro.launch.mesh import make_mesh
+        from repro.runtime.elastic import plan_restart
+
+        mesh = self.scfg.mesh
+        dead_ids = {getattr(d, "id", d) for d in dead}
+        all_devs = list(mesh.devices.flat)
+        survivors = [d for d in all_devs if d.id not in dead_ids]
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        plan = plan_restart(len(survivors),
+                            chips_per_pod=len(all_devs),
+                            model=sizes.get("model", 1),
+                            old_data=sizes.get("data", 1),
+                            old_pods=1)
+        if plan is None:
+            raise RuntimeError(
+                f"{len(survivors)} surviving devices cannot host one "
+                f"model-parallel group of {sizes.get('model', 1)}")
+        new_mesh = make_mesh(plan.mesh_shape(multi_pod=False),
+                             mesh.axis_names, devices=survivors)
+        return Engine(self._raw_params, self.cfg, self.layout,
+                      dataclasses.replace(self.scfg, mesh=new_mesh),
+                      seed=self._seed)

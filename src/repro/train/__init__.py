@@ -1,3 +1,6 @@
+"""QAT training loop: sharded train step, loss, and the fault-tolerant
+Trainer that drives checkpoint/elastic/data together."""
+
 from repro.train.loss import xent_loss
 from repro.train.train_step import TrainStepConfig, make_train_step, init_train_state
 from repro.train.trainer import Trainer, TrainerConfig

@@ -16,7 +16,11 @@ Hypothesis handling:
   modules still collect and run fixed-example sweeps.
 """
 
+import json
 import os
+import pathlib
+import subprocess
+import sys
 
 import jax
 import pytest
@@ -62,3 +66,28 @@ def _x64_off():
 @pytest.fixture()
 def rng():
     return jax.random.PRNGKey(1234)
+
+
+@pytest.fixture(scope="session")
+def sharded_report():
+    """Report of tests/sharded_check.py, run ONCE per session in a
+    subprocess — multi-device CPU needs the forced-device-count XLA flag
+    set before jax imports, which this (jax-initialized) process can no
+    longer do.  Returns {check name: "ok" | traceback string}; the
+    consuming tests assert on individual entries so a failure names the
+    broken property instead of "the subprocess died"."""
+    here = pathlib.Path(__file__).parent
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(here.parent / "src"))
+    proc = subprocess.run(
+        [sys.executable, str(here / "sharded_check.py")],
+        capture_output=True, text=True, timeout=900, env=env)
+    last = proc.stdout.strip().splitlines()[-1] if proc.stdout.strip() else ""
+    try:
+        return json.loads(last)
+    except json.JSONDecodeError:
+        pytest.fail(
+            f"sharded_check.py produced no report (exit {proc.returncode})\n"
+            f"stdout:\n{proc.stdout[-2000:]}\nstderr:\n{proc.stderr[-2000:]}")

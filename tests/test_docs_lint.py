@@ -1,0 +1,59 @@
+"""The docs gate itself is tested: tools/check_docs.py must pass on
+the repo as committed, and must actually FAIL on a tree with a broken
+relative link or a public module missing its docstring (otherwise the
+CI step is decorative)."""
+
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_repo_docs_are_clean():
+    assert check_docs.main(["--root", str(REPO)]) == 0
+
+
+def test_repo_has_docs_tree():
+    # the gate silently passes on an empty tree; pin that the real
+    # docs it guards actually exist and are linked from the README
+    for name in ("architecture.md", "sharding.md", "autotuning.md"):
+        assert (REPO / "docs" / name).exists()
+        assert f"docs/{name}" in (REPO / "README.md").read_text()
+
+
+def _tree(tmp_path, readme="# t\n", module='"""ok."""\n'):
+    (tmp_path / "README.md").write_text(readme)
+    pkg = tmp_path / "src" / "pkg"
+    pkg.mkdir(parents=True)
+    (pkg / "mod.py").write_text(module)
+    return tmp_path
+
+
+def test_broken_relative_link_fails(tmp_path, capsys):
+    root = _tree(tmp_path, readme="see [gone](docs/nope.md)\n")
+    assert check_docs.main(["--root", str(root)]) == 1
+    assert "broken relative link -> docs/nope.md" in capsys.readouterr().err
+
+
+def test_missing_module_docstring_fails(tmp_path, capsys):
+    root = _tree(tmp_path, module="import os\nX = os.sep\n")
+    assert check_docs.main(["--root", str(root)]) == 1
+    assert "mod.py: missing module docstring" in capsys.readouterr().err
+
+
+def test_docstring_after_code_counts_as_missing(tmp_path):
+    # the historical launch/dryrun.py failure mode: a "docstring"
+    # placed after executable statements is just a string expression
+    root = _tree(tmp_path, module='import os\n"""late."""\nX = os.sep\n')
+    assert check_docs.main(["--root", str(root)]) == 1
+
+
+def test_urls_anchors_and_escaping_paths_are_skipped(tmp_path):
+    root = _tree(tmp_path, readme=(
+        "[a](https://example.com/x) [b](#section)\n"
+        "[badge](../../actions/workflows/ci.yml)\n"
+        "[ok](src/pkg/mod.py)\n"))
+    assert check_docs.main(["--root", str(root)]) == 0

@@ -92,3 +92,34 @@ def test_plan_sub_pod():
 
 def test_plan_too_few_chips():
     assert plan_restart(8, model=16) is None
+
+
+# ------------------------------------------------- engine-level elastic
+
+def test_engine_rebuilds_after_device_loss(sharded_report):
+    """End-to-end elastic serving (runs in the 8-device subprocess,
+    tests/sharded_check.py): the engine's watchdog flags the silent
+    device, rebuild_after_loss re-plans the mesh over the survivors
+    ((2, 4) -> (1, 4) via plan_restart), re-packs onto it, and the
+    rebuilt engine decodes the exact same tokens."""
+    assert sharded_report["engine_mesh_serving"] == "ok", \
+        sharded_report["engine_mesh_serving"]
+
+
+def test_engine_rebuild_guards_non_mesh():
+    import jax.numpy as jnp
+    import pytest
+
+    from repro.configs import get_smoke
+    from repro.models import model as model_mod
+    from repro.models.common import ShardLayout
+    from repro.serving import Engine, ServeConfig
+
+    import jax
+    cfg = get_smoke("tinyllama-1.1b").with_(dtype=jnp.float32)
+    params = model_mod.init_lm(jax.random.PRNGKey(0), cfg, ShardLayout(tp=1))
+    eng = Engine(params, cfg, ShardLayout(tp=1), ServeConfig(num_slots=2))
+    with pytest.raises(RuntimeError, match="mesh"):
+        eng.rebuild_after_loss([0])
+    with pytest.raises(RuntimeError, match="mesh"):
+        eng.make_watchdog()

@@ -399,3 +399,39 @@ def test_engine_rejects_unknown_autotune_value(rng):
     params = model_mod.init_lm(rng, cfg, layout)
     with pytest.raises(ValueError, match="autotune"):
         Engine(params, cfg, layout, ServeConfig(autotune="always"))
+
+
+def test_engine_close_disarms_on_first_use(tcache, rng):
+    """The on_first_use footgun (docs/autotuning.md): the armed policy
+    used to outlive the engine silently — every later qmm in the
+    process kept measuring new shapes.  close() / the context manager
+    must reset it; an engine that never armed it must not."""
+    from repro.configs import get_smoke
+    from repro.models import model as model_mod
+    from repro.models.common import ShardLayout
+    from repro.serving import Engine, ServeConfig
+
+    layout = ShardLayout(tp=1)
+    cfg = get_smoke("tinyllama-1.1b").with_(dtype=jnp.float32,
+                                            quant_policy="tnn")
+    params = model_mod.init_lm(rng, cfg, layout)
+    scfg = ServeConfig(num_slots=2, max_len=16, prefill_bucket=8,
+                       pack_params=True, autotune="on_first_use")
+    with Engine(params, cfg, layout, scfg, seed=0):
+        assert plan_cache.get_policy() == "on_first_use"
+    assert plan_cache.get_policy() == "off"
+
+    # idempotent + explicit close()
+    eng = Engine(params, cfg, layout, scfg, seed=0)
+    assert plan_cache.get_policy() == "on_first_use"
+    eng.close()
+    eng.close()
+    assert plan_cache.get_policy() == "off"
+
+    # an unrelated engine must not clobber a policy it never set
+    plan_cache.set_policy("on_first_use")
+    Engine(params, cfg, layout,
+           ServeConfig(num_slots=2, max_len=16, prefill_bucket=8),
+           seed=0).close()
+    assert plan_cache.get_policy() == "on_first_use"
+    plan_cache.set_policy("off")

@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Docs lint gate (CI lint job + tests/test_docs_lint.py).
+
+Two checks, both cheap and dependency-free:
+
+1. **Relative links resolve** — every ``[text](target)`` in README.md
+   and docs/**/*.md whose target is a repo-relative path must point at
+   an existing file/directory (URL schemes, bare ``#anchors`` and
+   paths that escape the repo root — e.g. the GitHub badge idiom
+   ``../../actions/...`` — are skipped: they are not checkable against
+   the working tree).
+2. **Module docstrings** — every public module under src/repro/ (any
+   ``*.py`` whose basename does not start with ``_``, plus every
+   ``__init__.py``) must open with a module docstring.  Parsed with
+   ``ast``, so a string that merely *appears* after executable code
+   (the historical launch/dryrun.py bug this gate now prevents) counts
+   as missing.
+
+Exit status 0 when clean; 1 with one finding per line on stderr.
+
+    python tools/check_docs.py [--root DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import re
+import sys
+
+# [text](target) and ![alt](target); stops at the first ')' — good
+# enough for the repo's links, which never nest parentheses.
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_markdown(root: pathlib.Path):
+    readme = root / "README.md"
+    if readme.exists():
+        yield readme
+    docs = root / "docs"
+    if docs.is_dir():
+        yield from sorted(docs.rglob("*.md"))
+
+
+def broken_links(root: pathlib.Path):
+    findings = []
+    for md in iter_markdown(root):
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for target in _LINK_RE.findall(line):
+                if target.startswith(_SCHEMES) or target.startswith("#"):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = (md.parent / rel).resolve()
+                try:
+                    resolved.relative_to(root.resolve())
+                except ValueError:
+                    continue        # escapes the repo: not checkable
+                if not resolved.exists():
+                    findings.append(
+                        f"{md.relative_to(root)}:{lineno}: "
+                        f"broken relative link -> {target}")
+    return findings
+
+
+def missing_docstrings(root: pathlib.Path):
+    findings = []
+    src = root / "src"
+    for py in sorted(src.rglob("*.py")) if src.is_dir() else []:
+        if py.name.startswith("_") and py.name != "__init__.py":
+            continue                # private helper modules
+        try:
+            tree = ast.parse(py.read_text())
+        except SyntaxError as e:
+            findings.append(f"{py.relative_to(root)}: unparseable ({e})")
+            continue
+        if ast.get_docstring(tree) is None:
+            findings.append(
+                f"{py.relative_to(root)}: missing module docstring")
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=pathlib.Path,
+                    default=pathlib.Path(__file__).resolve().parent.parent)
+    args = ap.parse_args(argv)
+    findings = broken_links(args.root) + missing_docstrings(args.root)
+    for f in findings:
+        print(f, file=sys.stderr)
+    n_md = sum(1 for _ in iter_markdown(args.root))
+    print(f"check_docs: {n_md} markdown files, "
+          f"{len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
