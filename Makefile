@@ -4,7 +4,8 @@
 PY      := PYTHONPATH=src python
 TOL     := 0.25
 
-.PHONY: test test-fast lint bench bench-dense bench-baseline bench-check
+.PHONY: test test-fast lint bench bench-dense bench-serving bench-baseline \
+	bench-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -24,6 +25,11 @@ bench:
 bench-dense:
 	$(PY) -m benchmarks.bench_matmul --skip-table3 --backend dense \
 		--crossover --json bench_dense.json
+
+# Serving section only: the deterministic tnn2-vs-bf16 cache HBM ratio
+# (gated) plus tokens/s at concurrency 1/4/16 -> bench_serving.json.
+bench-serving:
+	$(PY) -m benchmarks.bench_serving --json bench_serving.json
 
 # Deliberately refresh the committed perf baseline.  Run on an IDLE
 # reference container: three full runs, folded by benchmarks.compare

@@ -1,0 +1,131 @@
+"""Serving benchmark family: paged ternary KV cache + continuous
+batching (docs/serving.md).
+
+Two kinds of numbers:
+
+* ``cache_hbm_ratio`` — the GATED metric: cache bytes of the dense bf16
+  slab vs the tnn2 paged pool at the FULL tinyllama-1.1b geometry
+  (8 slots x 512 tokens, head_dim 64), computed from ``jax.eval_shape``
+  ShapeDtypeStructs + ``paged_kvcache.tree_nbytes`` — no allocation and
+  no timing, so the ratio is exactly reproducible (~7.30x: 2-bit planes
+  pack 32 lanes into one uint32 word; the remaining gap to the ideal 8x
+  is the per-token scale/position metadata and the page-table rows).
+  The CI gate trips only if the packed layout widens or a payload leaf
+  silently goes dense.
+* ``throughput/c{1,4,16}`` — informative decode tokens/s of the SMOKE
+  tnn2 engine at concurrency 1 / 4 / 16 (overlapping requests on that
+  many slots, chunked prefill interleaved with decode).  Wall-clock on
+  whatever CPU runs the bench — printed and recorded, deliberately NOT
+  gated (the keys carry no "speedup" field).
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--json out.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+CONCURRENCY = (1, 4, 16)
+
+
+def _cache_hbm_ratio() -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.tinyllama_1_1b import CONFIG
+    from repro.models.common import ShardLayout
+    from repro.models.kvcache import init_caches
+    from repro.models.paged_kvcache import tree_nbytes
+
+    layout = ShardLayout(tp=1)
+    b, max_len = 8, 512
+    dense = jax.eval_shape(
+        lambda: init_caches(CONFIG, layout, b, max_len, dtype=jnp.bfloat16))
+    packed = jax.eval_shape(
+        lambda: init_caches(CONFIG.with_(kv_cache_dtype="tnn2"), layout,
+                            b, max_len))
+    dense_b, packed_b = tree_nbytes(dense), tree_nbytes(packed)
+    return {
+        "speedup": dense_b / packed_b,          # gated (deterministic)
+        "dense_bytes": dense_b,
+        "packed_bytes": packed_b,
+        "geometry": f"{CONFIG.name} b{b} L{max_len} dh{CONFIG.head_dim_}",
+    }
+
+
+def _throughput(concurrency: int, quick: bool) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke
+    from repro.models import model as model_mod
+    from repro.models.common import ShardLayout
+    from repro.serving import Engine, Request, SamplerConfig, ServeConfig
+
+    layout = ShardLayout(tp=1)
+    cfg = get_smoke("tinyllama-1.1b").with_(kv_cache_dtype="tnn2")
+    params = model_mod.init_lm(jax.random.PRNGKey(0), cfg, layout)
+    max_new = 8 if quick else 32
+    scfg = ServeConfig(num_slots=concurrency, max_len=128,
+                       page_size=16, prefill_chunk=16,
+                       sampler=SamplerConfig(temperature=0.0))
+    eng = Engine(params, cfg, layout, scfg)
+    rng = np.random.default_rng(0)
+
+    def submit_wave(uid0: int):
+        for i in range(2 * concurrency):
+            plen = int(rng.integers(8, 24))
+            eng.submit(Request(uid=uid0 + i,
+                               prompt=rng.integers(0, cfg.vocab_size, plen),
+                               max_new_tokens=max_new))
+
+    submit_wave(0)                               # warm-up: traces the two
+    eng.run()                                    # jitted step shapes
+    submit_wave(1000)
+    t0 = time.perf_counter()
+    results = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for u, r in results.items() if u >= 1000)
+    stats = eng.page_stats()
+    assert all(s["used"] == 0 for s in stats), stats   # drained clean
+    eng.close()
+    return {"tokens_per_s": toks / dt, "tokens": toks, "wall_s": dt,
+            "requests": 2 * concurrency, "max_new": max_new}
+
+
+def run(quick: bool = True) -> dict:
+    """Return the ``serving`` section for BENCH_results.json."""
+    results = {"cache_hbm_ratio": _cache_hbm_ratio()}
+    r = results["cache_hbm_ratio"]
+    print(f"  cache HBM: dense {r['dense_bytes'] / 2**20:.1f} MiB vs "
+          f"tnn2 pages {r['packed_bytes'] / 2**20:.1f} MiB "
+          f"-> {r['speedup']:.2f}x smaller ({r['geometry']}) [gated]")
+    for c in CONCURRENCY:
+        d = _throughput(c, quick)
+        results[f"throughput/c{c}"] = d
+        print(f"  concurrency {c:2d}: {d['tokens_per_s']:8.1f} tok/s "
+              f"({d['tokens']} tokens over {d['requests']} requests in "
+              f"{d['wall_s']:.2f}s, informative)")
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.bench_serving", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    res = run(quick=not args.full)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

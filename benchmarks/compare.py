@@ -54,7 +54,13 @@ BASELINE_CAPS = {"fused": 1.15, "conv": 1.15, "tuned": 1.0,
                  # integer-accumulator bytes), not a timing: int16 on
                  # the wire == exactly 2.0, so the cap IS the value and
                  # the gate trips only if the reduction widens to f32/i32
-                 "sharded": 2.0}
+                 "sharded": 2.0,
+                 # deterministic cache-bytes ratio (dense bf16 slab over
+                 # tnn2 paged pool, benchmarks/bench_serving.py): exactly
+                 # 7.30x at the reference geometry, so the cap IS the
+                 # value and the gate trips only if the packed page
+                 # layout widens or a payload leaf goes dense
+                 "serving": 7.3}
 
 
 def extract_metrics(results: Dict) -> Dict[str, float]:
@@ -73,11 +79,15 @@ def extract_metrics(results: Dict) -> Dict[str, float]:
     * ``sharded``          — k-sharded qmm psum wire-bytes ratio
       (f32 vs integer accumulator) per (mode, device count) —
       deterministic, see benchmarks/bench_sharded.py;
+    * ``serving``          — tnn2-paged vs dense-bf16 cache HBM bytes
+      ratio — deterministic, see benchmarks/bench_serving.py (its
+      tokens/s keys carry no "speedup" field and stay ungated);
     * ``conv``/``conv_dense`` — fused-im2col vs materializing
       conv2d_packed per (layer, mode), default and dense backends.
     """
     out: Dict[str, float] = {}
-    for family in ("fused", "dense_fused", "dense_crossover", "sharded"):
+    for family in ("fused", "dense_fused", "dense_crossover", "sharded",
+                   "serving"):
         for key, d in (results.get(family) or {}).items():
             if isinstance(d, dict) and "speedup" in d:
                 out[f"{family}/{key}"] = float(d["speedup"])
@@ -132,7 +142,8 @@ def compare(baseline: Dict, current: Dict, tolerance: float
 def _set_metric(doc: Dict, name: str, value: float) -> None:
     """Write one flattened metric name back into a results document."""
     family, rest = name.split("/", 1)
-    if family in ("fused", "dense_fused", "dense_crossover", "sharded"):
+    if family in ("fused", "dense_fused", "dense_crossover", "sharded",
+                  "serving"):
         doc[family][rest]["speedup"] = value
     elif family == "tuned":
         doc["tuned_vs_default"][rest]["speedup"] = value

@@ -36,20 +36,20 @@ def main():
 
     results = {}
 
-    print("\n[1/7] Table II analogue — microkernel operation model")
+    print("\n[1/8] Table II analogue — microkernel operation model")
     from benchmarks import bench_microkernel
     results["microkernel"] = bench_microkernel.run()
 
-    print("\n[2/7] Table III analogue — matmul speed-ratio matrix")
+    print("\n[2/8] Table III analogue — matmul speed-ratio matrix")
     from benchmarks import bench_matmul
     results["table3"] = bench_matmul.run(quick=quick)
     results["fused"] = bench_matmul.run_fused(quick=quick)
 
-    print("\n[3/7] Dense-backend MXU fusion (in-VMEM unpack kernels)")
+    print("\n[3/8] Dense-backend MXU fusion (in-VMEM unpack kernels)")
     results["dense_fused"] = bench_matmul.run_dense(quick=quick)
     results["dense_crossover"] = bench_matmul.run_dense_crossover(quick=quick)
 
-    print("\n[4/7] GeMM-based convolution")
+    print("\n[4/8] GeMM-based convolution")
     from benchmarks import bench_conv
     results["conv"] = bench_conv.run(quick=quick)
     # dense-backend gated columns only (QAT columns are backend-free and
@@ -57,14 +57,18 @@ def main():
     results["conv_dense"] = bench_conv.run(quick=quick, backend="dense",
                                            qat=False)
 
-    print("\n[5/7] Autotuned vs default kernel tiling (repro.tune)")
+    print("\n[5/8] Autotuned vs default kernel tiling (repro.tune)")
     results["tuned_vs_default"] = bench_matmul.run_tuned(quick=quick)
 
-    print("\n[6/7] Sharded qmm — integer-psum reduction at 2/4/8 devices")
+    print("\n[6/8] Sharded qmm — integer-psum reduction at 2/4/8 devices")
     from benchmarks import bench_sharded
     results["sharded"] = bench_sharded.run(quick=quick)
 
-    print("\n[7/7] Roofline report (from dry-run artifacts, if present)")
+    print("\n[7/8] Serving — paged ternary KV cache (HBM ratio + tokens/s)")
+    from benchmarks import bench_serving
+    results["serving"] = bench_serving.run(quick=quick)
+
+    print("\n[8/8] Roofline report (from dry-run artifacts, if present)")
     from benchmarks import roofline
     try:
         rows = roofline.run(mesh="pod")

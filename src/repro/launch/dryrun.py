@@ -75,6 +75,10 @@ def run_cell_here(arch: str, shape_name: str, mesh_name: str,
     for tok in (quant.split("+") if quant else []):
         if tok == "kv8":
             over["kv_cache_dtype"] = "int8"
+        elif tok == "kvt2":
+            # paged ternary KV cache (models/paged_kvcache.py) — the
+            # cells then lower against page-table caches
+            over["kv_cache_dtype"] = "tnn2"
         elif tok == "noremat":
             over["remat"] = False
         elif tok:
@@ -283,7 +287,9 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--timeout", type=int, default=3600)
     ap.add_argument("--quant", default=None,
-                    help="override quant_policy (tnn|tbn|bnn|int8|...)")
+                    help="override quant_policy (tnn|tbn|bnn|int8|...), "
+                         "'+'-combinable with kv8/kvt2 (int8 / paged "
+                         "ternary KV cache) and noremat")
     ap.add_argument("--rules", default=None,
                     help="override ruleset (train_fsdp|...)")
     ap.add_argument("--single", action="store_true",

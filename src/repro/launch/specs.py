@@ -81,10 +81,6 @@ def _ns(spec: P) -> NamedSharding:
     return NamedSharding(sharding.active().mesh, spec)
 
 
-def _cache_dtype(cfg: ModelConfig):
-    return jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
-
-
 def _serve_params_shapes(cfg: ModelConfig, layout: ShardLayout):
     """Inference param ShapeDtypeStructs; low-bit policies get the
     offline-PACKED tree (models/packing.py) — the paper's Algorithm 2,
@@ -168,8 +164,10 @@ def _prefill_cell(cfg: ModelConfig, shape: ShapeSpec) -> CellArtifacts:
         return model_mod.prefill(params, batch, caches, cfg, layout)
 
     params_shapes = _serve_params_shapes(cfg, layout)
-    cache_shapes = jax.eval_shape(
-        lambda: init_caches(cfg, layout, b, s, dtype=_cache_dtype(cfg)))
+    # dtype=None: init_caches resolves the storage (bf16/int8 slab or
+    # tnn2 ternary pages) through models/common.kv_cache_format and
+    # raises on unknown kv_cache_dtype values.
+    cache_shapes = jax.eval_shape(lambda: init_caches(cfg, layout, b, s))
     batch_shapes = _batch_shapes(cfg, shape, with_labels=False)
     return CellArtifacts(
         step_fn=prefill_fn,
@@ -190,8 +188,7 @@ def _decode_cell(cfg: ModelConfig, shape: ShapeSpec) -> CellArtifacts:
              else make_serve_step(cfg, layout))
 
     params_shapes = _serve_params_shapes(cfg, layout)
-    cache_shapes = jax.eval_shape(
-        lambda: init_caches(cfg, layout, b, s, dtype=_cache_dtype(cfg)))
+    cache_shapes = jax.eval_shape(lambda: init_caches(cfg, layout, b, s))
     if cfg.input_kind == "embeddings":
         tok_shapes = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
         tok_shard = _ns(sharding.spec_for(tok_shapes.shape,

@@ -41,7 +41,7 @@ from repro.models.common import (
 from repro.parallel import sharding
 
 __all__ = ["HeadLayout", "head_layout", "init_attention", "attention",
-           "decode_attention", "project"]
+           "decode_attention", "paged_attention_step", "project"]
 
 
 # ---------------------------------------------------------------------------
@@ -351,3 +351,60 @@ def decode_attention(params, x, cfg: ModelConfig, layout: ShardLayout,
     out = out.reshape(b, 1, hl.hp * dh).astype(x.dtype)
     y = project(params["wo"], out, policy.attn_proj, policy.backend)
     return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged (ternary) cache: chunked-prefill / decode step against page views
+# ---------------------------------------------------------------------------
+
+def paged_attention_step(params, x, cfg: ModelConfig, layout: ShardLayout,
+                         entry: Dict[str, jnp.ndarray], step: jnp.ndarray,
+                         *, window: int = 0) -> Tuple[jnp.ndarray, Dict]:
+    """Write-then-attend over a paged cache entry (models/paged_kvcache).
+
+    x (B,S,D) — S new tokens per slot (S=1 decode, S=prefill_chunk for a
+    chunked-prefill call; the two shapes are the engine's only traces).
+    ``step`` encodes per-row activity:
+
+    * (B,)  int32 — decode: row b writes ONE token at position step[b];
+      step[b] < 0 marks a dead row (free slot / row mid-prefill) that
+      writes nothing and whose output is discarded;
+    * (B,2) int32 — chunk: row b writes ``step[b,1]`` real tokens at
+      positions ``step[b,0] ..``; rows with step[b,1] == 0 are dead.
+
+    Dead/padding tokens scatter into the reserved scratch page with
+    ``INVALID_POS``, so one static-shape call serves rows in different
+    lifecycle phases without corrupting any live page.
+    """
+    from repro.models import paged_kvcache as paged
+    b, s, d = x.shape
+    dh = cfg.head_dim_
+    hl = head_layout(cfg.num_heads, cfg.num_kv_heads, layout.tp)
+    policy = cfg.policy
+    step = jnp.asarray(step, jnp.int32)
+    if step.ndim == 2:
+        p0, nvalid = step[:, 0], step[:, 1]
+    else:
+        step_v = jnp.broadcast_to(step, (b,))
+        p0 = jnp.maximum(step_v, 0)
+        nvalid = jnp.where(step_v >= 0, 1, 0)
+    offs = jnp.arange(s, dtype=jnp.int32)
+    positions = p0[:, None] + offs[None, :]                    # (B, S)
+    live = offs[None, :] < nvalid[:, None]
+    q, k, v = _qkv(params, x, cfg, hl, jnp.where(live, positions, 0), policy)
+    entry = paged.append_tokens(entry, k, v, positions, live)
+    kd, vd, pos_k = paged.page_view(entry, dh)                 # (B,L,KVp,dh)
+
+    qg = q.reshape(b, s, hl.kvp, hl.g, dh)
+    scores = jnp.einsum("bskgd,blkd->bkgsl", qg.astype(jnp.float32),
+                        kd.astype(jnp.float32)) * (dh ** -0.5)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    valid = pos_k[:, None, :] <= positions[:, :, None]         # (B, S, L)
+    if window:
+        valid &= (positions[:, :, None] - pos_k[:, None, :]) < window
+    scores = jnp.where(valid[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsl,blkd->bskgd", probs, vd.astype(jnp.float32))
+    out = out.reshape(b, s, hl.hp * dh).astype(x.dtype)
+    y = project(params["wo"], out, policy.attn_proj, policy.backend)
+    return y, entry

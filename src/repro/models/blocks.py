@@ -8,8 +8,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import ssm as ssm_mod
-from repro.models.attention import attention, decode_attention, init_attention
+from repro.models.attention import (attention, decode_attention,
+                                    init_attention, paged_attention_step)
 from repro.models.common import ModelConfig, ShardLayout, layer_norm, rms_norm
+from repro.models.paged_kvcache import is_paged
 from repro.models.ffn import ffn, init_ffn
 from repro.models.moe import init_moe, moe_ffn
 from repro.parallel import sharding
@@ -66,7 +68,17 @@ def block_forward(p: Dict[str, Any], x: jnp.ndarray,
     new_cache = None
     if mixer in ("A", "AL"):
         window = cfg.sliding_window if mixer == "AL" else 0
-        if decode:
+        if cache is not None and is_paged(cache):
+            st = step
+            if not decode:
+                # prefill against a paged entry: the whole prompt is one
+                # write-then-attend chunk starting at positions[0]
+                b, s = h.shape[0], h.shape[1]
+                st = jnp.stack([jnp.broadcast_to(positions[0], (b,)),
+                                jnp.full((b,), s, jnp.int32)], axis=1)
+            h, new_cache = paged_attention_step(p["mixer"], h, cfg, layout,
+                                                cache, st, window=window)
+        elif decode:
             h, new_cache = decode_attention(p["mixer"], h, cfg, layout,
                                             cache, step, window=window)
         else:

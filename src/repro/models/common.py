@@ -21,13 +21,56 @@ import jax.numpy as jnp
 from repro.core.policy import POLICIES, QuantPolicy
 
 __all__ = ["ModelConfig", "ShardLayout", "rms_norm", "layer_norm",
-           "apply_rope", "rope_freqs", "softcap", "ceil_to", "NORM_INIT"]
+           "apply_rope", "rope_freqs", "softcap", "ceil_to", "NORM_INIT",
+           "KVCacheFormat", "kv_cache_format", "KV_CACHE_FORMATS"]
 
 NORM_INIT = 1.0
 
 
 def ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheFormat:
+    """Resolved ``ModelConfig.kv_cache_dtype`` value.
+
+    ``storage_dtype`` is the per-element dtype of a *dense* cache (None
+    for packed formats, which store bit-plane words instead of
+    elements); ``paged`` selects the page-table cache of
+    :mod:`repro.models.paged_kvcache` over the dense slab cache.
+    """
+    name: str
+    storage_dtype: Any            # jnp dtype or None (packed payload)
+    paged: bool
+
+
+KV_CACHE_FORMATS = {
+    "bf16": KVCacheFormat("bf16", jnp.bfloat16, paged=False),
+    "int8": KVCacheFormat("int8", jnp.int8, paged=False),
+    # The paper's 2-bit ternary bit-plane encoding applied to the KV
+    # cache itself: paged storage, quantize-at-append, ~8x fewer cache
+    # HBM bytes than bf16 (see docs/serving.md).
+    "tnn2": KVCacheFormat("tnn2", None, paged=True),
+    # Same page-table machinery with dense bf16 pages — the
+    # bit-comparable oracle the paged-cache tests diff against.
+    "tnn2-oracle": KVCacheFormat("tnn2-oracle", jnp.bfloat16, paged=True),
+}
+
+
+def kv_cache_format(name: str) -> KVCacheFormat:
+    """The ONE resolution point for ``kv_cache_dtype`` strings.
+
+    Every consumer (``init_caches``, ``launch/specs.py``,
+    ``launch/dryrun.py``, the serving engine) routes through here so an
+    unknown value fails loudly instead of silently degrading to bf16.
+    """
+    try:
+        return KV_CACHE_FORMATS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kv_cache_dtype {name!r}; expected one of "
+            f"{sorted(KV_CACHE_FORMATS)}") from None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +133,8 @@ class ModelConfig:
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
     quant_policy: str = "bf16"
-    kv_cache_dtype: str = "bf16"     # "bf16" | "int8" (quantized KV)
+    kv_cache_dtype: str = "bf16"     # KV_CACHE_FORMATS: bf16/int8 dense
+                                     # slabs, tnn2[-oracle] ternary pages
     dtype: Any = jnp.bfloat16
     # --- distribution defaults (overridable by the launcher) ---
     remat: bool = True

@@ -12,6 +12,14 @@ layer scan):
 
 ``pos`` starts at INVALID (2^30) so unwritten slots never pass the
 ``pos <= step`` mask.
+
+Cache storage resolves through :func:`repro.models.common.kv_cache_format`
+(the single ``kv_cache_dtype`` switch): ``"bf16"``/``"int8"`` build the
+dense slab above, ``"tnn2"`` (and its bit-comparable ``"tnn2-oracle"``)
+builds the *paged* ternary cache of :mod:`repro.models.paged_kvcache` —
+page-table indirection with K/V packed in the paper's 2-bit bit planes.
+An explicit ``dtype=`` argument forces the dense slab (tests and the
+legacy bucket engine path rely on that).
 """
 
 from __future__ import annotations
@@ -22,12 +30,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.attention import head_layout
-from repro.models.common import ModelConfig, ShardLayout
+from repro.models.common import ModelConfig, ShardLayout, kv_cache_format
+from repro.models.paged_kvcache import (INVALID_POS, init_paged_caches,
+                                        paged_logical_axes)
 from repro.models import ssm as ssm_mod
 
 __all__ = ["init_caches", "cache_logical_axes", "INVALID_POS"]
-
-INVALID_POS = 2 ** 30
 
 
 def _attn_cache_shape(cfg: ModelConfig, layout: ShardLayout, batch: int,
@@ -37,7 +45,20 @@ def _attn_cache_shape(cfg: ModelConfig, layout: ShardLayout, batch: int,
 
 
 def init_caches(cfg: ModelConfig, layout: ShardLayout, batch: int,
-                max_len: int, dtype=jnp.bfloat16) -> List[Dict[str, Any]]:
+                max_len: int, dtype=None, *, page_size: int = 16,
+                prefill_chunk: int = 32) -> List[Dict[str, Any]]:
+    """Decode caches for one batch.  ``dtype=None`` resolves the storage
+    from ``cfg.kv_cache_dtype`` (failing loudly on unknown names); a
+    paged format delegates to ``init_paged_caches`` with the given page
+    geometry."""
+    if dtype is None:
+        fmt = kv_cache_format(cfg.kv_cache_dtype)
+        if fmt.paged:
+            return init_paged_caches(cfg, layout, batch, max_len,
+                                     page_size=page_size,
+                                     prefill_chunk=prefill_chunk,
+                                     oracle=fmt.storage_dtype is not None)
+        dtype = fmt.storage_dtype
     caches = []
     for mixer, _ in cfg.layer_pattern:
         if mixer in ("A", "AL"):
@@ -63,6 +84,8 @@ def init_caches(cfg: ModelConfig, layout: ShardLayout, batch: int,
 
 def cache_logical_axes(cfg: ModelConfig) -> List[Dict[str, Any]]:
     """Logical axes per cache leaf (leading period dim replicated)."""
+    if kv_cache_format(cfg.kv_cache_dtype).paged:
+        return paged_logical_axes(cfg)
     out = []
     for mixer, _ in cfg.layer_pattern:
         if mixer in ("A", "AL"):

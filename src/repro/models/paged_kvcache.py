@@ -1,0 +1,384 @@
+"""Paged KV cache storing K/V in the paper's 2-bit ternary encoding.
+
+The dense slab cache (models/kvcache.py) allocates ``num_slots x
+max_len`` bf16/int8 rows up front.  This module replaces the slab with a
+vLLM-style **page pool** plus a per-slot **page table**, and stores the
+page payload in the paper's ternary bit planes (§III-A): each cached
+token's K (and V) vector is TWN-quantized at append time — the same
+``0.7 * mean|x|`` threshold / masked-mean scale as
+:func:`repro.core.quantize.ternarize`, per token — packed into
+``(plus, minus)`` uint32 words along the head dim, and decoded on read
+as ``alpha * (plus - minus)`` — the eq. (2) scale epilogue applied to
+cache reads instead of weights.  Cache HBM per token drops from
+``2 * KVp * dh * 2`` bytes (bf16) to ``2 * KVp * ceil(dh/32) * 2 * 4``
+bytes of plane words + 8 bytes of scale — ~8x for production head dims.
+
+Device layout per attention pattern entry (leading dim = num_periods,
+stripped by the layer scan exactly like the dense cache):
+
+* packed (``kv_cache_dtype="tnn2"``)::
+
+      k_plus/k_minus/v_plus/v_minus  (P, n_pages, page, KVp, dw)  uint32
+      k_scale/v_scale                (P, n_pages, page)           f32
+      pos                            (P, n_pages, page)  int32 = INVALID
+      page_table                     (P, B, npp)         int32 = 0
+
+  with ``dw = packed_width(head_dim)``; scales live in page metadata
+  (one f32 row per page — the "per-page scale table");
+
+* oracle (``"tnn2-oracle"``): same indirection with dense bf16
+  ``k``/``v`` pages — bit-comparable reference for the page/table/mask
+  machinery with quantization switched off.
+
+**Page 0 is a reserved scratch page**: unallocated page-table entries
+point at it and every dead token (chunk padding, inactive batch rows)
+is scattered into it with ``pos = INVALID_POS``, so static-shape
+in-trace writes need no conditionals and no mask ever accepts scratch
+content.  The free list hands out pages 1..n_pages-1; the pool is sized
+so a slot's worst case (``ceil(max_len / page)`` pages) always fits,
+and the host-side :class:`PageAllocator` keeps exact accounting (the
+serving tests assert it balances to zero after drain).
+
+Sliding-window ("AL") entries keep a *ring* of pages: logical position
+``p`` lives at slot ``p % (npp * page)``.  The ring capacity is
+``window + prefill_chunk - 1`` (page-rounded), not ``window``: a
+write-then-attend chunk writes all its tokens before attending, so any
+key inside the window of *any* query of the chunk must survive the
+chunk's own ring overwrites (see docs/serving.md).
+
+Sharding: page payloads shard the KVp axis on "kv_heads" and replicate
+word/page axes — the word axes carry packed planes exactly like the
+QTensor payload planes of parallel/qmm_mesh.py, which replicate plane
+words within a shard and split only head/feature dims.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import pack_ternary, packed_width, unpack_bits
+from repro.models.common import ModelConfig, ShardLayout
+
+__all__ = [
+    "INVALID_POS", "SCRATCH_PAGE", "is_paged", "entry_geometry",
+    "init_paged_caches", "paged_logical_axes", "ternarize_tokens",
+    "append_tokens", "page_view", "PageAllocator", "EntryPager",
+    "make_pagers", "sync_page_tables", "reset_pages", "tree_nbytes",
+]
+
+# Canonical here (kvcache.py re-exports it) to keep the import graph
+# acyclic: kvcache -> attention -> paged_kvcache.
+INVALID_POS = 2 ** 30
+SCRATCH_PAGE = 0
+
+
+def is_paged(entry: Any) -> bool:
+    """True for a paged cache entry (detected by its page_table leaf)."""
+    return isinstance(entry, dict) and "page_table" in entry
+
+
+def entry_geometry(entry) -> Tuple[int, int, int]:
+    """(n_pages, page, npp) from leaf shapes — valid with or without the
+    leading period dim (the layer scan strips it)."""
+    npp = entry["page_table"].shape[-1]
+    n_pages, page = entry["pos"].shape[-2:]
+    return n_pages, page, npp
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+def init_paged_caches(cfg: ModelConfig, layout: ShardLayout, batch: int,
+                      max_len: int, *, page_size: int = 16,
+                      prefill_chunk: int = 32,
+                      oracle: bool = False) -> List[Dict[str, Any]]:
+    """Paged caches for every pattern entry (attention mixers only)."""
+    from repro.models.attention import head_layout   # late: avoids a cycle
+    if any(m == "M" for m, _ in cfg.layer_pattern):
+        raise NotImplementedError(
+            "paged (tnn2) KV caches cover attention mixers only; pattern "
+            f"{cfg.layer_pattern} has an SSM ('M') entry whose recurrent "
+            "state has no page structure — serve it with a dense cache")
+    if page_size < 1 or prefill_chunk < 1:
+        raise ValueError(f"page_size={page_size} / prefill_chunk="
+                         f"{prefill_chunk} must be >= 1")
+    hl = head_layout(cfg.num_heads, cfg.num_kv_heads, layout.tp)
+    dh = cfg.head_dim_
+    dw = packed_width(dh)
+    p_dim = cfg.num_periods
+    caches: List[Dict[str, Any]] = []
+    for mixer, _ in cfg.layer_pattern:
+        cap = max_len
+        if mixer == "AL" and cfg.sliding_window:
+            cap = min(cfg.sliding_window + prefill_chunk - 1, max_len)
+        npp = -(-cap // page_size)
+        n_pages = 1 + batch * npp                 # + the scratch page
+        entry: Dict[str, Any] = {
+            "pos": jnp.full((p_dim, n_pages, page_size), INVALID_POS,
+                            jnp.int32),
+            "page_table": jnp.zeros((p_dim, batch, npp), jnp.int32),
+        }
+        if oracle:
+            shape = (p_dim, n_pages, page_size, hl.kvp, dh)
+            entry["k"] = jnp.zeros(shape, jnp.bfloat16)
+            entry["v"] = jnp.zeros(shape, jnp.bfloat16)
+        else:
+            wshape = (p_dim, n_pages, page_size, hl.kvp, dw)
+            for name in ("k_plus", "k_minus", "v_plus", "v_minus"):
+                entry[name] = jnp.zeros(wshape, jnp.uint32)
+            entry["k_scale"] = jnp.zeros((p_dim, n_pages, page_size),
+                                         jnp.float32)
+            entry["v_scale"] = jnp.zeros((p_dim, n_pages, page_size),
+                                         jnp.float32)
+        caches.append(entry)
+    return caches
+
+
+def paged_logical_axes(cfg: ModelConfig) -> List[Dict[str, Any]]:
+    """Logical axes per paged leaf (superset of packed + oracle keys)."""
+    axes = {
+        "pos": (None, None, None),
+        "page_table": (None, "batch", None),
+        "k": (None, None, None, "kv_heads", None),
+        "v": (None, None, None, "kv_heads", None),
+        "k_plus": (None, None, None, "kv_heads", None),
+        "k_minus": (None, None, None, "kv_heads", None),
+        "v_plus": (None, None, None, "kv_heads", None),
+        "v_minus": (None, None, None, "kv_heads", None),
+        "k_scale": (None, None, None),
+        "v_scale": (None, None, None),
+    }
+    return [dict(axes) for _ in cfg.layer_pattern]
+
+
+# ---------------------------------------------------------------------------
+# Quantize-at-append (in-trace)
+# ---------------------------------------------------------------------------
+
+def ternarize_tokens(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-token TWN quantizer over the trailing (heads, dh) axes.
+
+    Vectorized :func:`repro.core.quantize.ternarize`: threshold
+    ``0.7 * mean|x|`` and scale ``alpha = E[|x| : |x| > thr]`` computed
+    per token (the per-tensor stats of ``conv_act_stats`` at token
+    granularity).  Returns (t in {-1,0,+1} f32, alpha (...,) f32).
+    """
+    xf = x.astype(jnp.float32)
+    ax = (-2, -1)
+    absx = jnp.abs(xf)
+    thr = 0.7 * jnp.mean(absx, axis=ax, keepdims=True)
+    mask = absx > thr
+    t = jnp.sign(xf) * mask
+    denom = jnp.maximum(jnp.sum(mask, axis=ax), 1)
+    alpha = jnp.sum(jnp.where(mask, absx, 0.0), axis=ax) / denom
+    return t, alpha
+
+
+def append_tokens(entry: Dict[str, Any], k: jnp.ndarray, v: jnp.ndarray,
+                  positions: jnp.ndarray, live: jnp.ndarray
+                  ) -> Dict[str, Any]:
+    """Scatter S new tokens per slot into the entry's pages (in-trace).
+
+    k/v (B,S,KVp,dh) roped projections; positions (B,S) absolute int32;
+    live (B,S) bool — False for chunk padding and rows not writing this
+    call.  Dead tokens route to the scratch page with ``INVALID_POS``.
+    Entry leaves here carry NO period dim (called inside the layer scan).
+    """
+    n_pages, page, npp = entry_geometry(entry)
+    l_cap = npp * page
+    pos32 = positions.astype(jnp.int32)
+    # Of two tokens in this call hitting the same ring slot (a chunk
+    # longer than an AL ring), only the later one may land — mirrors the
+    # sequential one-token-per-step ring writes of decode_attention.
+    last = jnp.max(jnp.where(live, pos32, -1), axis=1, keepdims=True)
+    live = live & (pos32 + l_cap > last)
+    slot = pos32 % l_cap
+    lp, off = slot // page, slot % page
+    pid = jnp.take_along_axis(entry["page_table"], lp, axis=1)
+    pid = jnp.where(live, pid, SCRATCH_PAGE)
+    out = dict(entry)
+    out["pos"] = entry["pos"].at[pid, off].set(
+        jnp.where(live, pos32, INVALID_POS))
+    if "k_plus" in entry:
+        for name, val in (("k", k), ("v", v)):
+            t, alpha = ternarize_tokens(val)
+            plus, minus = pack_ternary(t)
+            out[f"{name}_plus"] = entry[f"{name}_plus"].at[pid, off].set(plus)
+            out[f"{name}_minus"] = (
+                entry[f"{name}_minus"].at[pid, off].set(minus))
+            out[f"{name}_scale"] = (
+                entry[f"{name}_scale"].at[pid, off].set(alpha))
+    else:
+        out["k"] = entry["k"].at[pid, off].set(k.astype(entry["k"].dtype))
+        out["v"] = entry["v"].at[pid, off].set(v.astype(entry["v"].dtype))
+    return out
+
+
+def page_view(entry: Dict[str, Any], dh: int
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Dense per-slot gather view for attention reads (in-trace).
+
+    -> (k, v, pos): k/v (B, L_cap, KVp, dh), pos (B, L_cap) with
+    ``L_cap = npp * page``.  Packed entries stream plane WORDS from HBM
+    and decode in-register — ``unpack_bits(plus) - unpack_bits(minus)``
+    times the per-token scale, the same shift/mask idiom as
+    ``dense_fused._unpack_bits`` and the eq. (2) correction with zero
+    bias (pad bits encode (0,0) = exact 0, so no depth correction is
+    needed).  Unallocated logical pages resolve to the scratch page,
+    whose positions stay ``INVALID_POS`` and fail every ``pos <= step``
+    mask.
+    """
+    n_pages, page, npp = entry_geometry(entry)
+    table = entry["page_table"]                    # (B, npp)
+    b = table.shape[0]
+    pos = entry["pos"][table].reshape(b, npp * page)
+    if "k_plus" in entry:
+        def dec(name):
+            val = (unpack_bits(entry[f"{name}_plus"][table], dh)
+                   - unpack_bits(entry[f"{name}_minus"][table], dh)
+                   ).astype(jnp.float32)
+            scale = entry[f"{name}_scale"][table]
+            return (val * scale[..., None, None]).reshape(
+                b, npp * page, val.shape[-2], dh)
+        k, v = dec("k"), dec("v")
+    else:
+        kvp = entry["k"].shape[-2]
+        k = entry["k"][table].reshape(b, npp * page, kvp, dh)
+        v = entry["v"][table].reshape(b, npp * page, kvp, dh)
+    return k, v, pos
+
+
+# ---------------------------------------------------------------------------
+# Host-side page bookkeeping (the scheduler's side of the cache)
+# ---------------------------------------------------------------------------
+
+class PageAllocator:
+    """Free-list allocator over the data pages ``1..n_pages-1``.
+
+    Pure host code; raises on exhaustion (the pool is provisioned so a
+    correct scheduler never hits it) and on double/foreign frees, so the
+    serving tests can assert exact balance-to-zero accounting.
+    """
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, 0, -1))   # pop() -> low pids
+        self._used: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int = 1) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free)} "
+                f"free of {self.n_pages - 1}")
+        out = [self._free.pop() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, pids: Sequence[int]) -> None:
+        for p in pids:
+            if p not in self._used:
+                raise RuntimeError(f"double/foreign free of page {p}")
+            self._used.discard(p)
+            self._free.append(p)
+
+
+class EntryPager:
+    """Host mirror of ONE paged entry: allocator + per-slot page lists.
+
+    The device ``page_table`` leaf is rebuilt from :attr:`table` when
+    :attr:`dirty` (see :func:`sync_page_tables`) — page allocation and
+    reclamation are host decisions, page *content* writes are in-trace.
+    """
+
+    def __init__(self, num_slots: int, npp: int, page: int, n_pages: int):
+        self.npp, self.page = npp, page
+        self.alloc = PageAllocator(n_pages)
+        self.table = np.zeros((num_slots, npp), np.int32)
+        self.owned: List[List[int]] = [[] for _ in range(num_slots)]
+        self.dirty = True
+
+    @classmethod
+    def from_entry(cls, entry: Dict[str, Any], num_slots: int) -> "EntryPager":
+        n_pages, page, npp = entry_geometry(entry)
+        return cls(num_slots, npp, page, n_pages)
+
+    def ensure(self, slot: int, hi: int) -> None:
+        """Back positions [0, hi) of ``slot`` (ring-capped at npp pages);
+        pages are handed out in logical order so table[slot, j] is the
+        j-th logical page."""
+        need = min(-(-hi // self.page), self.npp)
+        while len(self.owned[slot]) < need:
+            (pid,) = self.alloc.alloc(1)
+            self.table[slot, len(self.owned[slot])] = pid
+            self.owned[slot].append(pid)
+            self.dirty = True
+
+    def release(self, slot: int) -> List[int]:
+        """Reclaim all of ``slot``'s pages; returns the freed pids (the
+        caller must poison their positions via :func:`reset_pages`)."""
+        pids, self.owned[slot] = self.owned[slot], []
+        if pids:
+            self.table[slot, :] = 0
+            self.alloc.free(pids)
+            self.dirty = True
+        return pids
+
+    def device_table(self, num_periods: int) -> jnp.ndarray:
+        self.dirty = False
+        t = jnp.asarray(self.table)
+        return jnp.broadcast_to(t[None], (num_periods,) + t.shape)
+
+    def stats(self) -> Dict[str, int]:
+        return {"total": self.alloc.n_pages - 1,
+                "used": self.alloc.n_used, "free": self.alloc.n_free}
+
+
+def make_pagers(caches: Sequence[Any], num_slots: int
+                ) -> List[Optional[EntryPager]]:
+    return [EntryPager.from_entry(e, num_slots) if is_paged(e) else None
+            for e in caches]
+
+
+def sync_page_tables(caches: Sequence[Any],
+                     pagers: Sequence[Optional[EntryPager]]) -> List[Any]:
+    """Push dirty host tables into the device cache pytree (new list)."""
+    out = []
+    for e, pg in zip(caches, pagers):
+        if pg is not None and pg.dirty:
+            e = dict(e)
+            e["page_table"] = pg.device_table(e["pos"].shape[0])
+        out.append(e)
+    return out
+
+
+def reset_pages(entry: Dict[str, Any], pids: Sequence[int]) -> Dict[str, Any]:
+    """Poison freed pages' positions (host-side, between steps) so a
+    later owner can never read a stale in-window position through its
+    fresh page table before overwriting every row."""
+    if not len(pids):
+        return entry
+    out = dict(entry)
+    out["pos"] = entry["pos"].at[:, jnp.asarray(list(pids), jnp.int32)].set(
+        INVALID_POS)
+    return out
+
+
+def tree_nbytes(tree: Any) -> int:
+    """Total payload bytes of a cache pytree — works on concrete arrays
+    and on ``jax.eval_shape`` ShapeDtypeStructs (the serving bench uses
+    the latter so the HBM ratio is deterministic)."""
+    return int(sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+                   for x in jax.tree_util.tree_leaves(tree)))

@@ -1,10 +1,16 @@
 """Continuous-batching LM serving over packed low-bit weights:
-slot-scheduled Engine, samplers, and mesh-aware sharded serving
-(ServeConfig(mesh=...) — see docs/sharding.md)."""
+slot-scheduled Engine (bucket prefill on dense caches, chunked prefill
+on paged ternary caches — see docs/serving.md), samplers, and mesh-aware
+sharded serving (ServeConfig(mesh=...) — see docs/sharding.md)."""
 
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.engine import (ServeConfig, Engine, Request, Result,
-                                  make_serve_step, make_prefill_fn)
+                                  make_serve_step, make_prefill_fn,
+                                  make_chunk_step)
+from repro.serving.scheduler import (Scheduler, BucketScheduler,
+                                     ChunkedScheduler)
 
 __all__ = ["SamplerConfig", "sample", "ServeConfig", "Engine", "Request",
-           "Result", "make_serve_step", "make_prefill_fn"]
+           "Result", "make_serve_step", "make_prefill_fn",
+           "make_chunk_step", "Scheduler", "BucketScheduler",
+           "ChunkedScheduler"]

@@ -1,46 +1,50 @@
-"""Batched serving engine: slot scheduler + prefill + lockstep decode.
+"""Batched serving engine: jitted model steps + a continuous-batching
+scheduler (serving/scheduler.py) over fixed decode slots.
 
 The jitted units are what the decode dry-run cells lower:
 
 * ``make_serve_step``  — one new token for every live slot against the
   full KV cache (this is the ``serve_step`` of decode_32k / long_500k);
 * ``make_prefill_fn``  — run a prompt through the model, filling caches
-  (the prefill_32k cells lower the closely-related ``forward``).
+  (the prefill_32k cells lower the closely-related ``forward``);
+* ``make_chunk_step``  — advance every prefilling slot by one
+  prefill_chunk of its prompt (paged engines only).
 
-The Engine around them is a small continuous-batching scheduler
-(vLLM-style, static slots instead of paged blocks — TPU-friendly since
-shapes must be static):
+The scheduling strategy follows the cache storage
+(``ModelConfig.kv_cache_dtype`` via models/common.kv_cache_format):
 
-* fixed ``num_slots`` decode lanes, each with a KV/SSM-state slice;
-* requests queue up, are admitted into free slots, prefilled one at a
-  time (prompt padded to a bucket), then decode advances *all* live
-  slots in one jitted step per token;
-* finished slots (EOS or max_len) free immediately and are refilled
-  without stopping the others — the decode batch never drains.
+* dense ("bf16"/"int8") — slab caches; a free slot admits one request
+  per tick by bucket-padded prefill + batch-axis row insertion, then
+  decode advances all live slots lockstep (the original engine);
+* paged ("tnn2"/"tnn2-oracle") — page-table caches holding K/V in the
+  paper's 2-bit ternary planes (models/paged_kvcache.py); prompts
+  prefill in chunks interleaved with decode, pages allocate/reclaim per
+  slot, and cache HBM shrinks ~8x.  See docs/serving.md.
 
-Per-slot cache insertion uses a batch-axis dynamic_update_slice on the
-stacked caches, so admission is also a jitted op.
+Either way finished slots (EOS / max_new / max_len / deadline /
+cancel()) free immediately and refill without stopping the others — the
+decode batch never drains.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-from collections import deque
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import model as model_mod
-from repro.models.common import ModelConfig, ShardLayout
-from repro.models.kvcache import INVALID_POS, init_caches
+from repro.models.common import ModelConfig, ShardLayout, kv_cache_format
+from repro.models.kvcache import init_caches
 from repro.parallel import sharding
 from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.scheduler import (BucketScheduler, ChunkedScheduler,
+                                     Request, Result)
 
-__all__ = ["ServeConfig", "Request", "Result", "Engine",
-           "make_serve_step", "make_prefill_fn"]
+__all__ = ["ServeConfig", "Request", "Result", "Engine", "make_serve_step",
+           "make_prefill_fn", "make_chunk_step"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,7 +52,19 @@ class ServeConfig:
     num_slots: int = 8
     max_len: int = 512
     prefill_bucket: int = 128     # prompts padded up to a multiple of this
+    # Paged-cache (kv_cache_dtype "tnn2"/"tnn2-oracle") engines replace
+    # the bucket prefill with CHUNKED prefill: prompts advance
+    # prefill_chunk tokens per scheduler tick, interleaved with decode
+    # (serving/scheduler.ChunkedScheduler), over fixed-size token pages.
+    page_size: int = 16
+    prefill_chunk: int = 32
     eos_id: int = -1              # -1: only stop at max_new_tokens
+    # Record every sampled step's pre-sampling logits row per request
+    # uid (host copies — Engine.logit_trace).  Off by default: it keeps
+    # one (Vp,) f32 row per generated token alive on the host.  The
+    # serving tests use it to bound the ternary-cache logit error
+    # against a same-seed dense engine.
+    trace_logits: bool = False
     sampler: SamplerConfig = dataclasses.field(default_factory=SamplerConfig)
     # Pack low-bit projection weights into QTensors at engine build time
     # (the paper's offline Algorithm 2; models/packing.pack_lm_params).
@@ -99,18 +115,9 @@ class ServeConfig:
     mesh_rules: str = "serve_lowbit"
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # (S,) int32 token ids
-    max_new_tokens: int = 32
-
-
-@dataclasses.dataclass
-class Result:
-    uid: int
-    tokens: List[int]
-
+# Request / Result (with deadline / cancel() / status) live in
+# serving/scheduler.py next to the state machine that enforces them;
+# re-exported here so `from repro.serving import Request, Result` holds.
 
 # --------------------------------------------------------------------------
 # jitted units
@@ -160,27 +167,25 @@ def make_prefill_fn(cfg: ModelConfig, layout: ShardLayout):
     return prefill_fn
 
 
-# --------------------------------------------------------------------------
-# slot scheduler
-# --------------------------------------------------------------------------
+def make_chunk_step(cfg: ModelConfig, layout: ShardLayout):
+    """chunk_step(params, caches, tokens (B,C), step2 (B,2)) ->
+    (logits (B,C,Vp), caches) — the chunked-prefill unit of the paged
+    engine.  ``step2[b] = (start, n)`` advances slot b by its next n
+    prompt tokens (n == 0: dead row, writes only to the scratch page);
+    every prefilling slot shares this ONE call per tick."""
 
-def _tree_set_row(tree, row_tree, b: int):
-    """Write row_tree (batch size 1 on axis 1-after-period) into slot b.
+    def chunk_step(params, caches, tokens, step2):
+        return model_mod.decode_step(params, {"tokens": tokens}, caches,
+                                     step2, cfg, layout)
 
-    Cache leaves are (P, B, ...); row leaves are (P, 1, ...).
-    """
-    return jax.tree.map(
-        lambda full, row: jax.lax.dynamic_update_slice(
-            full, row.astype(full.dtype),
-            (0, b) + (0,) * (full.ndim - 2)),
-        tree, row_tree)
+    return chunk_step
 
 
 class Engine:
     """Continuous-batching inference engine over static decode slots."""
 
     def __init__(self, params, cfg: ModelConfig, layout: ShardLayout,
-                 scfg: ServeConfig, seed: int = 0):
+                 scfg: ServeConfig, seed: int = 0, clock=None):
         if scfg.autotune not in ("off", "offline", "on_first_use"):
             raise ValueError(
                 f"ServeConfig.autotune must be 'off', 'offline' or "
@@ -191,8 +196,14 @@ class Engine:
                 f"{sorted(sharding.RULESETS)}, got {scfg.mesh_rules!r}")
         self.cfg, self.layout, self.scfg = cfg, layout, scfg
         self._seed = seed
+        self._clock = clock
         self._raw_params = params     # retained for the elastic rebuild
         self._closed = False
+        self._paged = kv_cache_format(cfg.kv_cache_dtype).paged
+        if self._paged and cfg.input_kind == "embeddings":
+            raise NotImplementedError(
+                "paged (tnn2) serving covers token models; the embeddings "
+                "frontend has no chunked-prefill token source")
         with self._mesh_scope():
             if scfg.pack_params:
                 from repro.models.packing import pack_lm_params
@@ -201,21 +212,58 @@ class Engine:
             if scfg.pack_params:
                 self._autotune()
             b, L = scfg.num_slots, scfg.max_len
-            self.caches = init_caches(cfg, layout, b, L)
-            self._prefill_caches = {
-                s: init_caches(cfg, layout, 1, L)
-                for s in self._buckets()}
+            # Storage resolves from cfg.kv_cache_dtype (bf16/int8 dense
+            # slabs, tnn2 ternary pages) — models/common.kv_cache_format.
+            self.caches = init_caches(cfg, layout, b, L,
+                                      page_size=scfg.page_size,
+                                      prefill_chunk=scfg.prefill_chunk)
+            if not self._paged:
+                self._prefill_caches = {
+                    s: init_caches(cfg, layout, 1, L)
+                    for s in self._buckets()}
         self.serve_step = jax.jit(make_serve_step(cfg, layout, scfg))
-        self.prefill = jax.jit(make_prefill_fn(cfg, layout))
+        if self._paged:
+            self.chunk_step = jax.jit(make_chunk_step(cfg, layout))
+        else:
+            self.prefill = jax.jit(make_prefill_fn(cfg, layout))
         self.key = jax.random.PRNGKey(seed)
+        sched_cls = ChunkedScheduler if self._paged else BucketScheduler
+        self._sched = sched_cls(self, clock=clock)
 
-        self.queue: deque = deque()
-        self.slot_uid = [-1] * b          # -1 = free
-        self.slot_pos = np.zeros(b, np.int32)     # next position to write
-        self.slot_remaining = np.zeros(b, np.int32)
-        self.slot_tokens: List[List[int]] = [[] for _ in range(b)]
-        self.last_token = np.zeros(b, np.int32)
-        self.results: Dict[int, Result] = {}
+    # Slot/queue state lives on the scheduler; these delegating views
+    # keep the engine's long-standing introspection surface stable.
+    @property
+    def queue(self):
+        return self._sched.queue
+
+    @property
+    def slot_uid(self):
+        return self._sched.slot_uid
+
+    @property
+    def slot_pos(self):
+        return self._sched.slot_pos
+
+    @property
+    def slot_remaining(self):
+        return self._sched.slot_remaining
+
+    @property
+    def slot_tokens(self):
+        return self._sched.slot_tokens
+
+    @property
+    def last_token(self):
+        return self._sched.last_token
+
+    @property
+    def results(self):
+        return self._sched.results
+
+    @property
+    def logit_trace(self):
+        """uid -> [logits row per sampled step] (ServeConfig.trace_logits)."""
+        return self._sched.logit_trace
 
     @contextlib.contextmanager
     def _mesh_scope(self):
@@ -265,7 +313,13 @@ class Engine:
         from repro.tune import tuner
 
         problems = tuner.collect_problems(self.params)
-        ms = sorted({self.scfg.num_slots, *self._buckets()})
+        if getattr(self, "_paged", False):
+            # chunked prefill runs every projection at m = B * chunk;
+            # there are no bucket shots to sweep
+            ms = sorted({self.scfg.num_slots,
+                         self.scfg.num_slots * self.scfg.prefill_chunk})
+        else:
+            ms = sorted({self.scfg.num_slots, *self._buckets()})
         for mode, k, n, geometry in problems:
             if geometry is None:
                 for m in ms:
@@ -317,68 +371,33 @@ class Engine:
             tune_cache.get_cache().save()
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        self._sched.submit(req)
 
-    # ---------------------------------------------------------- admission
+    # ------------------------------------------------- scheduler delegation
 
     def _admit(self):
-        for b in range(self.scfg.num_slots):
-            if self.slot_uid[b] != -1 or not self.queue:
-                continue
-            req = self.queue.popleft()
-            prompt = np.asarray(req.prompt, np.int32)
-            bucket = next(s for s in self._buckets() if s >= len(prompt))
-            padded = np.zeros(bucket, np.int32)
-            padded[-len(prompt):] = prompt      # right-aligned, left pad 0s
-            batch = {"tokens": jnp.asarray(padded[None, :])}
-            logits, row_caches = self.prefill(
-                self.params, self._prefill_caches[bucket], batch)
-            # Left-pad slots must never be attended: poison their cache
-            # positions so the `pos <= step` mask rejects them.  (SSM
-            # archs have no position mask — serve those with exact-length
-            # prompts / bucket == prompt length.)
-            pad = bucket - len(prompt)
-            if pad:
-                row_caches = [
-                    {**c, "pos": c["pos"].at[:, :, :pad].set(INVALID_POS)}
-                    if isinstance(c, dict) and "pos" in c else c
-                    for c in row_caches]
-            self.caches = [
-                _tree_set_row(full, row, b)
-                for full, row in zip(self.caches, row_caches)]
-            self.slot_uid[b] = req.uid
-            self.slot_pos[b] = bucket
-            self.slot_remaining[b] = min(
-                req.max_new_tokens, self.scfg.max_len - bucket)
-            first = int(np.argmax(np.asarray(logits)[0, -1]))
-            self.slot_tokens[b] = [first]
-            self.last_token[b] = first
-
-    # ------------------------------------------------------------- decode
+        """Expire dead requests, then admit/advance prefill (bucket: one
+        full prefill per free slot; chunked: one prefill_chunk for every
+        prefilling slot in a single batched call)."""
+        self._sched.expire()
+        self._sched.admit_once()
 
     def _decode_once(self):
-        live = [b for b in range(self.scfg.num_slots) if self.slot_uid[b] != -1]
-        if not live:
-            return
-        step = jnp.asarray(self.slot_pos, jnp.int32)   # per-slot positions
-        toks = jnp.asarray(self.last_token[:, None])
-        self.key, sub = jax.random.split(self.key)
-        nxt, _, self.caches = self.serve_step(
-            self.params, self.caches, toks, step, sub)
-        nxt = np.asarray(nxt)
-        for b in live:
-            self.slot_tokens[b].append(int(nxt[b]))
-            self.last_token[b] = nxt[b]
-            self.slot_pos[b] += 1
-            self.slot_remaining[b] -= 1
-            done = (self.slot_remaining[b] <= 0
-                    or int(nxt[b]) == self.scfg.eos_id
-                    or self.slot_pos[b] >= self.scfg.max_len)
-            if done:
-                self.results[self.slot_uid[b]] = Result(
-                    self.slot_uid[b], self.slot_tokens[b])
-                self.slot_uid[b] = -1
-                self.slot_tokens[b] = []
+        self._sched.decode_once()
+
+    def step(self) -> bool:
+        """One continuous-batching tick (expire -> admit/prefill ->
+        decode); True while any request is queued or in flight."""
+        with self._mesh_scope():
+            return self._sched.step()
+
+    def page_stats(self):
+        """Per-pattern-entry page accounting ({total, used, free}) for
+        paged engines; [] for dense ones.  The serving tests assert
+        `used == 0` after a full drain."""
+        if not self._paged:
+            return []
+        return self._sched.page_stats()
 
     # --------------------------------------------------------------- run
 
@@ -387,8 +406,7 @@ class Engine:
         with self._mesh_scope():
             while (self.queue or any(u != -1 for u in self.slot_uid)) \
                     and steps < max_steps:
-                self._admit()
-                self._decode_once()
+                self._sched.step()
                 steps += 1
         return self.results
 
@@ -471,4 +489,4 @@ class Engine:
                              mesh.axis_names, devices=survivors)
         return Engine(self._raw_params, self.cfg, self.layout,
                       dataclasses.replace(self.scfg, mesh=new_mesh),
-                      seed=self._seed)
+                      seed=self._seed, clock=self._clock)

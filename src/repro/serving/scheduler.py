@@ -1,0 +1,380 @@
+"""Continuous-batching scheduler: the host-side state machine the Engine
+delegates to.
+
+Two strategies share one slot model (queue -> slot -> result):
+
+* :class:`BucketScheduler` — the legacy dense-cache path: a free slot
+  admits ONE request per tick by running its whole prompt through the
+  bucket-padded ``prefill`` jit and row-inserting the caches
+  (``_tree_set_row``).  Kept bit-for-bit so existing dense engines and
+  their step-count tests are unchanged.
+* :class:`ChunkedScheduler` — the paged-cache path: admission is free
+  (no device work), prompts advance ``prefill_chunk`` tokens per tick
+  through ONE batched ``chunk_step`` call shared by every prefilling
+  slot (per-row ``(start, n)`` step vectors — no per-prompt padding to a
+  bucket), interleaved with one ``serve_step`` call for the slots
+  already decoding.  Page allocation/reclamation is host-side through
+  the per-entry :class:`~repro.models.paged_kvcache.EntryPager`s; page
+  *content* writes stay in-trace.
+
+Slot lifecycle (chunked)::
+
+    queued --admit--> PREFILL --chunks done--> DECODE --eos/max/evict--> free
+       |                 |                        |
+       +--- deadline/cancel() -> Result(status="expired"/"cancelled"),
+            pages reclaimed, positions poisoned (reset_pages)
+
+Every tick runs at most two jitted calls — one (B, prefill_chunk) chunk
+and one (B, 1) decode — so the engine traces exactly two shapes no
+matter how requests overlap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import paged_kvcache as paged
+from repro.models.kvcache import INVALID_POS
+
+__all__ = ["Request", "Result", "Scheduler", "BucketScheduler",
+           "ChunkedScheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32 token ids
+    max_new_tokens: int = 32
+    # Absolute deadline on the engine's clock (time.monotonic unless the
+    # engine was built with an injected clock); None = wait forever.
+    deadline: Optional[float] = None
+    cancelled: bool = False
+
+    def cancel(self) -> None:
+        """Withdraw the request: evicted (queued or running) on the next
+        scheduler tick with ``Result.status == "cancelled"``."""
+        self.cancelled = True
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: List[int]
+    status: str = "ok"            # "ok" | "expired" | "cancelled"
+
+
+def _tree_set_row(tree, row_tree, b: int):
+    """Write row_tree (batch size 1 on axis 1-after-period) into slot b.
+
+    Cache leaves are (P, B, ...); row leaves are (P, 1, ...).
+    """
+    return jax.tree.map(
+        lambda full, row: jax.lax.dynamic_update_slice(
+            full, row.astype(full.dtype),
+            (0, b) + (0,) * (full.ndim - 2)),
+        tree, row_tree)
+
+
+class Scheduler:
+    """Shared slot state + request lifecycle; subclasses supply the
+    prefill/decode device work.  The engine is duck-typed: the scheduler
+    reads/writes ``eng.params``, ``eng.caches``, ``eng.key`` and calls
+    its jitted fns — permission to mutate is the delegation contract."""
+
+    def __init__(self, engine, clock=None):
+        self.eng = engine
+        self.clock = clock or time.monotonic
+        b = engine.scfg.num_slots
+        self.queue: deque = deque()
+        self.slot_uid: List[int] = [-1] * b            # -1 = free
+        self.slot_pos = np.zeros(b, np.int32)          # next write position
+        self.slot_remaining = np.zeros(b, np.int32)
+        self.slot_tokens: List[List[int]] = [[] for _ in range(b)]
+        self.last_token = np.zeros(b, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * b
+        self.results: Dict[int, Result] = {}
+        # uid -> [pre-sampling logits row per step] when the engine was
+        # built with ServeConfig.trace_logits (None otherwise).
+        self.logit_trace: Optional[Dict[int, List[np.ndarray]]] = (
+            {} if engine.scfg.trace_logits else None)
+
+    # ------------------------------------------------------------ lifecycle
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def step(self) -> bool:
+        """One tick: expire/cancel, admit+prefill, decode.  Returns True
+        while any request is queued or in flight."""
+        self.expire()
+        self.admit_once()
+        self.decode_once()
+        return bool(self.queue or any(u != -1 for u in self.slot_uid))
+
+    def expire(self) -> None:
+        """Evict cancelled / past-deadline requests — queued ones before
+        they ever touch a slot, running ones with their partial tokens —
+        and reclaim whatever they hold."""
+        now: Optional[float] = None
+        kept: deque = deque()
+        for req in self.queue:
+            status = self._dead_status(req, now)
+            if status is None:
+                kept.append(req)
+            else:
+                self.results[req.uid] = Result(req.uid, [], status=status)
+        self.queue = kept
+        for b in range(len(self.slot_uid)):
+            if self.slot_uid[b] == -1:
+                continue
+            status = self._dead_status(self.slot_req[b], now)
+            if status is not None:
+                self.finish(b, status=status)
+
+    def _dead_status(self, req: Request, now) -> Optional[str]:
+        if req.cancelled:
+            return "cancelled"
+        if req.deadline is not None:
+            if now is None:
+                now = self.clock()
+            if now > req.deadline:
+                return "expired"
+        return None
+
+    def finish(self, b: int, status: str = "ok") -> None:
+        self.results[self.slot_uid[b]] = Result(
+            self.slot_uid[b], self.slot_tokens[b], status=status)
+        self.slot_uid[b] = -1
+        self.slot_tokens[b] = []
+        self.slot_req[b] = None
+        self.release(b)
+
+    def release(self, b: int) -> None:          # pages, in the paged case
+        pass
+
+    def trace(self, uid: int, row) -> None:
+        if self.logit_trace is not None:
+            self.logit_trace.setdefault(uid, []).append(
+                np.asarray(row, np.float32).copy())
+
+    def admit_once(self) -> None:
+        raise NotImplementedError
+
+    def decode_once(self) -> None:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Legacy dense path: bucket prefill, one prompt per tick per free slot
+# ---------------------------------------------------------------------------
+
+class BucketScheduler(Scheduler):
+    """Admit-by-bucket-prefill over dense slab caches (the pre-paged
+    engine behaviour, preserved exactly — including its step counts)."""
+
+    def admit_once(self) -> None:
+        eng = self.eng
+        for b in range(eng.scfg.num_slots):
+            if self.slot_uid[b] != -1 or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = np.asarray(req.prompt, np.int32)
+            bucket = next(s for s in eng._buckets() if s >= len(prompt))
+            padded = np.zeros(bucket, np.int32)
+            padded[-len(prompt):] = prompt      # right-aligned, left pad 0s
+            batch = {"tokens": jnp.asarray(padded[None, :])}
+            logits, row_caches = eng.prefill(
+                eng.params, eng._prefill_caches[bucket], batch)
+            # Left-pad slots must never be attended: poison their cache
+            # positions so the `pos <= step` mask rejects them.  (SSM
+            # archs have no position mask — serve those with exact-length
+            # prompts / bucket == prompt length.)
+            pad = bucket - len(prompt)
+            if pad:
+                row_caches = [
+                    {**c, "pos": c["pos"].at[:, :, :pad].set(INVALID_POS)}
+                    if isinstance(c, dict) and "pos" in c else c
+                    for c in row_caches]
+            eng.caches = [
+                _tree_set_row(full, row, b)
+                for full, row in zip(eng.caches, row_caches)]
+            self.slot_uid[b] = req.uid
+            self.slot_req[b] = req
+            self.slot_pos[b] = bucket
+            self.slot_remaining[b] = min(
+                req.max_new_tokens, eng.scfg.max_len - bucket)
+            first = int(np.argmax(np.asarray(logits)[0, -1]))
+            self.trace(req.uid, np.asarray(logits)[0, -1])
+            self.slot_tokens[b] = [first]
+            self.last_token[b] = first
+
+    def decode_once(self) -> None:
+        eng = self.eng
+        live = [b for b in range(eng.scfg.num_slots)
+                if self.slot_uid[b] != -1]
+        if not live:
+            return
+        step = jnp.asarray(self.slot_pos, jnp.int32)   # per-slot positions
+        toks = jnp.asarray(self.last_token[:, None])
+        eng.key, sub = jax.random.split(eng.key)
+        nxt, last_logits, eng.caches = eng.serve_step(
+            eng.params, eng.caches, toks, step, sub)
+        nxt = np.asarray(nxt)
+        if self.logit_trace is not None:
+            lg = np.asarray(last_logits)
+            for b in live:
+                self.trace(self.slot_uid[b], lg[b])
+        for b in live:
+            self.slot_tokens[b].append(int(nxt[b]))
+            self.last_token[b] = nxt[b]
+            self.slot_pos[b] += 1
+            self.slot_remaining[b] -= 1
+            if (self.slot_remaining[b] <= 0
+                    or int(nxt[b]) == eng.scfg.eos_id
+                    or self.slot_pos[b] >= eng.scfg.max_len):
+                self.finish(b)
+
+
+# ---------------------------------------------------------------------------
+# Paged path: chunked prefill interleaved with decode
+# ---------------------------------------------------------------------------
+
+class ChunkedScheduler(Scheduler):
+    """Per-tick continuous batching over paged (tnn2 / oracle) caches."""
+
+    def __init__(self, engine, clock=None):
+        super().__init__(engine, clock)
+        b = engine.scfg.num_slots
+        self.pagers = paged.make_pagers(engine.caches, b)
+        self.slot_prompt: List[Optional[np.ndarray]] = [None] * b
+        self.slot_done = np.zeros(b, np.int32)   # prompt tokens processed
+        self.slot_phase: List[str] = ["free"] * b
+
+    # ------------------------------------------------------------- pages
+
+    def release(self, b: int) -> None:
+        self.slot_phase[b] = "free"
+        self.slot_prompt[b] = None
+        for i, pg in enumerate(self.pagers):
+            if pg is None:
+                continue
+            pids = pg.release(b)
+            if pids:
+                self.eng.caches[i] = paged.reset_pages(self.eng.caches[i],
+                                                       pids)
+
+    def _ensure(self, b: int, hi: int) -> None:
+        for pg in self.pagers:
+            if pg is not None:
+                pg.ensure(b, hi)
+
+    def _sync(self) -> None:
+        self.eng.caches = paged.sync_page_tables(self.eng.caches,
+                                                 self.pagers)
+
+    def page_stats(self) -> List[Optional[Dict[str, int]]]:
+        return [pg.stats() if pg is not None else None
+                for pg in self.pagers]
+
+    # --------------------------------------------------------- admission
+
+    def admit_once(self) -> None:
+        scfg = self.eng.scfg
+        for b in range(scfg.num_slots):
+            if self.slot_uid[b] != -1 or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            if len(prompt) >= scfg.max_len:
+                raise ValueError(
+                    f"prompt of {len(prompt)} tokens does not fit "
+                    f"max_len={scfg.max_len} (need room to decode)")
+            self.slot_uid[b] = req.uid
+            self.slot_req[b] = req
+            self.slot_prompt[b] = prompt
+            self.slot_done[b] = 0
+            self.slot_pos[b] = 0
+            self.slot_tokens[b] = []
+            self.slot_phase[b] = "prefill"
+        self._prefill_round()
+
+    def _prefill_round(self) -> None:
+        scfg = self.eng.scfg
+        chunk = scfg.prefill_chunk
+        rows = [b for b in range(scfg.num_slots)
+                if self.slot_phase[b] == "prefill"]
+        if not rows:
+            return
+        toks = np.zeros((scfg.num_slots, chunk), np.int32)
+        step2 = np.zeros((scfg.num_slots, 2), np.int32)
+        for b in rows:
+            done = int(self.slot_done[b])
+            n = min(chunk, len(self.slot_prompt[b]) - done)
+            toks[b, :n] = self.slot_prompt[b][done:done + n]
+            step2[b] = (done, n)
+            self._ensure(b, done + n)
+        self._sync()
+        logits, self.eng.caches = self.eng.chunk_step(
+            self.eng.params, self.eng.caches, jnp.asarray(toks),
+            jnp.asarray(step2))
+        logits_np = None
+        for b in rows:
+            n = int(step2[b, 1])
+            self.slot_done[b] += n
+            plen = len(self.slot_prompt[b])
+            if self.slot_done[b] < plen:
+                continue
+            # prompt fully consumed: greedy first token from the last
+            # REAL chunk position (matches the bucket path's argmax)
+            if logits_np is None:
+                logits_np = np.asarray(logits)
+            first = int(np.argmax(logits_np[b, n - 1]))
+            self.trace(self.slot_uid[b], logits_np[b, n - 1])
+            self.slot_phase[b] = "decode"
+            self.slot_pos[b] = plen
+            self.slot_remaining[b] = min(self.slot_req[b].max_new_tokens,
+                                         scfg.max_len - plen)
+            self.slot_tokens[b] = [first]
+            self.last_token[b] = first
+            if self.slot_remaining[b] <= 0:
+                self.finish(b)
+
+    # ------------------------------------------------------------ decode
+
+    def decode_once(self) -> None:
+        scfg = self.eng.scfg
+        rows = [b for b in range(scfg.num_slots)
+                if self.slot_phase[b] == "decode"]
+        if not rows:
+            return
+        step = np.full(scfg.num_slots, -1, np.int32)
+        for b in rows:
+            step[b] = self.slot_pos[b]
+            self._ensure(b, int(self.slot_pos[b]) + 1)
+        self._sync()
+        toks = jnp.asarray(np.where(step >= 0, self.last_token, 0)
+                           .astype(np.int32)[:, None])
+        self.eng.key, sub = jax.random.split(self.eng.key)
+        nxt, last_logits, self.eng.caches = self.eng.serve_step(
+            self.eng.params, self.eng.caches, toks, jnp.asarray(step), sub)
+        nxt = np.asarray(nxt)
+        if self.logit_trace is not None:
+            lg = np.asarray(last_logits)
+            for b in rows:
+                self.trace(self.slot_uid[b], lg[b])
+        for b in rows:
+            self.slot_tokens[b].append(int(nxt[b]))
+            self.last_token[b] = nxt[b]
+            self.slot_pos[b] += 1
+            self.slot_remaining[b] -= 1
+            if (self.slot_remaining[b] <= 0
+                    or int(nxt[b]) == scfg.eos_id
+                    or self.slot_pos[b] >= scfg.max_len):
+                self.finish(b)
