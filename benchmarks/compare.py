@@ -60,7 +60,12 @@ BASELINE_CAPS = {"fused": 1.15, "conv": 1.15, "tuned": 1.0,
                  # 7.30x at the reference geometry, so the cap IS the
                  # value and the gate trips only if the packed page
                  # layout widens or a payload leaf goes dense
-                 "serving": 7.3}
+                 "serving": 7.3,
+                 # deterministic 0/1 indicators (benchmarks/bench_obs.py):
+                 # tune-cache second-run hit and steady-state decode
+                 # retrace-free — pass IS 1.0, so the cap is the value
+                 # and any violation (0.0) trips the gate
+                 "obs": 1.0}
 
 
 def extract_metrics(results: Dict) -> Dict[str, float]:
@@ -82,12 +87,16 @@ def extract_metrics(results: Dict) -> Dict[str, float]:
     * ``serving``          — tnn2-paged vs dense-bf16 cache HBM bytes
       ratio — deterministic, see benchmarks/bench_serving.py (its
       tokens/s keys carry no "speedup" field and stay ungated);
+    * ``obs``              — 0/1 telemetry invariants (tune-cache
+      second-run hit, steady-state decode retrace-free) — see
+      benchmarks/bench_obs.py (its ``counters`` rollup carries no
+      "speedup" field and stays ungated);
     * ``conv``/``conv_dense`` — fused-im2col vs materializing
       conv2d_packed per (layer, mode), default and dense backends.
     """
     out: Dict[str, float] = {}
     for family in ("fused", "dense_fused", "dense_crossover", "sharded",
-                   "serving"):
+                   "serving", "obs"):
         for key, d in (results.get(family) or {}).items():
             if isinstance(d, dict) and "speedup" in d:
                 out[f"{family}/{key}"] = float(d["speedup"])
@@ -143,7 +152,7 @@ def _set_metric(doc: Dict, name: str, value: float) -> None:
     """Write one flattened metric name back into a results document."""
     family, rest = name.split("/", 1)
     if family in ("fused", "dense_fused", "dense_crossover", "sharded",
-                  "serving"):
+                  "serving", "obs"):
         doc[family][rest]["speedup"] = value
     elif family == "tuned":
         doc["tuned_vs_default"][rest]["speedup"] = value

@@ -86,3 +86,14 @@ print("k_max for 16-bit accumulation of ternary products:",
 print("max conv C_in for a 3x3 kernel:",
       quantize.max_conv_in_channels(quantize.k_max(1, 16, signed_unit=True),
                                     3, 3))
+
+# --- 6. telemetry: everything above was counted ---------------------------
+# The dispatch/trace/tune counters accumulated in the process registry
+# while this script ran; REPRO_OBS_SNAPSHOT=path dumps them (the CI
+# obs-smoke step validates the file with `python -m repro.obs --check`).
+from repro import obs
+
+snap_path = obs.write_snapshot_if_configured()
+qmm_calls = obs.get_registry().get("repro_qmm_dispatch_total").total()
+print(f"obs: {qmm_calls:.0f} qmm dispatches counted"
+      + (f"; snapshot -> {snap_path}" if snap_path else ""))

@@ -14,6 +14,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_smoke
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as model_mod
@@ -54,9 +55,7 @@ def main():
 
         t0 = time.time()
         steps = 0
-        while engine.queue or any(u != -1 for u in engine.slot_uid):
-            engine._admit()
-            engine._decode_once()
+        while engine.step():
             steps += 1
             if steps % 8 == 0:
                 live = sum(u != -1 for u in engine.slot_uid)
@@ -70,6 +69,21 @@ def main():
     print(f"\n[serve_batch] quant={args.quant}{packed}: "
           f"{len(engine.results)} requests, "
           f"{tokens} tokens, {dt:.1f}s ({tokens/dt:.1f} tok/s)")
+
+    # Telemetry rides along for free (docs/observability.md): the
+    # engine counted every admission/eviction/token above; close()
+    # flushes the REPRO_OBS_EVENTS sink after the engine_close record.
+    if obs.obs_enabled():
+        snap = engine.metrics()["metrics"]
+        ttft = snap["repro_engine_ttft_seconds"]["series"]
+        n = ttft[0]["value"]["count"] if ttft else 0
+        s = ttft[0]["value"]["sum"] if ttft else 0.0
+        print(f"[serve_batch] obs: "
+              f"{engine.obs.admissions.total():.0f} admissions, "
+              f"{engine.obs.decode_tokens.total():.0f} decode tokens, "
+              f"mean TTFT {s / max(n, 1):.3f}s over {n} streams")
+        obs.write_snapshot_if_configured(engine.obs.registry)
+    engine.close()
 
 
 if __name__ == "__main__":

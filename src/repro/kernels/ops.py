@@ -33,7 +33,6 @@ Plus the float-in/float-out ``quantized_matmul`` with straight-through
 
 from __future__ import annotations
 
-import collections
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -49,6 +48,7 @@ from repro.kernels._matmul_common import TileConfig
 from repro.kernels.qtensor import PAYLOAD_KEYS, QTensor
 from repro.tune import cache as tune_cache
 from repro.tune.space import PALLAS_SPACE, XLA_SPACE
+from repro import obs
 
 from repro.core import encoding, quantize
 from repro.kernels import ref as kref
@@ -490,20 +490,33 @@ def _as_col_vec(v, n: int) -> jnp.ndarray:
     return x.reshape(1, n)
 
 
-# (mode, backend) -> number of traces of the jitted qmm body; a consumer
-# reusing one QTensor across calls must not retrace (tests guard this).
-_QMM_TRACES: collections.Counter = collections.Counter()
+# Retrace guards live in the obs registry now, labelled (mode, backend);
+# a consumer reusing one QTensor across calls must not retrace (tests
+# guard this).  ``always=True``: these are correctness counters consumed
+# by the tier-1 suite, so they count even under REPRO_OBS=off — they
+# fire at trace time only, never on the per-call hot path.
+_QMM_TRACE_CTR = obs.get_registry().counter(
+    "repro_qmm_traces_total",
+    "qmm retraces by (mode, backend); counts at jax trace time",
+    labels=("mode", "backend"), always=True)
+
+_QMM_DISPATCH_CTR = obs.get_registry().counter(
+    "repro_qmm_dispatch_total",
+    "qmm host-side dispatches by (mode, backend, layout)",
+    labels=("mode", "backend", "layout"))
 
 
 def qmm_trace_count(mode: QuantMode, backend: str = DEFAULT_BACKEND) -> int:
-    return _QMM_TRACES[(mode, backend)]
+    """Deprecated read-through alias: use
+    ``obs.get_registry().get("repro_qmm_traces_total")`` directly."""
+    return int(_QMM_TRACE_CTR.value(mode=mode.value, backend=backend))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("backend", "interpret", "tiles"))
 def _qmm_jit(x, qt: QTensor, backend: str, interpret: bool,
              tiles: Optional[TileConfig] = None, act_stats=None):
-    _QMM_TRACES[(qt.mode, backend)] += 1   # runs at trace time only
+    _QMM_TRACE_CTR.inc(mode=qt.mode.value, backend=backend)  # trace time only
     m, k = x.shape
     n = qt.out_features
     mode = qt.mode
@@ -607,6 +620,8 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
             f"depth mismatch: x has k={x.shape[-1]} but QTensor was packed "
             f"with k_valid={qt.k_valid} (logical shape {qt.shape})")
     backend = backend or DEFAULT_BACKEND
+    _QMM_DISPATCH_CTR.inc(mode=qt.mode.value, backend=backend,
+                          layout=registry.LAYOUT_GEMM)
     tiles = None
     if qt.is_lowbit:
         from repro.parallel import qmm_mesh, sharding
@@ -643,11 +658,21 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
 # "im2col_fused" in the registry): the patch matrix is never materialized
 # ---------------------------------------------------------------------------
 
-_QCONV_TRACES: collections.Counter = collections.Counter()
+_QCONV_TRACE_CTR = obs.get_registry().counter(
+    "repro_qconv_traces_total",
+    "qconv retraces by (mode, backend); counts at jax trace time",
+    labels=("mode", "backend"), always=True)
+
+_QCONV_DISPATCH_CTR = obs.get_registry().counter(
+    "repro_qconv_dispatch_total",
+    "qconv host-side dispatches by (mode, backend, layout)",
+    labels=("mode", "backend", "layout"))
 
 
 def qconv_trace_count(mode: QuantMode, backend: str = DEFAULT_BACKEND) -> int:
-    return _QCONV_TRACES[(mode, backend)]
+    """Deprecated read-through alias: use
+    ``obs.get_registry().get("repro_qconv_traces_total")`` directly."""
+    return int(_QCONV_TRACE_CTR.value(mode=mode.value, backend=backend))
 
 
 def has_conv_kernel(mode: QuantMode, backend: str) -> bool:
@@ -663,7 +688,7 @@ def has_conv_kernel(mode: QuantMode, backend: str) -> bool:
 def _qconv_jit(x, qt: QTensor, act_stats, backend: str, stride: int,
                padding: str, interpret: bool,
                tiles: Optional[TileConfig] = None):
-    _QCONV_TRACES[(qt.mode, backend)] += 1   # runs at trace time only
+    _QCONV_TRACE_CTR.inc(mode=qt.mode.value, backend=backend)  # trace time
     spec = registry.lookup(qt.mode, backend, fused=True,
                            layout=registry.LAYOUT_IM2COL)
     cout = qt.geometry[3]
@@ -742,6 +767,8 @@ def qconv(x: jnp.ndarray, qt: QTensor, *, stride: int = 1,
         raise ValueError(f"channel mismatch: x has Cin={x.shape[-1]} but "
                          f"QTensor geometry is {qt.geometry}")
     backend = backend or DEFAULT_BACKEND
+    _QCONV_DISPATCH_CTR.inc(mode=qt.mode.value, backend=backend,
+                            layout=registry.LAYOUT_IM2COL)
     from repro.kernels import conv_fused
 
     if act_stats is None:

@@ -269,6 +269,7 @@ class PageAllocator:
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, 0, -1))   # pop() -> low pids
         self._used: set = set()
+        self.high_water = 0        # max |used| ever (obs page gauges)
 
     @property
     def n_free(self) -> int:
@@ -285,6 +286,8 @@ class PageAllocator:
                 f"free of {self.n_pages - 1}")
         out = [self._free.pop() for _ in range(n)]
         self._used.update(out)
+        if len(self._used) > self.high_water:
+            self.high_water = len(self._used)
         return out
 
     def free(self, pids: Sequence[int]) -> None:
@@ -343,7 +346,8 @@ class EntryPager:
 
     def stats(self) -> Dict[str, int]:
         return {"total": self.alloc.n_pages - 1,
-                "used": self.alloc.n_used, "free": self.alloc.n_free}
+                "used": self.alloc.n_used, "free": self.alloc.n_free,
+                "high_water": self.alloc.high_water}
 
 
 def make_pagers(caches: Sequence[Any], num_slots: int

@@ -1,0 +1,42 @@
+"""Profiler trace-annotation hook.
+
+``annotate("prefill_chunk")`` wraps a host-side region in a
+``jax.profiler.TraceAnnotation`` so device traces captured with
+``jax.profiler.trace(...)`` line up with engine events.  When obs is
+disabled (or jax's profiler is unavailable) it degrades to a
+null context — the serving loop never pays for it.
+
+jax is imported lazily so ``repro.obs`` stays importable (and
+stdlib-only) in tooling contexts that never touch the device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+from .registry import obs_enabled
+
+__all__ = ["annotate"]
+
+_TRACE_CTX = None            # resolved on first enabled use
+
+
+def _resolve():
+    global _TRACE_CTX
+    if _TRACE_CTX is None:
+        try:
+            from jax.profiler import TraceAnnotation
+            _TRACE_CTX = TraceAnnotation
+        except Exception:                       # pragma: no cover
+            _TRACE_CTX = contextlib.nullcontext
+    return _TRACE_CTX
+
+
+def annotate(name: str, **kwargs):
+    """Context manager naming a host region in jax profiler traces."""
+    if not obs_enabled():
+        return contextlib.nullcontext()
+    ctx = _resolve()
+    if ctx is contextlib.nullcontext:           # pragma: no cover
+        return contextlib.nullcontext()
+    return ctx(name, **kwargs)

@@ -51,6 +51,21 @@ from repro.kernels._matmul_common import TileConfig, psum_accum_dtype
 from repro.kernels.modes import QuantMode
 from repro.kernels.qtensor import QTensor
 from repro.parallel import sharding
+from repro import obs
+
+# Host-side psum telemetry (process registry; no-ops when REPRO_OBS=off):
+# one reduction per k-sharded qmm_sharded dispatch, wire bytes = the
+# per-device integer partial buffer the psum moves (m x n_local x
+# itemsize) — the quantity the sharded bench family's wire-bytes ratio
+# is computed from.
+_PSUM_CTR = obs.get_registry().counter(
+    "repro_mesh_psum_total",
+    "integer psum reductions issued by qmm_sharded",
+    labels=("mode", "acc_dtype"))
+_PSUM_BYTES_CTR = obs.get_registry().counter(
+    "repro_mesh_psum_wire_bytes_total",
+    "bytes moved per device by qmm_sharded psum reductions",
+    labels=("mode",))
 
 __all__ = ["ShardPlan", "shard_plan", "shard_plan_conv", "local_dims",
            "qmm_sharded", "qconv_sharded", "qmm_mesh_trace_count"]
@@ -272,6 +287,11 @@ def qmm_sharded(x, qt: QTensor, plan: ShardPlan, mesh: Mesh, *,
                           k=int(k_local), interpret=interpret)
     tiles = tune_cache.plan_for(qt.mode, backend, fused=fused, m=m,
                                 n=n_local, k=int(k_local)).tiles
+    if plan.k_axis is not None:
+        _PSUM_CTR.inc(mode=qt.mode.value, acc_dtype=plan.acc_dtype)
+        _PSUM_BYTES_CTR.inc(
+            m * n_local * jnp.dtype(plan.acc_dtype).itemsize,
+            mode=qt.mode.value)
     return _qmm_mesh_jit(x, qt, act_stats, backend=backend,
                          interpret=interpret, mesh=mesh, plan=plan,
                          tiles=tiles)

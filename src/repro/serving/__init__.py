@@ -9,8 +9,9 @@ from repro.serving.engine import (ServeConfig, Engine, Request, Result,
                                   make_chunk_step)
 from repro.serving.scheduler import (Scheduler, BucketScheduler,
                                      ChunkedScheduler)
+from repro.serving.metrics import EngineMetrics
 
 __all__ = ["SamplerConfig", "sample", "ServeConfig", "Engine", "Request",
            "Result", "make_serve_step", "make_prefill_fn",
            "make_chunk_step", "Scheduler", "BucketScheduler",
-           "ChunkedScheduler"]
+           "ChunkedScheduler", "EngineMetrics"]

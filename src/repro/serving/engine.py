@@ -35,10 +35,13 @@ from typing import Any, Dict, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.models import model as model_mod
 from repro.models.common import ModelConfig, ShardLayout, kv_cache_format
 from repro.models.kvcache import init_caches
+from repro.models.paged_kvcache import tree_nbytes
 from repro.parallel import sharding
+from repro.serving.metrics import EngineMetrics
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import (BucketScheduler, ChunkedScheduler,
                                      Request, Result)
@@ -200,6 +203,9 @@ class Engine:
         self._raw_params = params     # retained for the elastic rebuild
         self._closed = False
         self._paged = kv_cache_format(cfg.kv_cache_dtype).paged
+        # Per-engine telemetry + event sink (REPRO_OBS=off -> every hook
+        # is a no-op and the sink never opens); see docs/observability.md.
+        self.obs = EngineMetrics()
         if self._paged and cfg.input_kind == "embeddings":
             raise NotImplementedError(
                 "paged (tnn2) serving covers token models; the embeddings "
@@ -221,14 +227,40 @@ class Engine:
                 self._prefill_caches = {
                     s: init_caches(cfg, layout, 1, L)
                     for s in self._buckets()}
-        self.serve_step = jax.jit(make_serve_step(cfg, layout, scfg))
+            if self.obs.enabled:
+                # Cache footprint vs what a dense bf16 slab of the same
+                # (slots, max_len) would hold — eval_shape only, nothing
+                # is allocated for the comparison.
+                dense_equiv = jax.eval_shape(
+                    lambda: init_caches(cfg, layout, b, L, jnp.bfloat16))
+                self.obs.set_kv_bytes(tree_nbytes(self.caches),
+                                      tree_nbytes(dense_equiv))
+        self.serve_step = self._annotated(
+            jax.jit(make_serve_step(cfg, layout, scfg)), "decode_step")
         if self._paged:
-            self.chunk_step = jax.jit(make_chunk_step(cfg, layout))
+            self.chunk_step = self._annotated(
+                jax.jit(make_chunk_step(cfg, layout)), "prefill_chunk")
         else:
-            self.prefill = jax.jit(make_prefill_fn(cfg, layout))
+            self.prefill = self._annotated(
+                jax.jit(make_prefill_fn(cfg, layout)), "prefill_bucket")
         self.key = jax.random.PRNGKey(seed)
         sched_cls = ChunkedScheduler if self._paged else BucketScheduler
         self._sched = sched_cls(self, clock=clock)
+        self.obs.events.emit(
+            "engine_build", kv_cache_dtype=cfg.kv_cache_dtype,
+            num_slots=scfg.num_slots, max_len=scfg.max_len,
+            paged=self._paged, autotune=scfg.autotune,
+            mesh=(None if scfg.mesh is None
+                  else list(map(int, scfg.mesh.devices.shape))))
+
+    @staticmethod
+    def _annotated(fn, name: str):
+        """Wrap a jitted unit so device traces carry a named host region
+        (jax.profiler TraceAnnotation; nullcontext when obs is off)."""
+        def wrapped(*args, **kwargs):
+            with obs.annotate(name):
+                return fn(*args, **kwargs)
+        return wrapped
 
     # Slot/queue state lives on the scheduler; these delegating views
     # keep the engine's long-standing introspection surface stable.
@@ -392,12 +424,31 @@ class Engine:
             return self._sched.step()
 
     def page_stats(self):
-        """Per-pattern-entry page accounting ({total, used, free}) for
-        paged engines; [] for dense ones.  The serving tests assert
-        `used == 0` after a full drain."""
+        """Per-pattern-entry page accounting ({total, used, free,
+        high_water}) for paged engines; [] for dense ones.  The serving
+        tests assert `used == 0` after a full drain."""
         if not self._paged:
             return []
         return self._sched.page_stats()
+
+    # ------------------------------------------------------------- obs
+
+    def metrics(self) -> Dict:
+        """This engine's metrics snapshot (per-engine registry only);
+        see docs/observability.md for the snapshot format and the
+        metric catalog."""
+        return self.obs.snapshot()
+
+    def snapshot(self) -> Dict:
+        """Full obs export: run/engine identity, this engine's metrics,
+        and the process-wide (kernel/tune/mesh) registry."""
+        return {"meta": {"run": obs.run_id(),
+                         "engine": self.obs.engine_id,
+                         "kv_cache_dtype": self.cfg.kv_cache_dtype,
+                         "num_slots": self.scfg.num_slots,
+                         "paged": self._paged},
+                "engine": self.obs.snapshot(),
+                "process": obs.get_registry().snapshot()}
 
     # --------------------------------------------------------------- run
 
@@ -413,15 +464,18 @@ class Engine:
     # ------------------------------------------------ lifecycle / elastic
 
     def close(self):
-        """Disarm any process-wide dispatch policy this engine armed.
+        """Release process-global and sink state this engine holds.
 
-        ``autotune="on_first_use"`` sets a PROCESS-WIDE tuning policy
-        (ops.qmm has one global dispatch hook) which otherwise outlives
-        the engine — the classic footgun is a benchmark that builds a
-        tuned engine, drops it, then times an "untuned" run that
-        silently keeps measuring on every new shape.  ``close()`` (or
-        using the engine as a context manager) resets the policy to
-        "off".  Idempotent; see docs/autotuning.md.
+        Two responsibilities, both idempotent:
+
+        * disarm the PROCESS-WIDE ``on_first_use`` tuning policy this
+          engine may have armed (ops.qmm has one global dispatch hook)
+          — the classic footgun is a benchmark that builds a tuned
+          engine, drops it, then times an "untuned" run that silently
+          keeps measuring on every new shape (docs/autotuning.md);
+        * flush and close the obs event-log sink (after the final
+          ``engine_close`` record), so a crash-free shutdown always
+          leaves a complete JSONL file.  Emits after close are dropped.
         """
         if self._closed:
             return
@@ -429,6 +483,11 @@ class Engine:
         if self.scfg.pack_params and self.scfg.autotune == "on_first_use":
             from repro.tune import cache as tune_cache
             tune_cache.set_policy("off")
+        self.obs.events.emit(
+            "engine_close",
+            results=len(self.results),
+            in_flight=sum(1 for u in self.slot_uid if u != -1))
+        self.obs.close()
 
     def __enter__(self):
         return self
@@ -468,6 +527,8 @@ class Engine:
         """
         if self.scfg.mesh is None:
             raise RuntimeError("rebuild_after_loss needs a mesh engine")
+        import time as _time
+
         from repro.launch.mesh import make_mesh
         from repro.runtime.elastic import plan_restart
 
@@ -475,18 +536,37 @@ class Engine:
         dead_ids = {getattr(d, "id", d) for d in dead}
         all_devs = list(mesh.devices.flat)
         survivors = [d for d in all_devs if d.id not in dead_ids]
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        plan = plan_restart(len(survivors),
-                            chips_per_pod=len(all_devs),
-                            model=sizes.get("model", 1),
-                            old_data=sizes.get("data", 1),
-                            old_pods=1)
-        if plan is None:
-            raise RuntimeError(
-                f"{len(survivors)} surviving devices cannot host one "
-                f"model-parallel group of {sizes.get('model', 1)}")
-        new_mesh = make_mesh(plan.mesh_shape(multi_pod=False),
-                             mesh.axis_names, devices=survivors)
-        return Engine(self._raw_params, self.cfg, self.layout,
-                      dataclasses.replace(self.scfg, mesh=new_mesh),
-                      seed=self._seed, clock=self._clock)
+        self.obs.events.emit("device_loss",
+                             dead=sorted(map(int, dead_ids)),
+                             survivors=len(survivors),
+                             mesh=list(map(int, mesh.devices.shape)))
+        t0 = _time.perf_counter()
+        # The rebuild event must record the outcome EVEN when re-planning
+        # or re-packing raises — the watchdog path is exactly where logs
+        # matter most; the sink stays open (the old engine still owns it).
+        try:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            plan = plan_restart(len(survivors),
+                                chips_per_pod=len(all_devs),
+                                model=sizes.get("model", 1),
+                                old_data=sizes.get("data", 1),
+                                old_pods=1)
+            if plan is None:
+                raise RuntimeError(
+                    f"{len(survivors)} surviving devices cannot host one "
+                    f"model-parallel group of {sizes.get('model', 1)}")
+            new_mesh = make_mesh(plan.mesh_shape(multi_pod=False),
+                                 mesh.axis_names, devices=survivors)
+            new_eng = Engine(self._raw_params, self.cfg, self.layout,
+                             dataclasses.replace(self.scfg, mesh=new_mesh),
+                             seed=self._seed, clock=self._clock)
+        except BaseException as e:
+            self.obs.events.emit(
+                "rebuild", ok=False, error=f"{type(e).__name__}: {e}",
+                latency_s=round(_time.perf_counter() - t0, 6))
+            raise
+        self.obs.events.emit(
+            "rebuild", ok=True, new_engine=new_eng.obs.engine_id,
+            mesh=list(map(int, new_mesh.devices.shape)),
+            latency_s=round(_time.perf_counter() - t0, 6))
+        return new_eng

@@ -109,6 +109,7 @@ class Scheduler:
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+        self.eng.obs.on_submit(req.uid)
 
     def step(self) -> bool:
         """One tick: expire/cancel, admit+prefill, decode.  Returns True
@@ -116,7 +117,13 @@ class Scheduler:
         self.expire()
         self.admit_once()
         self.decode_once()
+        self.eng.obs.tick(len(self.queue),
+                          sum(1 for u in self.slot_uid if u != -1),
+                          self.page_stats())
         return bool(self.queue or any(u != -1 for u in self.slot_uid))
+
+    def page_stats(self) -> List:
+        return []                 # paged schedulers override
 
     def expire(self) -> None:
         """Evict cancelled / past-deadline requests — queued ones before
@@ -130,6 +137,7 @@ class Scheduler:
                 kept.append(req)
             else:
                 self.results[req.uid] = Result(req.uid, [], status=status)
+                self.eng.obs.on_queue_drop(req.uid, status)
         self.queue = kept
         for b in range(len(self.slot_uid)):
             if self.slot_uid[b] == -1:
@@ -151,6 +159,8 @@ class Scheduler:
     def finish(self, b: int, status: str = "ok") -> None:
         self.results[self.slot_uid[b]] = Result(
             self.slot_uid[b], self.slot_tokens[b], status=status)
+        self.eng.obs.on_finish(self.slot_uid[b], status,
+                               len(self.slot_tokens[b]))
         self.slot_uid[b] = -1
         self.slot_tokens[b] = []
         self.slot_req[b] = None
@@ -185,6 +195,7 @@ class BucketScheduler(Scheduler):
             if self.slot_uid[b] != -1 or not self.queue:
                 continue
             req = self.queue.popleft()
+            eng.obs.on_admit(req.uid)
             prompt = np.asarray(req.prompt, np.int32)
             bucket = next(s for s in eng._buckets() if s >= len(prompt))
             padded = np.zeros(bucket, np.int32)
@@ -214,6 +225,8 @@ class BucketScheduler(Scheduler):
             self.trace(req.uid, np.asarray(logits)[0, -1])
             self.slot_tokens[b] = [first]
             self.last_token[b] = first
+            eng.obs.on_prefill_tokens(len(prompt))
+            eng.obs.on_first_token(req.uid)
 
     def decode_once(self) -> None:
         eng = self.eng
@@ -236,6 +249,7 @@ class BucketScheduler(Scheduler):
             self.last_token[b] = nxt[b]
             self.slot_pos[b] += 1
             self.slot_remaining[b] -= 1
+            eng.obs.on_decode_token(self.slot_uid[b])
             if (self.slot_remaining[b] <= 0
                     or int(nxt[b]) == eng.scfg.eos_id
                     or self.slot_pos[b] >= eng.scfg.max_len):
@@ -296,6 +310,7 @@ class ChunkedScheduler(Scheduler):
                 raise ValueError(
                     f"prompt of {len(prompt)} tokens does not fit "
                     f"max_len={scfg.max_len} (need room to decode)")
+            self.eng.obs.on_admit(req.uid)
             self.slot_uid[b] = req.uid
             self.slot_req[b] = req
             self.slot_prompt[b] = prompt
@@ -328,6 +343,7 @@ class ChunkedScheduler(Scheduler):
         for b in rows:
             n = int(step2[b, 1])
             self.slot_done[b] += n
+            self.eng.obs.on_prefill_tokens(n)
             plen = len(self.slot_prompt[b])
             if self.slot_done[b] < plen:
                 continue
@@ -343,6 +359,7 @@ class ChunkedScheduler(Scheduler):
                                          scfg.max_len - plen)
             self.slot_tokens[b] = [first]
             self.last_token[b] = first
+            self.eng.obs.on_first_token(self.slot_uid[b])
             if self.slot_remaining[b] <= 0:
                 self.finish(b)
 
@@ -374,6 +391,7 @@ class ChunkedScheduler(Scheduler):
             self.last_token[b] = nxt[b]
             self.slot_pos[b] += 1
             self.slot_remaining[b] -= 1
+            self.eng.obs.on_decode_token(self.slot_uid[b])
             if (self.slot_remaining[b] <= 0
                     or int(nxt[b]) == scfg.eos_id
                     or self.slot_pos[b] >= scfg.max_len):

@@ -40,6 +40,7 @@ from typing import Dict, Optional
 
 from repro.kernels._matmul_common import DEFAULT_TILES, TileConfig
 from repro.kernels.modes import QuantMode
+from repro import obs
 
 __all__ = ["Plan", "PlanCache", "plan_key", "bucket_m", "device_kind",
            "default_cache_path", "get_cache", "set_cache_path",
@@ -284,6 +285,17 @@ def default_plan(mode: QuantMode, backend: str, fused: bool,
                 layout=layout, geom=geom)
 
 
+# Dispatch-time plan telemetry (process registry; no-ops when
+# REPRO_OBS=off).  "result" label: hit = tuned plan, default = fallback.
+_LOOKUP_CTR = obs.get_registry().counter(
+    "repro_tune_plan_lookups_total",
+    "plan_for cache lookups by result (hit | default)",
+    labels=("result",))
+_RESOLVE_HIST = obs.get_registry().histogram(
+    "repro_tune_plan_resolve_seconds",
+    "plan_for resolution latency (pure lookup, no measuring)")
+
+
 def plan_for(mode: QuantMode, backend: str, *, fused: bool,
              m: int, n: int, k: int, layout: str = "gemm",
              geom: Optional[str] = None) -> Plan:
@@ -292,10 +304,13 @@ def plan_for(mode: QuantMode, backend: str, *, fused: bool,
     tiles, a miss the DEFAULT_TILES fallback.  Deterministic per
     (shape-bucket, cache content), so repeated traces of the same shape
     resolve to the same blocking and the jit cache keeps hitting."""
-    key = plan_key(mode, backend, fused, device_kind(), bucket_m(m), n, k,
-                   layout=layout, geom=geom)
-    hit = get_cache().get(key)
-    if hit is not None:
-        return hit
-    return default_plan(mode, backend, fused, m, n, k, layout=layout,
-                        geom=geom)
+    with _RESOLVE_HIST.time():
+        key = plan_key(mode, backend, fused, device_kind(), bucket_m(m),
+                       n, k, layout=layout, geom=geom)
+        hit = get_cache().get(key)
+        if hit is not None:
+            _LOOKUP_CTR.inc(result="hit")
+            return hit
+        _LOOKUP_CTR.inc(result="default")
+        return default_plan(mode, backend, fused, m, n, k, layout=layout,
+                            geom=geom)

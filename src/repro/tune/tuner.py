@@ -32,6 +32,7 @@ from repro.kernels import registry
 from repro.kernels.modes import QuantMode
 from repro.tune import cache as plan_cache
 from repro.tune.space import TuningSpace
+from repro import obs
 
 # NOTE: repro.kernels.ops / repro.core are imported lazily inside the
 # functions below — ops imports this package's siblings at module scope,
@@ -40,6 +41,17 @@ from repro.tune.space import TuningSpace
 
 __all__ = ["ConvProblem", "tune_one", "ensure_plan", "tune_shapes",
            "collect_problems", "measure"]
+
+# ensure_plan telemetry (process registry; no-ops when REPRO_OBS=off):
+# the "on_first_use" hot path must stay a dict lookup, so the hit arm
+# records ONE counter bump and nothing else.
+_ENSURE_CTR = obs.get_registry().counter(
+    "repro_tune_ensure_total",
+    "ensure_plan outcomes by result (hit | measured)",
+    labels=("result",))
+_MEASURE_HIST = obs.get_registry().histogram(
+    "repro_tune_measure_seconds",
+    "on-device candidate measurement latency per ensure_plan")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,15 +277,18 @@ def ensure_plan(mode: QuantMode, backend: str, *, fused: bool = True,
                               layout=layout, geom=geom)
     hit = cache.get(key)
     if hit is not None:
+        _ENSURE_CTR.inc(result="hit")
         return hit, False
-    if conv is not None:
-        plan, report = tune_one(mode, backend, fused=fused, conv=conv,
-                                reps=reps, warmup=warmup, seed=seed,
-                                interpret=interpret)
-    else:
-        plan, report = tune_one(mode, backend, fused=fused, m=m, n=n, k=k,
-                                reps=reps, warmup=warmup, seed=seed,
-                                interpret=interpret)
+    _ENSURE_CTR.inc(result="measured")
+    with _MEASURE_HIST.time():
+        if conv is not None:
+            plan, report = tune_one(mode, backend, fused=fused, conv=conv,
+                                    reps=reps, warmup=warmup, seed=seed,
+                                    interpret=interpret)
+        else:
+            plan, report = tune_one(mode, backend, fused=fused, m=m, n=n,
+                                    k=k, reps=reps, warmup=warmup,
+                                    seed=seed, interpret=interpret)
     if reports is not None:
         reports[plan.key] = report
     cache.put(plan)

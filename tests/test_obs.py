@@ -1,0 +1,491 @@
+"""Telemetry subsystem (repro.obs + serving instrumentation).
+
+Three layers:
+
+* registry / event-log / CLI units — the zero-dep plumbing contracts
+  (label validation, off-switch semantics, envelope schema, catalog
+  check, Prometheus rendering);
+* deprecated alias read-through — ``ops.qmm_trace_count`` keeps working
+  against the registry counters (the tier-1 retrace guards depend on
+  it);
+* the e2e reconciliation test: the 9-request ChunkedScheduler scenario
+  of tests/test_serving_scheduler.py re-run with telemetry on, every
+  engine counter reconciled EXACTLY against the returned Results and
+  ``page_stats()`` — the instruments are derived from the same
+  lifecycle edges, so any drift is a bookkeeping bug, not noise.
+
+The e2e/event tests force the process switch ON via ``obs.set_enabled``
+(restored after), so the suite stays green under ``REPRO_OBS=off`` —
+which is exactly how CI runs tier-1.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.catalog import CATALOG
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+@pytest.fixture()
+def obs_on():
+    """Force telemetry on for this test, restoring the prior switch."""
+    was = obs.obs_enabled()
+    obs.set_enabled(True)
+    yield
+    obs.set_enabled(was)
+
+
+# ------------------------------------------------------------ registry
+
+def test_counter_labels_value_total():
+    reg = obs.MetricsRegistry(enabled=True)
+    c = reg.counter("t_total", "help", labels=("mode",))
+    c.inc(mode="tnn")
+    c.inc(2, mode="bnn")
+    assert c.value(mode="tnn") == 1
+    assert c.value(mode="bnn") == 2
+    assert c.value(mode="tbn") == 0          # never incremented
+    assert c.total() == 3
+    # same name, same shape -> the same handle (get-or-create)
+    assert reg.counter("t_total", labels=("mode",)) is c
+
+
+def test_label_set_mismatch_raises():
+    reg = obs.MetricsRegistry(enabled=True)
+    c = reg.counter("t_total", labels=("mode",))
+    with pytest.raises(ValueError, match="expected labels"):
+        c.inc(backend="xla")
+    with pytest.raises(ValueError, match="expected labels"):
+        c.inc()                              # missing the label entirely
+
+
+def test_reregister_conflict_raises():
+    reg = obs.MetricsRegistry(enabled=True)
+    reg.counter("t_total", labels=("mode",))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("t_total", labels=("mode",))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.counter("t_total", labels=("backend",))
+
+
+def test_gauge_set_and_high_water():
+    reg = obs.MetricsRegistry(enabled=True)
+    g = reg.gauge("t_gauge", labels=("entry",))
+    g.set(5, entry="0")
+    g.set(3, entry="0")
+    assert g.value(entry="0") == 3           # set overwrites
+    g.high_water(2, entry="1")
+    g.high_water(7, entry="1")
+    g.high_water(4, entry="1")
+    assert g.value(entry="1") == 7           # high_water keeps the max
+    assert g.value(entry="9") is None
+
+
+def test_histogram_buckets_count_sum_and_timer():
+    reg = obs.MetricsRegistry(enabled=True)
+    h = reg.histogram("t_seconds", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 5.0, 50.0):
+        h.observe(v)
+    assert h.count() == 4
+    assert h.sum() == pytest.approx(55.55)
+    snap = h.snapshot()["series"][0]["value"]
+    # buckets are cumulative (observations <= upper bound)
+    assert snap["buckets"] == {"0.1": 1, "1.0": 2, "10.0": 3}
+    with h.time():
+        pass
+    assert h.count() == 5
+
+
+def test_disabled_registry_is_noop_but_always_counts():
+    reg = obs.MetricsRegistry(enabled=False)
+    c = reg.counter("t_total")
+    g = reg.gauge("t_gauge")
+    h = reg.histogram("t_seconds")
+    c.inc(), g.set(3), h.observe(1.0)
+    assert c.total() == 0 and g.value() is None and h.count() == 0
+    # snapshot stays well-formed while disabled
+    assert reg.snapshot()["metrics"]["t_total"]["series"] == []
+    a = reg.counter("t_always_total", always=True)
+    a.inc(4)
+    assert a.total() == 4                    # correctness guards count
+
+
+def test_registry_tracks_process_switch():
+    was = obs.obs_enabled()
+    try:
+        reg = obs.MetricsRegistry()          # enabled=None: tracks global
+        c = reg.counter("t_total")
+        obs.set_enabled(False)
+        c.inc()
+        assert c.total() == 0
+        obs.set_enabled(True)
+        c.inc()
+        assert c.total() == 1
+    finally:
+        obs.set_enabled(was)
+
+
+def test_snapshot_and_prometheus_rendering():
+    reg = obs.MetricsRegistry(enabled=True)
+    reg.counter("t_total", "a counter", labels=("mode",)).inc(mode="tnn")
+    reg.gauge("t_gauge").set(2)
+    reg.histogram("t_seconds", buckets=(1.0,)).observe(0.5)
+    snap = reg.snapshot()
+    assert snap["schema"] == obs.SNAPSHOT_SCHEMA_VERSION
+    text = obs.to_prometheus(snap)
+    assert '# TYPE t_total counter' in text
+    assert 't_total{mode="tnn"} 1' in text
+    assert "t_gauge 2" in text
+    assert 't_seconds_bucket{le="1.0"} 1' in text
+    assert "t_seconds_count 1" in text
+
+
+def test_catalog_check_snapshot():
+    reg = obs.MetricsRegistry(enabled=True)
+    reg.counter("repro_engine_steps_total").inc()
+    assert obs.check_snapshot(reg.snapshot()) == []
+    bad = obs.MetricsRegistry(enabled=True)
+    bad.counter("not_in_catalog_total").inc()
+    bad.counter("repro_engine_steps_total", labels=("extra",)).inc(extra="x")
+    findings = obs.check_snapshot(bad.snapshot())
+    assert any("unregistered" in f for f in findings)
+    assert any("labels" in f for f in findings)
+    assert obs.check_snapshot({"metrics": {}}) \
+        == ["unknown snapshot schema None (expected 1)"]
+
+
+def test_catalog_covers_every_registered_process_metric():
+    """Every instrument the import side-effects registered process-wide
+    must have a catalog row (and matching label set), or the CI
+    obs-smoke ``--check`` would reject a real snapshot."""
+    import repro.kernels.ops            # noqa: F401  (registers counters)
+    import repro.tune.cache             # noqa: F401
+    import repro.tune.tuner             # noqa: F401
+
+    reg = obs.get_registry()
+    for name in reg.names():
+        assert name in CATALOG, f"process metric {name!r} not in CATALOG"
+        inst = reg.get(name)
+        assert tuple(CATALOG[name]["labels"]) == inst.label_names, name
+        assert CATALOG[name]["type"] == inst.kind, name
+
+
+# ------------------------------------------------------------ events
+
+def test_eventlog_envelope_and_seq(obs_on):
+    log = obs.EventLog(engine="eX")
+    r0 = log.emit("admit", uid=1)
+    r1 = log.emit("finish", uid=1, status="ok")
+    assert [r0["seq"], r1["seq"]] == [0, 1]
+    assert r0["schema"] == obs.SCHEMA_VERSION
+    assert r0["run"] == obs.run_id() and r0["engine"] == "eX"
+    assert r0["kind"] == "admit" and r0["uid"] == 1
+    assert log.records() == [r0, r1]
+    assert log.records(kind="finish") == [r1]
+    # envelope keys cannot be clobbered by event fields
+    r2 = log.emit("x", seq=999, run="boom")
+    assert r2["seq"] == 2 and r2["run"] == obs.run_id()
+    for rec in log.records():
+        assert obs.validate_line(json.dumps(rec)) == []
+
+
+def test_eventlog_file_sink_and_idempotent_close(tmp_path, obs_on):
+    path = tmp_path / "events.jsonl"
+    log = obs.EventLog(path=str(path), engine="e9")
+    assert not path.exists()                 # opens lazily on first emit
+    log.emit("a"), log.emit("b", n=2)
+    log.close()
+    log.close()                              # idempotent
+    assert log.emit("after") is None         # dropped, not an error
+    lines = path.read_text().strip().splitlines()
+    assert len(lines) == 2
+    assert [json.loads(ln)["kind"] for ln in lines] == ["a", "b"]
+    assert all(obs.validate_line(ln) == [] for ln in lines)
+
+
+def test_eventlog_disabled_emits_nothing(tmp_path):
+    was = obs.obs_enabled()
+    obs.set_enabled(False)
+    try:
+        path = tmp_path / "off.jsonl"
+        log = obs.EventLog(path=str(path))
+        assert log.emit("x") is None
+        assert log.records() == []
+        assert not path.exists()             # an off run provably writes 0
+    finally:
+        obs.set_enabled(was)
+
+
+def test_validate_line_findings():
+    assert obs.validate_line("not json") != []
+    assert obs.validate_line('["list"]') == ["record is not a JSON object"]
+    missing = obs.validate_line('{"schema": 1}')
+    assert any("'kind'" in f for f in missing)
+    bad_schema = obs.validate_line(
+        '{"schema": 99, "seq": 0, "ts": 0, "run": "r", '
+        '"engine": "-", "kind": "k"}')
+    assert any("schema" in f for f in bad_schema)
+
+
+def test_write_snapshot_if_configured(tmp_path, obs_on, monkeypatch):
+    out = tmp_path / "snap.json"
+    monkeypatch.setenv(obs.ENV_SNAPSHOT, str(out))
+    reg = obs.MetricsRegistry(enabled=True)
+    reg.counter("repro_engine_steps_total").inc()
+    assert obs.write_snapshot_if_configured(reg) == str(out)
+    snap = json.loads(out.read_text())
+    assert obs.check_snapshot(snap) == []
+    monkeypatch.delenv(obs.ENV_SNAPSHOT)
+    assert obs.write_snapshot_if_configured(reg) is None
+
+
+# ------------------------------------------------------------ CLI
+
+def _cli(*args):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run([sys.executable, "-m", "repro.obs", *args],
+                          capture_output=True, text=True, env=env)
+
+
+def test_cli_check_passes_on_valid_artifacts(tmp_path, obs_on):
+    reg = obs.MetricsRegistry(enabled=True)
+    reg.counter("repro_engine_steps_total", "ticks").inc(3)
+    snap_path = tmp_path / "snap.json"
+    snap_path.write_text(json.dumps(reg.snapshot()))
+    log = obs.EventLog(path=str(tmp_path / "ev.jsonl"))
+    log.emit("engine_build"), log.emit("engine_close")
+    log.close()
+    proc = _cli("--snapshot", str(snap_path),
+                "--events", str(tmp_path / "ev.jsonl"), "--check")
+    assert proc.returncode == 0, proc.stderr
+    assert "2 events, 0 finding(s)" in proc.stdout
+    # render mode: Prometheus text on stdout
+    proc = _cli("--snapshot", str(snap_path))
+    assert proc.returncode == 0
+    assert "repro_engine_steps_total 3" in proc.stdout
+
+
+def test_cli_check_fails_on_bad_artifacts(tmp_path):
+    snap_path = tmp_path / "snap.json"
+    snap_path.write_text(json.dumps(
+        {"schema": 1, "metrics": {"rogue_total": {
+            "type": "counter", "help": "", "labels": [], "series": []}}}))
+    ev_path = tmp_path / "ev.jsonl"
+    ev_path.write_text('{"schema": 1}\nnot json\n')
+    proc = _cli("--snapshot", str(snap_path), "--events", str(ev_path),
+                "--check")
+    assert proc.returncode == 1
+    assert "FINDING" in proc.stderr
+    assert "unregistered metric" in proc.stderr
+
+
+def test_obs_off_subprocess_disables_everything(tmp_path):
+    """REPRO_OBS=off resolved from the environment: no counting, no
+    event file — the obs package alone (no jax import needed)."""
+    code = (
+        "from repro import obs\n"
+        "assert not obs.obs_enabled()\n"
+        "c = obs.get_registry().counter('repro_engine_steps_total')\n"
+        "c.inc(); assert c.total() == 0\n"
+        "log = obs.EventLog(path=r'%s')\n"
+        "assert log.emit('x') is None\n"
+        "import os; assert not os.path.exists(r'%s')\n"
+        "print('OFF_OK')\n" % (tmp_path / "ev.jsonl", tmp_path / "ev.jsonl"))
+    env = dict(os.environ, PYTHONPATH=SRC, REPRO_OBS="off")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stderr
+    assert "OFF_OK" in proc.stdout
+
+
+# ------------------------------------------- deprecated alias read-through
+
+def test_qmm_trace_count_alias_reads_registry():
+    from repro.kernels import ops
+    from repro.kernels.modes import QuantMode
+
+    ctr = obs.get_registry().get("repro_qmm_traces_total")
+    before = ops.qmm_trace_count(QuantMode.TNN, "xla")
+    assert before == int(ctr.value(mode="tnn", backend="xla"))
+    ctr.inc(mode="tnn", backend="xla")
+    assert ops.qmm_trace_count(QuantMode.TNN, "xla") == before + 1
+
+
+# ------------------------------------------------------------ serving e2e
+
+@pytest.fixture(scope="module")
+def smoke():
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import model as model_mod
+    from repro.models.common import ShardLayout
+
+    cfg = get_smoke("tinyllama-1.1b")
+    layout = ShardLayout(tp=1)
+    params = model_mod.init_lm(jax.random.PRNGKey(1234), cfg, layout)
+    return cfg, layout, params
+
+
+def _chunked_engine(smoke, **scfg_over):
+    from repro.serving import Engine, SamplerConfig, ServeConfig
+
+    cfg, layout, params = smoke
+    base = dict(num_slots=4, max_len=64, prefill_bucket=8, page_size=8,
+                prefill_chunk=8, sampler=SamplerConfig(temperature=0.0))
+    base.update(scfg_over)
+    return Engine(params, cfg.with_(kv_cache_dtype="tnn2"), layout,
+                  ServeConfig(**base), seed=0)
+
+
+def test_engine_obs_reconciliation(smoke, obs_on):
+    """9 overlapping requests on 4 slots (the test_serving_scheduler
+    scenario): every engine instrument reconciles exactly against the
+    Results and page_stats()."""
+    from repro.serving import Request
+
+    cfg, _, _ = smoke
+    rng = np.random.default_rng(7)
+    lens = [8, 16, 8, 16, 8, 8, 16, 8, 16]
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in lens]
+
+    eng = _chunked_engine(smoke)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=5))
+    results = eng.run()
+    assert sorted(results) == list(range(9))
+    assert all(r.status == "ok" for r in results.values())
+
+    m = eng.obs
+    n_first = sum(1 for r in results.values() if len(r.tokens) >= 1)
+    total_tokens = sum(len(r.tokens) for r in results.values())
+
+    assert m.admissions.total() == 9
+    assert m.evictions.value(cause="done") == 9
+    assert m.evictions.total() + m.queue_drops.total() == len(results)
+    assert m.ttft.count() == n_first == 9
+    assert m.itl.count() == total_tokens - n_first
+    assert m.prefill_tokens.total() == sum(lens)
+    assert m.decode_tokens.total() == total_tokens - n_first
+    assert m.steps.total() > 0
+    assert m.queue_depth.value() == 0        # drained
+    assert m.live_slots.value() == 0
+    # latency bookkeeping fully garbage-collected
+    assert m._submit_ts == {} and m._last_tok_ts == {}
+
+    # page-pool gauges mirror the allocator exactly
+    stats = eng.page_stats()
+    assert stats and all(s["used"] == 0 for s in stats)
+    for i, s in enumerate(stats):
+        assert m.page_used.value(entry=str(i)) == 0
+        assert m.page_high.value(entry=str(i)) == s["high_water"] > 0
+
+    # KV footprint gauges: packed tnn2 pool beats the bf16 dense slab
+    packed = m.kv_bytes.value(kind="packed")
+    dense = m.kv_bytes.value(kind="dense_equiv")
+    assert 0 < packed < dense
+
+    # event stream: build first, then per-request admit/finish pairs
+    events = m.events.records()
+    assert events[0]["kind"] == "engine_build"
+    assert events[0]["engine"] == m.engine_id
+    assert len(m.events.records(kind="admit")) == 9
+    finishes = m.events.records(kind="finish")
+    assert sorted(e["uid"] for e in finishes) == list(range(9))
+    assert all(e["status"] == "ok" for e in finishes)
+    assert [e["seq"] for e in events] == list(range(len(events)))
+
+    # exported surfaces are schema-clean
+    assert obs.check_snapshot(eng.metrics()) == []
+    full = eng.snapshot()
+    assert full["meta"]["engine"] == m.engine_id
+    assert full["meta"]["run"] == obs.run_id()
+    assert obs.check_snapshot(full["engine"]) == []
+    assert obs.check_snapshot(full["process"]) == []
+
+    # close flushes + closes the sink, idempotently
+    eng.close()
+    assert m.events.closed
+    assert m.events.records(kind="engine_close")[-1]["in_flight"] == 0
+    assert m.events.emit("late") is None
+    eng.close()                              # second close: no-op
+
+
+def test_engine_events_jsonl_artifact(smoke, obs_on, tmp_path, monkeypatch):
+    """REPRO_OBS_EVENTS routes the engine's events to a JSONL file that
+    the CLI validates clean."""
+    from repro.serving import Request
+
+    cfg, _, _ = smoke
+    path = tmp_path / "engine_events.jsonl"
+    monkeypatch.setenv(obs.ENV_EVENTS, str(path))
+    eng = _chunked_engine(smoke)
+    eng.submit(Request(uid=0, prompt=np.arange(8) % cfg.vocab_size,
+                       max_new_tokens=3))
+    eng.run()
+    eng.close()
+    lines = path.read_text().strip().splitlines()
+    kinds = [json.loads(ln)["kind"] for ln in lines]
+    assert kinds[0] == "engine_build" and kinds[-1] == "engine_close"
+    assert "admit" in kinds and "finish" in kinds
+    proc = _cli("--events", str(path), "--check")
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_obs_off_engine_zero_overhead_surface(smoke):
+    """With the switch off, an instrumented engine records nothing and
+    emits nothing — but the surfaces stay well-formed."""
+    from repro.serving import Request
+
+    was = obs.obs_enabled()
+    obs.set_enabled(False)
+    try:
+        cfg, _, _ = smoke
+        eng = _chunked_engine(smoke)
+        eng.submit(Request(uid=0, prompt=np.arange(8) % cfg.vocab_size,
+                           max_new_tokens=3))
+        results = eng.run()
+        assert results[0].status == "ok"
+        assert eng.obs.events.records() == []
+        snap = eng.metrics()
+        assert all(m["series"] == [] for m in snap["metrics"].values())
+        eng.close()
+    finally:
+        obs.set_enabled(was)
+
+
+def test_rebuild_after_loss_emits_events_on_failure(smoke, obs_on):
+    """Losing every device makes the rebuild raise — the device_loss
+    and the failed-rebuild events must still be recorded (satellite:
+    the watchdog path is where logs matter most)."""
+    import jax
+
+    from repro.serving import Engine, SamplerConfig, ServeConfig
+
+    cfg, layout, params = smoke
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+    eng = Engine(params, cfg.with_(quant_policy="tnn"), layout,
+                 ServeConfig(num_slots=2, max_len=16, prefill_bucket=8,
+                             sampler=SamplerConfig(temperature=0.0),
+                             pack_params=True, mesh=mesh), seed=0)
+    dead = list(mesh.devices.flat)
+    with pytest.raises(RuntimeError, match="surviv"):
+        eng.rebuild_after_loss(dead)
+    loss = eng.obs.events.records(kind="device_loss")
+    assert len(loss) == 1 and loss[0]["survivors"] == 0
+    rebuilds = eng.obs.events.records(kind="rebuild")
+    assert len(rebuilds) == 1
+    assert rebuilds[0]["ok"] is False
+    assert "RuntimeError" in rebuilds[0]["error"]
+    assert rebuilds[0]["latency_s"] >= 0
+    # the sink survived the failed rebuild (old engine still owns it)
+    assert not eng.obs.events.closed
+    eng.close()
