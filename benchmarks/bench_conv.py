@@ -45,7 +45,8 @@ LAYERS = [   # (img, c_in, c_out, kernel)
     (16, 64, 128, 3),
     (8, 128, 256, 3),
 ]
-MODES = ["bf16", "int8"] + [m.value for m in registry.modes()]
+MODES = ["bf16", "int8"] + [m.value for m in registry.modes()
+                            if m.is_lowbit]
 
 
 def _time(call, reps=5):

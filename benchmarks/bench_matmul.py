@@ -43,7 +43,9 @@ from repro.kernels.ops import QuantMode
 
 # Low-bit algos and backends come from the kernel registry — a newly
 # registered kernel shows up in the tables without touching this file.
-LOWBIT = [m.value for m in registry.modes()]
+# The affine u8/u4 registry modes are excluded here: Table III already
+# times them as the "u8"/"u4" columns.
+LOWBIT = [m.value for m in registry.modes() if m.is_lowbit]
 BACKENDS = registry.backends()
 ALGOS = ["f32", "u8", "u4"] + LOWBIT
 
@@ -159,8 +161,9 @@ def run_fused(quick: bool = False, backend: str = "xla") -> Dict[str, Dict]:
     grid = _grid(quick)
     key = jax.random.PRNGKey(7)
     out: Dict[str, Dict] = {}
-    specs = registry.available(backend=backend, fused=True,
-                               layout=registry.LAYOUT_GEMM)
+    specs = [s for s in registry.available(backend=backend, fused=True,
+                                           layout=registry.LAYOUT_GEMM)
+             if s.mode.is_lowbit]       # the three-pass oracle is lowbit-only
     print(f"\nFused pipeline (ops.qmm, {backend} backend) vs the "
           f"three-pass unfused oracle, mean over {len(grid)} shapes:")
     print(f"{'mode':>6s} {'epilogue':>12s} {'unfused(us)':>12s} "
@@ -206,7 +209,7 @@ def run_dense_crossover(quick: bool = False) -> Dict[str, Dict]:
           "speedup = t_pallas / t_dense):")
     print(f"{'mode':>6s} {'shape':>16s} {'pallas(us)':>11s} "
           f"{'dense(us)':>10s} {'speedup':>8s}")
-    for mode in registry.modes():
+    for mode in [m for m in registry.modes() if m.is_lowbit]:
         for (m, n, d) in shapes:
             k1, k2 = jax.random.split(jax.random.fold_in(key, m + n + d))
             x = jax.random.normal(k1, (m, d), jnp.float32)
@@ -222,6 +225,44 @@ def run_dense_crossover(quick: bool = False) -> Dict[str, Dict]:
                             "speedup": tp / td}
             print(f"{mode.value:>6s} {f'{m}x{n}x{d}':>16s} {tp*1e6:11.0f} "
                   f"{td*1e6:10.0f} {tp/td:8.2f}x")
+    return out
+
+
+def run_indexed_crossover(quick: bool = False) -> Dict[str, Dict]:
+    """Indexed-redundancy crossover (RSR, arXiv 2411.06360): ``ops.qmm``
+    on the same packed QTensor (pack-time ``idx8_*`` payload included)
+    through the popcount scan, the segment-index gather kernel and the
+    MXU dense kernel, per (mode, Table-III-style shape).  speedup =
+    t_popcount / t_indexed (> 1: the gather path wins at that shape) —
+    the per-shape number behind choosing the indexed backend for wide
+    projections.  t_dense rides along as the MXU reference point."""
+    shapes = [(16, 128, 256)] if quick else [(16, 128, 256),
+                                             (16, 1024, 256),
+                                             (128, 256, 512)]
+    key = jax.random.PRNGKey(17)
+    out: Dict[str, Dict] = {}
+    print("\nIndexed-redundancy crossover (ops.qmm, same packed QTensor; "
+          "speedup = t_popcount / t_indexed):")
+    print(f"{'mode':>6s} {'shape':>16s} {'popcount(us)':>13s} "
+          f"{'indexed(us)':>12s} {'dense(us)':>10s} {'speedup':>8s}")
+    for mode in [m for m in registry.modes() if m.is_lowbit]:
+        for (m, n, d) in shapes:
+            k1, k2 = jax.random.split(jax.random.fold_in(key, m + n + d))
+            x = jax.random.normal(k1, (m, d), jnp.float32)
+            qt = ops.pack_weights(jax.random.normal(k2, (d, n), jnp.float32),
+                                  mode, indexed_bits=8)
+            fp = jax.jit(lambda x, qt=qt: ops.qmm(x, qt, backend="xla"))
+            fi = jax.jit(lambda x, qt=qt: ops.qmm(x, qt, backend="indexed"))
+            fd = jax.jit(lambda x, qt=qt: ops.qmm(x, qt, backend="dense"))
+            reps = 3 if quick else 5
+            tp = _time(lambda: fp(x), reps=reps)
+            ti = _time(lambda: fi(x), reps=reps)
+            td = _time(lambda: fd(x), reps=reps)
+            keyname = f"{mode.value}/m{m}n{n}k{d}"
+            out[keyname] = {"t_popcount": tp, "t_indexed": ti,
+                            "t_dense": td, "speedup": tp / ti}
+            print(f"{mode.value:>6s} {f'{m}x{n}x{d}':>16s} {tp*1e6:13.0f} "
+                  f"{ti*1e6:12.0f} {td*1e6:10.0f} {tp/ti:8.2f}x")
     return out
 
 
@@ -288,6 +329,9 @@ def main():
                     help="also run the tuned-vs-default tiling section")
     ap.add_argument("--crossover", action="store_true",
                     help="also run the dense-vs-pallas crossover section")
+    ap.add_argument("--indexed-crossover", action="store_true",
+                    help="also run the popcount-vs-indexed-vs-dense "
+                         "crossover section")
     args = ap.parse_args()
 
     results: Dict[str, Dict] = {}
@@ -296,6 +340,8 @@ def main():
     results["fused"] = run_fused(quick=args.quick, backend=args.backend)
     if args.crossover:
         results["dense_crossover"] = run_dense_crossover(quick=args.quick)
+    if args.indexed_crossover:
+        results["indexed"] = run_indexed_crossover(quick=args.quick)
     if args.tuned:
         results["tuned_vs_default"] = run_tuned(quick=args.quick)
 

@@ -50,6 +50,11 @@ __all__ = ["extract_metrics", "compare", "merge_baseline", "main"]
 BASELINE_CAPS = {"fused": 1.15, "conv": 1.15, "tuned": 1.0,
                  "dense_fused": 1.15, "conv_dense": 1.15,
                  "dense_crossover": 1.0,
+                 # popcount-vs-indexed is likewise a cross-kernel ratio
+                 # (t_popcount / t_indexed): cap 1.0, no margin demanded
+                 # — the gate only catches the indexed kernel collapsing
+                 # relative to the popcount scan
+                 "indexed": 1.0,
                  # deterministic psum wire-bytes ratio (f32 bytes over
                  # integer-accumulator bytes), not a timing: int16 on
                  # the wire == exactly 2.0, so the cap IS the value and
@@ -79,6 +84,10 @@ def extract_metrics(results: Dict) -> Dict[str, float]:
       three-pass materializing oracle, per mode;
     * ``dense_crossover``  — ops.qmm dense-vs-pallas kernel ratio per
       (mode, shape);
+    * ``indexed``          — ops.qmm popcount-vs-indexed kernel ratio
+      per (mode, shape) (``t_popcount / t_indexed``; the per-shape
+      ``t_dense`` column rides along ungated) — see
+      benchmarks/bench_matmul.py ``run_indexed_crossover``;
     * ``tuned_vs_default`` — autotuner tuned-vs-default tiling per
       (mode, backend, shape);
     * ``sharded``          — k-sharded qmm psum wire-bytes ratio
@@ -95,8 +104,8 @@ def extract_metrics(results: Dict) -> Dict[str, float]:
       conv2d_packed per (layer, mode), default and dense backends.
     """
     out: Dict[str, float] = {}
-    for family in ("fused", "dense_fused", "dense_crossover", "sharded",
-                   "serving", "obs"):
+    for family in ("fused", "dense_fused", "dense_crossover", "indexed",
+                   "sharded", "serving", "obs"):
         for key, d in (results.get(family) or {}).items():
             if isinstance(d, dict) and "speedup" in d:
                 out[f"{family}/{key}"] = float(d["speedup"])
@@ -151,8 +160,8 @@ def compare(baseline: Dict, current: Dict, tolerance: float
 def _set_metric(doc: Dict, name: str, value: float) -> None:
     """Write one flattened metric name back into a results document."""
     family, rest = name.split("/", 1)
-    if family in ("fused", "dense_fused", "dense_crossover", "sharded",
-                  "serving", "obs"):
+    if family in ("fused", "dense_fused", "dense_crossover", "indexed",
+                  "sharded", "serving", "obs"):
         doc[family][rest]["speedup"] = value
     elif family == "tuned":
         doc["tuned_vs_default"][rest]["speedup"] = value

@@ -5,15 +5,30 @@ SSM recurrence parameters and usually the first/last layers stay in high
 precision (XNOR-Net, TWN, TBN papers all do this).  ``QuantPolicy`` maps
 projection *classes* to :class:`QuantMode` so a single flag can turn an
 assigned LM architecture into its TNN/TBN/BNN variant.
+
+Backends are assignable per class as well: every registered ``(mode,
+backend)`` registry cell — popcount "pallas"/"xla", MXU "dense", the
+indexed-redundancy backend, the affine u8/u4 cells — can be picked for
+one projection class while the rest of the network keeps the global
+default (``backend_for``).  This is the policy-level face of the one-
+registry dispatch in :mod:`repro.kernels.ops`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.kernels.modes import QuantMode
 
 __all__ = ["QuantPolicy", "POLICIES"]
+
+_BACKEND_FIELD = {
+    "attn_proj": "attn_backend",
+    "ffn_proj": "ffn_backend",
+    "ssm_proj": "ssm_backend",
+    "head": "head_backend",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,16 +38,42 @@ class QuantPolicy:
     ffn_proj: QuantMode = QuantMode.BF16    # FFN / expert up,gate,down
     ssm_proj: QuantMode = QuantMode.BF16    # Mamba in/out/x projections
     head: QuantMode = QuantMode.BF16        # LM head (often kept fp)
-    backend: str = "xla"
+    backend: str = "xla"                    # global default backend
+    # Per-class overrides: None falls through to the global ``backend``.
+    attn_backend: Optional[str] = None
+    ffn_backend: Optional[str] = None
+    ssm_backend: Optional[str] = None
+    head_backend: Optional[str] = None
 
     def for_class(self, cls: str) -> QuantMode:
         return getattr(self, cls)
 
+    def backend_for(self, cls: str) -> str:
+        """Backend assigned to a projection class: the per-class
+        override when set, else the policy-wide default."""
+        override = getattr(self, _BACKEND_FIELD[cls])
+        return override if override is not None else self.backend
+
+    def validate(self) -> "QuantPolicy":
+        """Check every quantized (mode, backend) assignment against the
+        kernel registry (fused gemm cells) — raises KeyError naming the
+        missing cell.  Float classes skip (they never dispatch through
+        the registry); affine classes accept any backend (ops.qmm falls
+        back to the reference cell).  Returns self for chaining."""
+        from repro.kernels import registry
+
+        for cls in _BACKEND_FIELD:
+            mode = self.for_class(cls)
+            if mode.is_lowbit:
+                registry.lookup(mode, self.backend_for(cls), fused=True)
+        return self
+
 
 def _uniform(name: str, mode: QuantMode, head: QuantMode = QuantMode.BF16,
-             backend: str = "xla") -> QuantPolicy:
+             backend: str = "xla", **backend_overrides) -> QuantPolicy:
     return QuantPolicy(name=name, attn_proj=mode, ffn_proj=mode,
-                       ssm_proj=mode, head=head, backend=backend)
+                       ssm_proj=mode, head=head, backend=backend,
+                       **backend_overrides)
 
 
 POLICIES = {
@@ -46,4 +87,13 @@ POLICIES = {
     # dense-proxy beyond-paper variants (packed storage, MXU compute)
     "tnn_dense": _uniform("tnn_dense", QuantMode.TNN, backend="dense"),
     "bnn_dense": _uniform("bnn_dense", QuantMode.BNN, backend="dense"),
+    # indexed-redundancy backend (segment-index gather kernels)
+    "tnn_indexed": _uniform("tnn_indexed", QuantMode.TNN,
+                            backend="indexed"),
+    "bnn_indexed": _uniform("bnn_indexed", QuantMode.BNN,
+                            backend="indexed"),
+    # mixed per-class backends: wide FFN projections ride the indexed
+    # gather (n >> 2^b amortizes the tables), attention stays popcount
+    "tnn_mixed": _uniform("tnn_mixed", QuantMode.TNN,
+                          ffn_backend="indexed"),
 }

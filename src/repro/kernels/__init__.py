@@ -3,7 +3,9 @@ binary / ternary / ternary-binary / u8 / u4 matrix multiplication.
 
 Deployment surface: ``QTensor`` (typed packed-weight container),
 ``ops.qmm`` (the one fused entry point) and ``registry`` (the
-(mode, backend, fused) -> kernel table)."""
+(mode, backend, fused) -> kernel table).  The legacy ``fused_qmm`` shim
+is no longer re-exported here — reach it as ``ops.fused_qmm`` during
+its one-release deprecation window."""
 
 from repro.kernels import ref, registry
 from repro.kernels.qtensor import QTensor
@@ -15,7 +17,6 @@ from repro.kernels.ops import (
     packed_matmul,
     pack_weights,
     quantize_activations,
-    fused_qmm,
     int8_affine_matmul,
     int4_affine_matmul,
 )
@@ -23,7 +24,17 @@ from repro.kernels.bnn_matmul import bnn_matmul_pallas, bnn_matmul_fused_pallas
 from repro.kernels.tnn_matmul import tnn_matmul_pallas, tnn_matmul_fused_pallas
 from repro.kernels.tbn_matmul import tbn_matmul_pallas, tbn_matmul_fused_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
-from repro.kernels.int4_matmul import int4_matmul_pallas
+from repro.kernels.int4_matmul import (
+    int4_matmul_pallas,
+    pack_nibbles_rows,
+    pack_nibbles_cols,
+)
+from repro.kernels.indexed_matmul import (
+    add_indexed_payload,
+    indexed_matmul,
+    indexed_matmul_fused,
+    segment_indices,
+)
 
 __all__ = [
     "ref",
@@ -36,7 +47,6 @@ __all__ = [
     "packed_matmul",
     "pack_weights",
     "quantize_activations",
-    "fused_qmm",
     "int8_affine_matmul",
     "int4_affine_matmul",
     "bnn_matmul_pallas",
@@ -47,4 +57,10 @@ __all__ = [
     "tbn_matmul_fused_pallas",
     "int8_matmul_pallas",
     "int4_matmul_pallas",
+    "pack_nibbles_rows",
+    "pack_nibbles_cols",
+    "add_indexed_payload",
+    "indexed_matmul",
+    "indexed_matmul_fused",
+    "segment_indices",
 ]

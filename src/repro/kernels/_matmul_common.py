@@ -82,6 +82,10 @@ DEFAULT_TILES: Dict[str, TileConfig] = {
     "bnn": TileConfig(block_m=128, block_n=128, block_kw=512, word_chunk=8),
     "tnn": TileConfig(block_m=128, block_n=128, block_kw=256, word_chunk=8),
     "tbn": TileConfig(block_m=128, block_n=128, block_kw=256, word_chunk=8),
+    # Affine u8/u4 registry cells: the kernels pick their own tiling,
+    # but the plan-cache fallback needs an entry per registered mode.
+    "int8": TileConfig(),
+    "int4": TileConfig(),
 }
 
 

@@ -14,7 +14,7 @@ The deployment API is two calls:
 
 Kernel selection goes through :mod:`repro.kernels.registry` — one
 ``(mode, backend, fused)`` table replacing the old per-function if/elif
-ladders.  Three backends per low-bit mode:
+ladders.  Four backends per low-bit mode:
 
 * ``pallas``  — the TPU kernels of this package, validated on CPU in
   interpret mode (the TARGET implementation);
@@ -25,7 +25,16 @@ ladders.  Three backends per low-bit mode:
   (the memory win) and ride the MXU — the fused kernels
   (kernels/dense_fused.py) unpack bit-plane words to ±1/0 bf16 tiles in
   VMEM, directly ahead of the dot; the unfused entry keeps the
-  materializing HBM unpack as the bit-exact oracle.
+  materializing HBM unpack as the bit-exact oracle;
+* ``indexed`` — the redundancy-exploiting segment-index formulation of
+  Dehghankar et al. (arXiv 2411.06360): per-(row, segment) subset-sum
+  tables replace per-column popcounts (kernels/indexed_matmul.py),
+  with optional pack-time index payload on the QTensor.
+
+The affine u8/u4 modes dispatch through the same registry (``(int8/
+int4, "xla"/"pallas", fused)`` cells — the eq. (3) zero-point core plus
+the shared eq. (2) epilogue), so ``qmm`` and ``core/policy.py`` treat
+them like any other mode x backend cell.
 
 Plus the float-in/float-out ``quantized_matmul`` with straight-through
 (STE) gradients for QAT.
@@ -47,7 +56,7 @@ from repro.kernels import registry
 from repro.kernels._matmul_common import TileConfig
 from repro.kernels.qtensor import PAYLOAD_KEYS, QTensor
 from repro.tune import cache as tune_cache
-from repro.tune.space import PALLAS_SPACE, XLA_SPACE
+from repro.tune.space import AFFINE_SPACE, PALLAS_SPACE, XLA_SPACE
 from repro import obs
 
 from repro.core import encoding, quantize
@@ -65,7 +74,7 @@ __all__ = [
     "quantize_activations",
     "packed_matmul", "quantized_matmul", "lowbit_matmul",
     "int8_affine_matmul", "int4_affine_matmul", "DEFAULT_BACKEND",
-    "fused_qmm", "qmm_trace_count", "qconv_trace_count", "has_conv_kernel",
+    "qmm_trace_count", "qconv_trace_count", "has_conv_kernel",
     "bnn_matmul_xla_fused", "tnn_matmul_xla_fused", "tbn_matmul_xla_fused",
 ]
 
@@ -73,11 +82,15 @@ _WORD_CHUNK = 8  # uint32 words per scan step on the xla path (256 k-elems)
 
 # Which planes each mode consumes on the ACTIVATION side (weights use
 # qtensor.PAYLOAD_KEYS — the container's single source of truth).  The
-# sides differ for TBN: ternary activations x binary weights.
+# sides differ for TBN: ternary activations x binary weights.  The
+# affine modes carry the quantized grid plus its zero point — the
+# eq. (3) core needs both operands' zeros.
 _A_KEYS: Dict[QuantMode, Tuple[str, ...]] = {
     QuantMode.BNN: ("bits",),
     QuantMode.TNN: ("plus", "minus"),
     QuantMode.TBN: ("plus", "minus"),
+    QuantMode.INT8: ("q", "zero"),
+    QuantMode.INT4: ("q", "zero"),
 }
 
 
@@ -340,51 +353,116 @@ def _register_all_kernels():
 
 _register_all_kernels()
 
-# Registers the fused-im2col conv kernels (layout="im2col_fused") and
-# the dense-backend MXU fusion kernels (both layouts) as import side
-# effects.  Must come after _register_all_kernels() and after the core
-# imports above so their lazy repro.core references always resolve;
-# dense_fused imports conv_fused's shared patch-gather helpers, so the
-# order below matters.
+
+# ---------------------------------------------------------------------------
+# Affine (u8/u4) registry cells: eq. (3) zero-point core + eq. (2)
+# epilogue, dispatched like every other (mode, backend, fused) cell
+# ---------------------------------------------------------------------------
+
+def _affine_core(mode: QuantMode, a_pl, b_pl, k_valid: int, *,
+                 use_pallas: bool, interpret: bool):
+    """int32 c~ per eq. (3).  ``a_pl``/``b_pl`` are the (grid, zero)
+    operand pairs of ``_A_KEYS``/``_b_planes``: a_q (m, k) and b_q
+    (k, n) u8/u4-valued, za/zb their zero points."""
+    a_q, za = a_pl
+    b_q, zb = b_pl
+    if use_pallas:
+        if mode == QuantMode.INT8:
+            # gemmlowp's operands are *unsigned* 8-bit; widen from uint8
+            # so the 0..255 range survives (an int8 cast would wrap
+            # 128..255).
+            acc = int8_matmul_pallas(a_q.astype(jnp.uint8),
+                                     b_q.astype(jnp.uint8),
+                                     interpret=interpret)
+        else:
+            acc = int4_matmul_pallas(pack_nibbles_rows(a_q),
+                                     pack_nibbles_cols(b_q),
+                                     interpret=interpret)
+        rows = jnp.sum(a_q.astype(jnp.int32), axis=1)
+        cols = jnp.sum(b_q.astype(jnp.int32), axis=0)
+        za = jnp.asarray(za, jnp.int32)
+        zb = jnp.asarray(zb, jnp.int32)
+        return (acc - zb * rows[:, None] - za * cols[None, :]
+                + jnp.int32(k_valid) * za * zb)
+    ref_fn = (kref.int8_matmul_ref if mode == QuantMode.INT8
+              else kref.int4_matmul_ref)
+    return ref_fn(a_q, b_q, za, zb, k_valid)
+
+
+def _register_affine_kernels():
+    def make(mode, use_pallas, fused):
+        def unfused_fn(a, b, k, *, interpret=True, tiles=None):
+            del tiles                # the int kernels pick their own tiling
+            return _affine_core(mode, a, b, k, use_pallas=use_pallas,
+                                interpret=interpret)
+
+        def fused_fn(a, b, k, r, c, bias, *, interpret=True, tiles=None):
+            del tiles
+            acc = _affine_core(mode, a, b, k, use_pallas=use_pallas,
+                               interpret=interpret)
+            return _scale_epilogue_f32(acc, r, c, bias)
+
+        return fused_fn if fused else unfused_fn
+
+    for mode in (QuantMode.INT8, QuantMode.INT4):
+        for use_pallas in (False, True):
+            backend = "pallas" if use_pallas else "xla"
+            compute = f"int-{backend}"
+            registry.register(
+                mode, backend, fused=False, epilogue="none",
+                compute=compute,
+                description="eq. (3) zero-point core on the quantized grid",
+            )(make(mode, use_pallas, fused=False))
+            registry.register(
+                mode, backend, fused=True, epilogue="post-core",
+                compute=compute, tunable=AFFINE_SPACE,
+                description="eq. (3) core + eq. (2) scale/bias epilogue "
+                            "in one trace",
+            )(make(mode, use_pallas, fused=True))
+
+
+_register_affine_kernels()
+
+# Registers the fused-im2col conv kernels (layout="im2col_fused"), the
+# dense-backend MXU fusion kernels (both layouts) and the indexed-
+# redundancy segment-gather kernels as import side effects.  Must come
+# after _register_all_kernels() and after the core imports above so
+# their lazy repro.core references always resolve; dense_fused imports
+# conv_fused's shared patch-gather helpers, so the order below matters.
 from repro.kernels import conv_fused as _conv_fused  # noqa: E402,F401
 from repro.kernels import dense_fused as _dense_fused  # noqa: E402,F401
+from repro.kernels import indexed_matmul as _indexed_matmul  # noqa: E402,F401
 
 
 # ---------------------------------------------------------------------------
-# Affine (u8/u4) full pipelines: kernel + eq. (3) correction
+# Affine (u8/u4) full pipelines — thin registry-routed wrappers kept for
+# the bench/test surface; dispatch lives in the registry cells above
 # ---------------------------------------------------------------------------
+
+def _affine_backend(mode: QuantMode, backend: str, *, fused: bool) -> str:
+    """Effective affine backend: the requested one when registered,
+    otherwise the "xla" reference cell (preserving the old anything-but-
+    pallas -> reference behavior for backends like "dense")."""
+    return backend if registry.has(mode, backend, fused=fused) else "xla"
+
 
 def int8_affine_matmul(a_q, b_q, za, zb, k_valid: int, *,
                        backend: str = DEFAULT_BACKEND,
                        interpret: bool = True):
     """c~ per eq. (3).  a_q (m,k) u8-valued, b_q (k,n) u8-valued."""
-    if backend == "pallas":
-        # gemmlowp's operands are *unsigned* 8-bit; widen from uint8 so the
-        # 0..255 range survives (an int8 cast would wrap 128..255).
-        acc = int8_matmul_pallas(a_q.astype(jnp.uint8), b_q.astype(jnp.uint8),
-                                 interpret=interpret)
-        a32 = a_q.astype(jnp.int32)
-        b32 = b_q.astype(jnp.int32)
-        rows = jnp.sum(a32, axis=1)
-        cols = jnp.sum(b32, axis=0)
-        za = jnp.asarray(za, jnp.int32)
-        zb = jnp.asarray(zb, jnp.int32)
-        return acc - zb * rows[:, None] - za * cols[None, :] + jnp.int32(k_valid) * za * zb
-    return kref.int8_matmul_ref(a_q, b_q, za, zb, k_valid)
+    spec = registry.lookup(QuantMode.INT8,
+                           _affine_backend(QuantMode.INT8, backend,
+                                           fused=False), fused=False)
+    return spec.fn((a_q, za), (b_q, zb), k_valid, interpret=interpret)
 
 
 def int4_affine_matmul(a_q, b_q, za, zb, k_valid: int, *,
                        backend: str = DEFAULT_BACKEND,
                        interpret: bool = True):
-    if backend == "pallas":
-        acc = int4_matmul_pallas(pack_nibbles_rows(a_q),
-                                 pack_nibbles_cols(b_q), interpret=interpret)
-        rows = jnp.sum(a_q.astype(jnp.int32), axis=1)
-        cols = jnp.sum(b_q.astype(jnp.int32), axis=0)
-        za = jnp.asarray(za, jnp.int32)
-        zb = jnp.asarray(zb, jnp.int32)
-        return acc - zb * rows[:, None] - za * cols[None, :] + jnp.int32(k_valid) * za * zb
-    return kref.int4_matmul_ref(a_q, b_q, za, zb, k_valid)
+    spec = registry.lookup(QuantMode.INT4,
+                           _affine_backend(QuantMode.INT4, backend,
+                                           fused=False), fused=False)
+    return spec.fn((a_q, za), (b_q, zb), k_valid, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -392,12 +470,22 @@ def int4_affine_matmul(a_q, b_q, za, zb, k_valid: int, *,
 # ---------------------------------------------------------------------------
 
 def pack_weights(w: jnp.ndarray, mode: QuantMode, *,
-                 per_channel: bool = True) -> QTensor:
+                 per_channel: bool = True,
+                 indexed_bits: Optional[int] = None) -> QTensor:
     """Offline weight packing (Algorithm 2's PackedB).
 
     ``w`` is (k, n) float.  Returns a :class:`QTensor` (see
-    kernels/qtensor.py for the per-mode payload layout)."""
-    return QTensor.from_dense(w, mode, per_channel=per_channel)
+    kernels/qtensor.py for the per-mode payload layout).
+
+    ``indexed_bits`` (2/4/8) additionally stores the segment-index
+    payload the "indexed" backend consumes zero-copy
+    (kernels/indexed_matmul.py) — opt-in, since it grows the payload;
+    without it the indexed kernels derive the indices in-trace,
+    bit-identically."""
+    qt = QTensor.from_dense(w, mode, per_channel=per_channel)
+    if indexed_bits is not None:
+        qt = _indexed_matmul.add_indexed_payload(qt, indexed_bits)
+    return qt
 
 
 def quantize_activations(x: jnp.ndarray, mode: QuantMode, *,
@@ -438,35 +526,44 @@ def quantize_activations(x: jnp.ndarray, mode: QuantMode, *,
     raise ValueError(mode)
 
 
-def _b_planes(wb, mode: QuantMode) -> Tuple[jnp.ndarray, ...]:
-    """Weight-side planes from a QTensor or a legacy packed dict."""
-    src = wb.payload if isinstance(wb, QTensor) else wb
-    return tuple(src[k] for k in PAYLOAD_KEYS[mode])
+def _b_planes(wb: QTensor, mode: QuantMode) -> Tuple[jnp.ndarray, ...]:
+    """Weight-side operand tuple of a QTensor: the mode's payload planes,
+    plus the zero point for the affine modes (the eq. (3) core consumes
+    (grid, zero) pairs on both sides)."""
+    planes = tuple(wb.payload[k] for k in PAYLOAD_KEYS[mode])
+    if mode in (QuantMode.INT8, QuantMode.INT4):
+        return planes + (wb.zero,)
+    return planes
 
 
-def packed_matmul(xa: Dict[str, Any], wb, mode: Optional[QuantMode] = None,
+def packed_matmul(xa: Dict[str, Any], wb: QTensor,
+                  mode: Optional[QuantMode] = None,
                   k_valid: Optional[int] = None, *,
                   backend: str = DEFAULT_BACKEND,
                   interpret: bool = True) -> jnp.ndarray:
     """Integer core: packed activations x packed weights -> int32 (m, n).
 
-    ``wb`` is a :class:`QTensor` (mode/k_valid then come from it) or a
-    legacy plane dict (mode and k_valid must be given).  This is the
-    unfused correctness oracle; the hot path is :func:`qmm`.
+    ``wb`` is a :class:`QTensor` (mode/k_valid come from it; the legacy
+    plane-dict form is retired — migrate with
+    :meth:`QTensor.from_legacy_dict`).  This is the unfused correctness
+    oracle; the hot path is :func:`qmm`.
     """
-    if isinstance(wb, QTensor):
-        if mode is not None and mode != wb.mode:
-            raise ValueError(f"mode mismatch: {mode} vs QTensor {wb.mode}")
-        mode = wb.mode
-        k_valid = wb.k_valid if k_valid is None else k_valid
-    if mode is None or k_valid is None:
-        raise ValueError("packed_matmul with a legacy dict needs explicit "
-                         "mode and k_valid (pack into a QTensor instead)")
+    if not isinstance(wb, QTensor):
+        raise TypeError(
+            f"packed_matmul expects a QTensor weight operand (migrate "
+            f"legacy packed dicts with QTensor.from_legacy_dict); got "
+            f"{type(wb).__name__}")
+    if mode is not None and mode != wb.mode:
+        raise ValueError(f"mode mismatch: {mode} vs QTensor {wb.mode}")
+    mode = wb.mode
+    k_valid = wb.k_valid if k_valid is None else k_valid
     if not mode.is_lowbit:
         raise ValueError(f"packed_matmul only handles low-bit modes, got {mode}")
     spec = registry.lookup(mode, backend, fused=False)
     a_pl = tuple(xa[k] for k in _A_KEYS[mode])
-    return spec.fn(a_pl, _b_planes(wb, mode), k_valid, interpret=interpret)
+    extra = {"payload": wb.payload} if spec.payload_aware else {}
+    return spec.fn(a_pl, _b_planes(wb, mode), k_valid, interpret=interpret,
+                   **extra)
 
 
 # ---------------------------------------------------------------------------
@@ -527,27 +624,19 @@ def _qmm_jit(x, qt: QTensor, backend: str, interpret: bool,
         y = y.astype(jnp.float32)
         return y if qt.bias is None else y + qt.bias
 
-    if mode.is_lowbit:
-        xa = quantize_activations(x.astype(jnp.float32), mode,
-                                  stats=act_stats)
-        row = _as_row_scale(xa["scale"], m)
-        col = _as_col_vec(qt.scale, n)
-        b2 = None if qt.bias is None else _as_col_vec(qt.bias, n)
-        spec = registry.lookup(mode, backend, fused=True)
-        a_pl = tuple(xa[kk] for kk in _A_KEYS[mode])
-        return spec.fn(a_pl, _b_planes(qt, mode), k, row, col, b2,
-                       interpret=interpret, tiles=tiles)
-
-    # affine u8/u4: runtime activation calibration + eq. (3) core + eq. (2)
-    nbits = 8 if mode == QuantMode.INT8 else 4
-    xf = x.astype(jnp.float32)
-    qa = quantize.affine_calibrate(xf, nbits)
-    a_q = quantize.affine_quantize(xf, qa)
-    fn = int8_affine_matmul if mode == QuantMode.INT8 else int4_affine_matmul
-    c = fn(a_q, qt.payload["q"], qa.zero_point, qt.zero, k,
-           backend=backend, interpret=interpret)
-    y = c.astype(jnp.float32) * qa.scale * qt.scale
-    return y if qt.bias is None else y + qt.bias
+    # One registry path for every quantized mode: bit-plane popcount /
+    # dense / indexed cells for the low-bit modes, the eq. (3) affine
+    # cells for u8/u4 — quantize activations, look the cell up, run the
+    # fused kernel (core + eq. (2) epilogue in the same trace).
+    xa = quantize_activations(x.astype(jnp.float32), mode, stats=act_stats)
+    row = _as_row_scale(xa["scale"], m)
+    col = _as_col_vec(qt.scale, n)
+    b2 = None if qt.bias is None else _as_col_vec(qt.bias, n)
+    spec = registry.lookup(mode, backend, fused=True)
+    a_pl = tuple(xa[kk] for kk in _A_KEYS[mode])
+    extra = {"payload": qt.payload} if spec.payload_aware else {}
+    return spec.fn(a_pl, _b_planes(qt, mode), k, row, col, b2,
+                   interpret=interpret, tiles=tiles, **extra)
 
 
 def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
@@ -569,11 +658,17 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
     * ``dense``: Pallas kernel unpacks the bit-plane words to ±1/0 bf16
       tiles in VMEM and feeds the MXU, epilogue at ``pid_k == num_k-1``
       (``dense_matmul_fused_pallas``) — the dense unpack never touches
-      HBM.
+      HBM;
+    * ``indexed``: per-(row, segment) subset-sum tables + per-column
+      index gathers replace the popcounts (kernels/indexed_matmul.py);
+      pack-time ``idx{b}_*`` payload keys are consumed zero-copy when
+      present, else the indices derive in-trace from the bit planes.
 
     Float modes are a dense dot (+ bias); u8/u4 run the affine eq. (3)
-    pipeline.  Numerics match the unfused oracle exactly: the integer
-    core is identical and the epilogue uses the same multiply order.
+    pipeline through the same registry (cells for "xla"/"pallas"; other
+    backends fall back to the reference cell).  Numerics match the
+    unfused oracle exactly: the integer core is identical and the
+    epilogue uses the same multiply order.
 
     Parameters
     ----------
@@ -585,7 +680,8 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
         and, for mesh-sharded containers, the payload partitioning
         (``qt.pspec``) — all ride inside it.
     backend : str, optional
-        "pallas" | "xla" | "dense"; None -> :data:`DEFAULT_BACKEND`.
+        "pallas" | "xla" | "dense" | "indexed"; None ->
+        :data:`DEFAULT_BACKEND`.
     interpret : bool
         Run Pallas kernels in interpret mode (CPU validation).
     act_stats : dict, optional
@@ -620,6 +716,12 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
             f"depth mismatch: x has k={x.shape[-1]} but QTensor was packed "
             f"with k_valid={qt.k_valid} (logical shape {qt.shape})")
     backend = backend or DEFAULT_BACKEND
+    if qt.mode in (QuantMode.INT8, QuantMode.INT4):
+        # Affine cells register for "xla"/"pallas" only; any other
+        # backend (a policy may say "dense"/"indexed" for its low-bit
+        # layers) falls back to the reference cell, preserving the old
+        # anything-but-pallas -> reference behavior.
+        backend = _affine_backend(qt.mode, backend, fused=True)
     _QMM_DISPATCH_CTR.inc(mode=qt.mode.value, backend=backend,
                           layout=registry.LAYOUT_GEMM)
     tiles = None
@@ -634,6 +736,7 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
                                             backend=backend,
                                             interpret=interpret,
                                             act_stats=act_stats)
+    if qt.is_lowbit or qt.mode in (QuantMode.INT8, QuantMode.INT4):
         if tune_cache.get_policy() == "on_first_use":
             # Tune this shape before resolving, so even the very first
             # call dispatches tuned tiles — a warm plan cache makes this
@@ -806,9 +909,17 @@ def fused_qmm(x: jnp.ndarray, wb, mode: Optional[QuantMode] = None,
               bias: Optional[jnp.ndarray] = None, *,
               backend: str = DEFAULT_BACKEND,
               interpret: bool = True) -> jnp.ndarray:
-    """Legacy shim for the pre-QTensor API: accepts a QTensor or a legacy
-    packed dict (+ explicit mode) and delegates to :func:`qmm`.  New code
-    should call ``qmm(x, qt)`` directly."""
+    """DEPRECATED legacy shim for the pre-QTensor API — call
+    ``qmm(x, qt)`` directly (``QTensor.from_legacy_dict`` migrates old
+    packed dicts).  Kept for one release; emits a DeprecationWarning and
+    delegates to :func:`qmm`."""
+    import warnings
+
+    warnings.warn(
+        "ops.fused_qmm is deprecated and will be removed in the next "
+        "release: call ops.qmm(x, qt) with a QTensor "
+        "(QTensor.from_legacy_dict migrates legacy packed dicts)",
+        DeprecationWarning, stacklevel=2)
     if isinstance(wb, QTensor):
         qt = wb
         if mode is not None and mode != qt.mode:
@@ -829,28 +940,17 @@ def fused_qmm(x: jnp.ndarray, wb, mode: Optional[QuantMode] = None,
 # ---------------------------------------------------------------------------
 
 def _qmm_fwd_value(x, w, mode: QuantMode, backend: str, interpret: bool):
-    k = x.shape[-1]
     if mode == QuantMode.F32:
         return jnp.dot(x, w)
     if mode == QuantMode.BF16:
         return jnp.dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
                        preferred_element_type=jnp.float32)
-    if mode.is_lowbit:
-        # Forward rides the fused pipeline: quantize -> pack -> popcount
-        # matmul -> scale in one trace (weights are re-packed per call in
-        # QAT; inference should pack once and call qmm directly).
-        qt = QTensor.from_dense(w, mode)
-        return qmm(x, qt, backend=backend, interpret=interpret)
-    # affine u8/u4
-    bits = 8 if mode == QuantMode.INT8 else 4
-    qa = quantize.affine_calibrate(x, bits)
-    qb = quantize.affine_calibrate(w, bits)
-    a_q = quantize.affine_quantize(x, qa)
-    b_q = quantize.affine_quantize(w, qb)
-    fn = int8_affine_matmul if mode == QuantMode.INT8 else int4_affine_matmul
-    c = fn(a_q, b_q, qa.zero_point, qb.zero_point, k,
-           backend=backend, interpret=interpret)
-    return c.astype(jnp.float32) * qa.scale * qb.scale     # eq. (2)
+    # Every quantized mode rides the fused registry pipeline: quantize
+    # -> pack -> core (popcount / indexed / eq. (3) affine) -> eq. (2)
+    # scale in one trace (weights are re-packed per call in QAT;
+    # inference should pack once and call qmm directly).
+    qt = QTensor.from_dense(w, mode)
+    return qmm(x, qt, backend=backend, interpret=interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
@@ -903,4 +1003,6 @@ def lowbit_matmul(a: jnp.ndarray, b: jnp.ndarray, mode: QuantMode, *,
         wb = {"bits": encoding.pack_binary(b.T)}
     else:
         raise ValueError(mode)
-    return packed_matmul(xa, wb, mode, k, backend=backend, interpret=interpret)
+    qt = QTensor(payload=wb, scale=None, mode=mode,
+                 shape=(int(k), int(b.shape[-1])))
+    return packed_matmul(xa, qt, backend=backend, interpret=interpret)

@@ -73,6 +73,12 @@ class KernelSpec:
     # Tunable kernels must accept a ``tiles=`` keyword (TileConfig).
     tunable: Optional[Any] = None
     layout: str = LAYOUT_GEMM  # "gemm" | "im2col_fused"
+    # True when the kernel consumes extra QTensor payload keys beyond
+    # the mode's bit planes (e.g. the indexed backend's pack-time
+    # segment indices): dispatch then passes ``payload=qt.payload`` so
+    # the kernel can zero-copy stored derived data, falling back to an
+    # exact in-trace derivation when the keys are absent.
+    payload_aware: bool = False
 
     @property
     def key(self) -> Tuple[QuantMode, str, bool, str]:
@@ -84,7 +90,8 @@ _REGISTRY: Dict[Tuple[QuantMode, str, bool, str], KernelSpec] = {}
 
 def register(mode: QuantMode, backend: str, *, fused: bool,
              epilogue: str, compute: str, description: str = "",
-             tunable: Optional[Any] = None, layout: str = LAYOUT_GEMM):
+             tunable: Optional[Any] = None, layout: str = LAYOUT_GEMM,
+             payload_aware: bool = False):
     """Decorator: register ``fn`` as THE kernel for (mode, backend,
     fused, layout).  Re-registration overwrites (lets tests/backends
     shadow an entry)."""
@@ -93,7 +100,7 @@ def register(mode: QuantMode, backend: str, *, fused: bool,
         spec = KernelSpec(mode=mode, backend=backend, fused=fused, fn=fn,
                           epilogue=epilogue, compute=compute,
                           description=description, tunable=tunable,
-                          layout=layout)
+                          layout=layout, payload_aware=payload_aware)
         _REGISTRY[spec.key] = spec
         return fn
 

@@ -153,7 +153,7 @@ def _qkv(params, x, cfg: ModelConfig, hl: HeadLayout, positions,
          policy: QuantPolicy):
     b, s, _ = x.shape
     dh = cfg.head_dim_
-    mode, backend = policy.attn_proj, policy.backend
+    mode, backend = policy.attn_proj, policy.backend_for("attn_proj")
     # Keep the projection INPUT sequence-sharded: the partitioner would
     # otherwise all-gather the (B,S,D) hidden (2 GiB at chameleon
     # prefill) where gathering the projected q/k/v (head-sharded, 67 MiB)
@@ -235,7 +235,7 @@ def attention(params, x, positions, cfg: ModelConfig, layout: ShardLayout,
                                   cap=cfg.attn_logit_softcap, dh=dh))
     out = jnp.concatenate(outs, axis=1).astype(x.dtype)
     y = project(params["wo"], out.reshape(b, s, hl.hp * dh),
-                policy.attn_proj, policy.backend)
+                policy.attn_proj, policy.backend_for("attn_proj"))
 
     new_cache = None
     if cache_update is not None:
@@ -349,7 +349,7 @@ def decode_attention(params, x, cfg: ModelConfig, layout: ShardLayout,
         out = jnp.einsum("bkgl,blkd->bkgd", probs.astype(nv.dtype), nv,
                          preferred_element_type=jnp.float32)
     out = out.reshape(b, 1, hl.hp * dh).astype(x.dtype)
-    y = project(params["wo"], out, policy.attn_proj, policy.backend)
+    y = project(params["wo"], out, policy.attn_proj, policy.backend_for("attn_proj"))
     return y, new_cache
 
 
@@ -406,5 +406,5 @@ def paged_attention_step(params, x, cfg: ModelConfig, layout: ShardLayout,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgsl,blkd->bskgd", probs, vd.astype(jnp.float32))
     out = out.reshape(b, s, hl.hp * dh).astype(x.dtype)
-    y = project(params["wo"], out, policy.attn_proj, policy.backend)
+    y = project(params["wo"], out, policy.attn_proj, policy.backend_for("attn_proj"))
     return y, entry

@@ -27,7 +27,7 @@ def init_ffn(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Dict[str, Any]:
 
 def ffn(params: Dict[str, Any], x: jnp.ndarray, policy: QuantPolicy,
         activation=jax.nn.silu) -> jnp.ndarray:
-    mode, backend = policy.ffn_proj, policy.backend
+    mode, backend = policy.ffn_proj, policy.backend_for("ffn_proj")
     g = project(params["gate"], x, mode, backend)
     u = project(params["up"], x, mode, backend)
     h = (activation(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)

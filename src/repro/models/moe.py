@@ -129,7 +129,7 @@ def moe_ffn(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
     # are huge and batch sharding is the right call.
     tok_axis = None if s == 1 else "batch"
     h_in = sharding.constrain(h_in, ("expert", tok_axis, None))
-    mode, backend = policy.ffn_proj, policy.backend
+    mode, backend = policy.ffn_proj, policy.backend_for("ffn_proj")
     g = _expert_matmul(params["gate"], h_in, mode, backend)
     u = _expert_matmul(params["up"], h_in, mode, backend)
     h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)

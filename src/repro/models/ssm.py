@@ -91,7 +91,7 @@ def ssm_forward(params, x: jnp.ndarray, cfg: ModelConfig,
     q = min(cfg.ssm_chunk, s)
     assert s % q == 0, f"seq {s} must be a multiple of ssm_chunk {q}"
     nc = s // q
-    mode, backend = policy.ssm_proj, policy.backend
+    mode, backend = policy.ssm_proj, policy.backend_for("ssm_proj")
 
     zxbcdt = project(params["in_proj"], x, mode, backend)
     z, xbc_raw, dt = _split_proj(zxbcdt, cfg)
@@ -182,7 +182,7 @@ def ssm_decode(params, x: jnp.ndarray, cfg: ModelConfig,
     b, s1, d = x.shape
     din, g, n, p, h, conv_dim = _dims(cfg)
     hg = h // g
-    mode, backend = policy.ssm_proj, policy.backend
+    mode, backend = policy.ssm_proj, policy.backend_for("ssm_proj")
 
     zxbcdt = project(params["in_proj"], x, mode, backend)
     z, xbc, dt = _split_proj(zxbcdt[:, 0], cfg)                    # (B, ...)

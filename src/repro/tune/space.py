@@ -38,7 +38,8 @@ from typing import List, Optional, Tuple
 from repro.kernels._matmul_common import TileConfig, ceil_to
 
 __all__ = ["TuningSpace", "PALLAS_SPACE", "XLA_SPACE", "CONV_PALLAS_SPACE",
-           "DENSE_SPACE", "CONV_DENSE_SPACE", "words_for"]
+           "DENSE_SPACE", "CONV_DENSE_SPACE", "INDEXED_SPACE",
+           "AFFINE_SPACE", "words_for"]
 
 _SUBLANE = 8      # f32 sublane multiple (second-to-last dim)
 _LANE = 128       # lane multiple (last dim)
@@ -54,16 +55,19 @@ class TuningSpace:
     """Candidate axes for one kernel's blocking.
 
     ``kind`` selects the normalization semantics: ``"pallas"`` kernels
-    honour all four axes, ``"xla"`` kernels only ``word_chunk``.
+    honour all four axes, ``"xla"`` kernels only ``word_chunk``, and
+    ``"indexed"`` kernels reinterpret ``block_kw`` as the segment width
+    in *bits* (2/4/8) and ``word_chunk`` as the segments consumed per
+    scan step (kernels/indexed_matmul.py).
     """
-    kind: str = "pallas"                               # "pallas" | "xla"
+    kind: str = "pallas"                     # "pallas" | "xla" | "indexed"
     block_m: Tuple[int, ...] = (8, 32, 128)
     block_n: Tuple[int, ...] = (128, 256)
     block_kw: Tuple[int, ...] = (128, 256, 512)
     word_chunk: Tuple[int, ...] = (4, 8, 16)
 
     def __post_init__(self):
-        if self.kind not in ("pallas", "xla"):
+        if self.kind not in ("pallas", "xla", "indexed"):
             raise ValueError(f"unknown TuningSpace kind {self.kind!r}")
         for name in ("block_m", "block_n", "block_kw", "word_chunk"):
             vals = getattr(self, name)
@@ -97,6 +101,17 @@ class TuningSpace:
             return TileConfig(block_m=d.block_m, block_n=d.block_n,
                               block_kw=d.block_kw,
                               word_chunk=min(tc.word_chunk, kw))
+        if self.kind == "indexed":
+            # block_kw carries the segment width b (largest supported
+            # width <= the raw value, so DEFAULT_TILES entries land on
+            # b=8); word_chunk is segments per scan step, clamped to
+            # the padded segment count like the xla word clamp.
+            d = TileConfig()
+            b = next((c for c in (8, 4, 2) if c <= tc.block_kw), 2)
+            nseg = kw * (32 // b)
+            return TileConfig(block_m=d.block_m, block_n=d.block_n,
+                              block_kw=b,
+                              word_chunk=min(tc.word_chunk, nseg))
         wc = tc.word_chunk
         bkw = ceil_to(min(tc.block_kw, max(wc, kw)), wc)
         bm = min(tc.block_m, ceil_to(m, _SUBLANE))
@@ -123,11 +138,12 @@ class TuningSpace:
         """
         out: List[TileConfig] = [default]
         seen = set()
-        if self.kind == "xla" or self.normalize(default, m, n, k,
-                                                kw) == default:
+        if self.kind in ("xla", "indexed") or self.normalize(
+                default, m, n, k, kw) == default:
             # the normalized form executes identically to the raw
-            # default (xla clamps word_chunk internally; pallas only
-            # when normalization was a no-op) — don't measure it twice
+            # default (xla/indexed kernels self-normalize internally;
+            # pallas only when normalization was a no-op) — don't
+            # measure it twice
             seen.add(self.normalize(default, m, n, k, kw))
         for bm, bn, bkw, wc in itertools.product(
                 self.block_m, self.block_n, self.block_kw,
@@ -170,6 +186,25 @@ DENSE_SPACE = TuningSpace(kind="pallas",
                           block_n=(128, 256),
                           block_kw=(8, 32, 128),
                           word_chunk=(4, 8))
+
+# Indexed-redundancy backend (kernels/indexed_matmul.py): block_kw is
+# the segment width in bits (2**b subset-sum slots per table, more
+# columns amortized per table as b grows), word_chunk the segments per
+# scan step (the (m, n, chunk) gather working set).  The block axes are
+# single-candidate — the gather path has no m/n tiling of its own.
+INDEXED_SPACE = TuningSpace(kind="indexed",
+                            block_m=(8,), block_n=(128,),
+                            block_kw=(2, 4, 8),
+                            word_chunk=(8, 16, 32))
+
+# Affine u8/u4 registry cells (ops.int8/int4_affine_matmul cores): the
+# kernels have no externally tunable blocking (XLA / the Pallas int
+# kernels pick their own tiling), but every fused registry entry
+# declares a space so the tuner sweep and the no-opt-out invariant stay
+# closed — one candidate, the default, which wins its own bake-off.
+AFFINE_SPACE = TuningSpace(kind="xla",
+                           block_m=(128,), block_n=(128,),
+                           block_kw=(256,), word_chunk=(8,))
 
 # The dense fused-im2col conv kernel tiles only the (patch-row, cout)
 # grid — the whole positional word axis of a B tile unpacks beside the

@@ -61,6 +61,26 @@ def test_dense_families_extracted_gated_and_capped():
     assert m["dense_fused/tnn"] == 1.6
     assert m["dense_crossover/tnn/m16n128k256"] == 3.0
     assert m["conv_dense/8x8x128->256/tnn"] == 1.3
+
+
+def test_indexed_family_extracted_gated_and_capped():
+    doc = _results()
+    doc["indexed"] = {"tnn/m16n128k256": {
+        "t_popcount": 3e-3, "t_indexed": 2e-3, "t_dense": 1e-3,
+        "speedup": 1.5}}
+    m = extract_metrics(doc)
+    assert m["indexed/tnn/m16n128k256"] == 1.5
+    # a collapse of the indexed kernel (ratio drop) fails the gate ...
+    doc_bad = _results()
+    doc_bad["indexed"] = {"tnn/m16n128k256": {"speedup": 1.5 * 0.5}}
+    regs, _ = compare(doc, doc_bad, 0.25)
+    assert len(regs) == 1 and "indexed/tnn/m16n128k256" in regs[0]
+    # ... a missing metric too (dropped bench = coverage regression)
+    regs, _ = compare(doc, _results(), 0.25)
+    assert any("indexed/tnn/m16n128k256" in r for r in regs)
+    # merge-baseline: cross-kernel ratio caps at 1.0, no margin demanded
+    merged = extract_metrics(merge_baseline([doc]))
+    assert merged["indexed/tnn/m16n128k256"] == BASELINE_CAPS["indexed"] == 1.0
     # regression in the dense family fails the gate
     regs, _ = compare(_dense_results(), _dense_results(fused=1.6 * 0.6),
                       0.25)

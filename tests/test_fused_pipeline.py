@@ -25,8 +25,16 @@ from repro.kernels.bnn_matmul import bnn_matmul_fused_pallas
 from repro.kernels.tnn_matmul import tnn_matmul_fused_pallas
 from repro.kernels.tbn_matmul import tbn_matmul_fused_pallas
 
-MODES = registry.modes()                       # every mode with a kernel
-BACKENDS = registry.backends()                 # every registered backend
+# Enumerated FROM the registry so new cells are swept automatically —
+# filtered to the popcount family (the affine u8/u4 cells have their own
+# equivalence tests below and in test_indexed_matmul.py).
+MODES = [m for m in registry.modes() if m.is_lowbit]
+LOWBIT_PAIRS = sorted({(s.mode, s.backend)
+                       for s in registry.available(fused=True,
+                                                   layout=registry.LAYOUT_GEMM)
+                       if s.mode.is_lowbit},
+                      key=lambda p: (p[0].value, p[1]))
+BACKENDS = sorted({b for _, b in LOWBIT_PAIRS})
 # k not a multiple of 32; m/n away from block multiples; plus an aligned
 # control and a shape crossing the default pallas block boundary.
 SHAPES = [
@@ -40,9 +48,18 @@ SHAPES = [
 
 def test_registry_covers_paper_modes():
     assert set(MODES) == {QuantMode.BNN, QuantMode.TNN, QuantMode.TBN}
-    assert set(BACKENDS) == {"pallas", "xla", "dense"}
+    assert set(BACKENDS) == {"pallas", "xla", "dense", "indexed"}
     for m in MODES:
         for b in BACKENDS:
+            for fused in (False, True):
+                spec = registry.lookup(m, b, fused=fused)
+                assert spec.fn is not None and spec.compute
+    # The affine u8/u4 modes live in the SAME registry now (xla +
+    # pallas cells, fused and unfused) — one table for every quantized
+    # matmul the repo ships.
+    assert {QuantMode.INT8, QuantMode.INT4} <= set(registry.modes())
+    for m in (QuantMode.INT8, QuantMode.INT4):
+        for b in ("xla", "pallas"):
             for fused in (False, True):
                 spec = registry.lookup(m, b, fused=fused)
                 assert spec.fn is not None and spec.compute
@@ -57,8 +74,8 @@ def _unfused_oracle(x, qt, bias=None):
     return y
 
 
-@pytest.mark.parametrize("mode", MODES)
-@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode,backend", LOWBIT_PAIRS,
+                         ids=[f"{m.value}-{b}" for m, b in LOWBIT_PAIRS])
 @pytest.mark.parametrize("shape", SHAPES)
 def test_fused_matches_unfused(mode, backend, shape, rng):
     m, k, n = shape
@@ -153,7 +170,7 @@ def test_qmm_rejects_bad_inputs(rng):
     x = jax.random.normal(rng, (4, 8))
     with pytest.raises(TypeError):
         ops.qmm(x, {"w": x})                  # not a QTensor
-    with pytest.raises(ValueError):
+    with pytest.warns(DeprecationWarning), pytest.raises(ValueError):
         ops.fused_qmm(x, {"w": x}, QuantMode.F32)   # legacy non-lowbit
     qt = ops.pack_weights(jnp.ones((16, 4), jnp.float32), QuantMode.BNN)
     with pytest.raises(ValueError):
@@ -214,8 +231,13 @@ def test_fused_single_dispatch_contains_scale():
 
 
 def test_legacy_fused_qmm_shim_matches_qmm(rng):
-    """The pre-QTensor entry point (legacy dict + explicit mode) must
+    """The retired pre-QTensor entry point must warn (one-release
+    deprecation window), stay un-exported from repro.kernels, and still
     produce bit-identical results through the shim."""
+    import repro.kernels as K
+
+    assert "fused_qmm" not in K.__all__ and not hasattr(K, "fused_qmm")
+    assert "fused_qmm" not in ops.__all__
     k1, k2 = jax.random.split(rng)
     x = jax.random.normal(k1, (5, 40), jnp.float32)
     w = jax.random.normal(k2, (40, 6), jnp.float32)
@@ -224,5 +246,6 @@ def test_legacy_fused_qmm_shim_matches_qmm(rng):
         legacy = qt.to_legacy_dict()
         assert isinstance(legacy, dict) and "scale" in legacy
         y_new = np.asarray(ops.qmm(x, qt, backend="xla"))
-        y_old = np.asarray(ops.fused_qmm(x, legacy, mode, backend="xla"))
+        with pytest.warns(DeprecationWarning, match="fused_qmm is deprecated"):
+            y_old = np.asarray(ops.fused_qmm(x, legacy, mode, backend="xla"))
         np.testing.assert_array_equal(y_new, y_old)

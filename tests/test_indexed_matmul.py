@@ -1,0 +1,366 @@
+"""Indexed-redundancy backend (kernels/indexed_matmul.py) + the one-
+registry quantized API.
+
+The RSR segment-index kernels must be bit-exact with the popcount
+oracle — same int32 core results unfused, bit-identical float32 through
+the fused eq. (2) epilogue — across every mode, on odd shapes, whether
+the segment indices come from the pack-time payload or the in-trace
+derivation.  The affine u8/u4 modes now ride the same registry through
+``ops.qmm``, and ``core/policy.py`` can assign any registered (mode,
+backend) cell per projection class.
+"""
+
+import importlib
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding as enc
+from repro.core import quantize as q
+from repro.core.policy import POLICIES, QuantPolicy
+from repro.kernels import ops, registry
+
+# The facade re-exports the ``indexed_matmul`` *function*, shadowing the
+# submodule attribute of the same name — load the module itself.
+ixm = importlib.import_module("repro.kernels.indexed_matmul")
+from repro.kernels._matmul_common import DEFAULT_TILES, TileConfig
+from repro.kernels.ops import QuantMode
+from repro.kernels.qtensor import QTensor
+from repro.tune import cache as plan_cache
+from repro.tune import tuner
+
+MODES = [QuantMode.BNN, QuantMode.TNN, QuantMode.TBN]
+# k not a word multiple, m/n away from block multiples, one aligned
+# control — (m, k, n).
+SHAPES = [(5, 33, 7), (16, 95, 9), (37, 129, 24), (8, 256, 128)]
+
+
+@pytest.fixture
+def tcache(tmp_path):
+    prev_env = os.environ.get(plan_cache.ENV_CACHE_PATH)
+    cache = plan_cache.set_cache_path(str(tmp_path / "plans.json"))
+    yield cache
+    plan_cache.set_policy("off")
+    plan_cache.set_cache_path(prev_env)
+
+
+def _random_lowbit_pair(rng, mode, m, k, n):
+    k1, k2 = jax.random.split(rng)
+    a = (enc.random_binary(k1, (m, k)) if mode == QuantMode.BNN
+         else enc.random_ternary(k1, (m, k)))
+    b = (enc.random_ternary(k2, (k, n)) if mode == QuantMode.TNN
+         else enc.random_binary(k2, (k, n)))
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the popcount oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_unfused_bit_exact_vs_popcount(mode, shape, rng):
+    m, k, n = shape
+    a, b = _random_lowbit_pair(rng, mode, m, k, n)
+    got = np.asarray(ops.lowbit_matmul(a, b, mode, backend="indexed"))
+    want = np.asarray(ops.lowbit_matmul(a, b, mode, backend="xla"))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        got, np.asarray(jnp.dot(a, b), np.int64).astype(np.int32))
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_bit_identical_vs_popcount(mode, shape, rng):
+    """Fused qmm: identical int core + same epilogue multiply order ->
+    bit-identical float32, not merely allclose."""
+    m, k, n = shape
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    qt = ops.pack_weights(jax.random.normal(k2, (k, n), jnp.float32), mode)
+    got = np.asarray(ops.qmm(x, qt, backend="indexed"))
+    want = np.asarray(ops.qmm(x, qt, backend="xla"))
+    assert got.dtype == np.float32
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("seg_bits", ixm.SEG_BITS_CHOICES)
+@pytest.mark.parametrize("seg_chunk", [1, 3, 64])
+def test_core_every_segment_width_and_chunk(mode, seg_bits, seg_chunk, rng):
+    """Every (b, chunk) combination — including chunks that do not
+    divide the segment count, exercising the scan-pad path — reduces to
+    the same integers."""
+    m, k, n = 6, 70, 11                       # kw = 3 words, 24/18/12 segs
+    a, b = _random_lowbit_pair(rng, mode, m, k, n)
+    if mode == QuantMode.BNN:
+        a_pl, b_pl = (enc.pack_binary(a),), (enc.pack_binary(b.T),)
+    elif mode == QuantMode.TNN:
+        a_pl, b_pl = enc.pack_ternary(a), enc.pack_ternary(b.T)
+    else:
+        a_pl, b_pl = enc.pack_ternary(a), (enc.pack_binary(b.T),)
+    got = np.asarray(ixm.indexed_matmul(mode, a_pl, b_pl, k,
+                                        seg_bits=seg_bits,
+                                        seg_chunk=seg_chunk))
+    np.testing.assert_array_equal(
+        got, np.asarray(jnp.dot(a, b), np.int64).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# pack-time payload: round-trip, legacy filter, stored == derived
+# ---------------------------------------------------------------------------
+
+def test_segment_indices_shift_mask():
+    """The index of segment s of word w is (word >> s*b) & (2^b - 1)."""
+    words = jnp.array([[0xDEADBEEF, 0x01234567]], jnp.uint32)
+    idx8 = np.asarray(ixm.segment_indices(words, 8))
+    np.testing.assert_array_equal(
+        idx8, [[0xEF, 0xBE, 0xAD, 0xDE, 0x67, 0x45, 0x23, 0x01]])
+    idx4 = np.asarray(ixm.segment_indices(words, 4))
+    assert idx4.shape == (1, 16) and idx4.dtype == np.uint8
+    assert list(idx4[0, :8]) == [0xF, 0xE, 0xE, 0xB, 0xD, 0xA, 0xE, 0xD]
+    idx2 = ixm.segment_indices(words, 2)
+    assert idx2.shape == (1, 32)
+    with pytest.raises(ValueError, match="seg_bits"):
+        ixm.segment_indices(words, 16)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("seg_bits", ixm.SEG_BITS_CHOICES)
+def test_payload_roundtrip_and_legacy_filter(mode, seg_bits, rng):
+    w = jax.random.normal(rng, (70, 9), jnp.float32)
+    qt = ops.pack_weights(w, mode, indexed_bits=seg_bits)
+    keys = ixm.indexed_payload_keys(mode, seg_bits)
+    spw = 32 // seg_bits
+    for kk in keys:
+        plane = qt.payload[kk]
+        assert plane.shape == (9, 3 * spw) and plane.dtype == jnp.uint8
+    # derived data: the legacy dict filters the idx planes, and the
+    # round-tripped container (which re-derives in-trace) stays exact
+    legacy = qt.to_legacy_dict()
+    assert not any(kk in legacy for kk in keys)
+    back = QTensor.from_legacy_dict(legacy, mode, k_valid=70)
+    x = jax.random.normal(jax.random.PRNGKey(7), (5, 70), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.qmm(x, qt, backend="indexed")),
+        np.asarray(ops.qmm(x, back, backend="indexed")))
+
+
+def test_stored_payload_zero_copy_in_jaxpr(tcache):
+    """When the pack-time indices match the dispatched segment width the
+    kernel consumes them zero-copy: the traced computation carries fewer
+    shift/mask derivations (only the activation unpack shifts remain —
+    the weight-side segment derivation is gone) and the results stay
+    bit-identical with the derived path."""
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((64, 8)),
+                    jnp.float32)
+    x = jnp.ones((4, 64), jnp.float32)
+    with_idx = ops.pack_weights(w, QuantMode.TNN, indexed_bits=8)
+    without = ops.pack_weights(w, QuantMode.TNN)
+
+    def shifts(qt):
+        return str(jax.make_jaxpr(
+            lambda x: ops.qmm(x, qt, backend="indexed"))(x)
+        ).count("shift_right_logical")
+
+    assert 0 < shifts(with_idx) < shifts(without)
+    np.testing.assert_array_equal(
+        np.asarray(ops.qmm(x, with_idx, backend="indexed")),
+        np.asarray(ops.qmm(x, without, backend="indexed")))
+
+
+def test_payload_keys_reject_non_bitplane_modes():
+    with pytest.raises(ValueError, match="bit-plane"):
+        ixm.indexed_payload_keys(QuantMode.INT8, 8)
+    with pytest.raises(ValueError, match="bit-plane"):
+        ixm.add_indexed_payload(
+            ops.pack_weights(jnp.ones((16, 4), jnp.float32),
+                             QuantMode.INT8))
+
+
+def test_seg_bits_for_tracks_block_kw():
+    assert ixm.seg_bits_for(None) == 8
+    assert ixm.seg_bits_for(TileConfig()) == 8            # default >= 8
+    assert ixm.seg_bits_for(TileConfig(block_kw=4)) == 4
+    assert ixm.seg_bits_for(TileConfig(block_kw=3)) == 2
+    assert ixm.seg_bits_for(TileConfig(block_kw=1)) == 2  # floor
+
+
+# ---------------------------------------------------------------------------
+# tuner integration: a registry cell like any other
+# ---------------------------------------------------------------------------
+
+def test_indexed_registered_and_tunable():
+    for mode in MODES:
+        for fused in (False, True):
+            spec = registry.lookup(mode, "indexed", fused=fused)
+            assert spec.payload_aware and spec.compute == "vpu-indexed"
+            assert spec.tunable is not None
+            assert spec.tunable.kind == "indexed"
+
+
+def test_indexed_space_normalizes_block_kw_to_seg_bits():
+    from repro.tune.space import INDEXED_SPACE
+
+    cands = INDEXED_SPACE.candidates(8, 128, 256,
+                                     default=DEFAULT_TILES["tnn"])
+    assert cands[0] == DEFAULT_TILES["tnn"]               # raw default first
+    for tc in cands[1:]:
+        assert tc.block_kw in ixm.SEG_BITS_CHOICES
+        assert tc.word_chunk <= 8 * (32 // tc.block_kw)   # kw=8 words
+    # all three segment widths survive normalization as candidates
+    assert {tc.block_kw for tc in cands[1:]} == set(ixm.SEG_BITS_CHOICES)
+
+
+def test_dispatch_consults_tuned_plan(tcache):
+    """tiles=None dispatch must lower exactly like the tuned blocking in
+    the plan cache — and differently from the default (the segment width
+    changes the scan structure)."""
+    mode, m, n, k = QuantMode.TNN, 16, 32, 512
+    tuned = TileConfig(block_m=8, block_n=128, block_kw=2, word_chunk=16)
+    tcache.put(plan_cache.Plan(
+        mode=mode, backend="indexed", fused=True,
+        device_kind=plan_cache.device_kind(),
+        m_bucket=plan_cache.bucket_m(m), n=n, k=k, tiles=tuned,
+        source="tuned"))
+    spec = registry.lookup(mode, "indexed", fused=True)
+    a_pl, b_pl, row, col = tuner._make_problem(mode, m, n, k, seed=0)
+
+    def jx(tiles):
+        return str(jax.make_jaxpr(
+            lambda: spec.fn(a_pl, b_pl, k, row, col, None,
+                            tiles=tiles))())
+
+    assert jx(None) == jx(tuned)
+    assert jx(None) != jx(DEFAULT_TILES["tnn"])
+
+
+def test_qmm_indexed_single_trace_per_shape(rng):
+    """Retrace guard: repeated qmm calls on one packed QTensor compile
+    once per shape on the indexed backend too."""
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (137, 10))
+    x = jax.random.normal(k2, (13, 137))
+    for mode in MODES:
+        qt = ops.pack_weights(w, mode, indexed_bits=8)
+        before = ops.qmm_trace_count(mode, "indexed")
+        for _ in range(4):
+            ops.qmm(x, qt, backend="indexed").block_until_ready()
+        # fresh arrays, same shapes AND same payload structure (the
+        # idx8 planes are part of the pytree): still one trace
+        ops.qmm(x + 1.0, ops.pack_weights(w, mode, indexed_bits=8),
+                backend="indexed")
+        assert ops.qmm_trace_count(mode, "indexed") - before == 1, \
+            f"{mode} retraced on the indexed backend"
+
+
+# ---------------------------------------------------------------------------
+# affine u8/u4 through the one registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [QuantMode.INT8, QuantMode.INT4])
+@pytest.mark.parametrize("backend", ["xla", "pallas", "dense", "indexed"])
+def test_affine_qmm_through_registry(mode, backend, rng):
+    """u8/u4 ride ops.qmm + the registry now: the eq. (3) cells register
+    for xla/pallas and every other backend falls back to the reference
+    cell — all backends agree exactly and approximate the float dot."""
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (6, 40), jnp.float32)
+    w = jax.random.normal(k2, (40, 5), jnp.float32)
+    qt = ops.pack_weights(w, mode)
+    got = np.asarray(ops.qmm(x, qt, backend=backend))
+    want = np.asarray(ops.qmm(x, qt, backend="xla"))
+    np.testing.assert_array_equal(got, want)
+    # first-order quantization error bound (same as the affine property
+    # test): k * (0.5 sa (max|w|+1) + 0.5 sb (max|x|+1))
+    sa = float(ops.quantize_activations(x, mode)["scale"])
+    sb = float(qt.scale)
+    bound = 40 * (0.5 * sa * (np.abs(np.asarray(w)).max() + 1)
+                  + 0.5 * sb * (np.abs(np.asarray(x)).max() + 1))
+    assert np.abs(got - np.asarray(x @ w)).max() <= bound
+
+
+@pytest.mark.parametrize("bits,backend", [(8, "xla"), (8, "pallas"),
+                                          (4, "xla"), (4, "pallas")])
+def test_affine_entry_points_route_through_registry(bits, backend, rng):
+    """int8/int4_affine_matmul are thin registry wrappers now — the
+    integer cores must still match the eq. (3) ground truth exactly."""
+    mode = QuantMode.INT8 if bits == 8 else QuantMode.INT4
+    assert registry.has(mode, backend, fused=False)
+    m, k, n = 9, 33, 7
+    k1, k2 = jax.random.split(rng)
+    qa = q.affine_calibrate(jax.random.normal(k1, (m, k)), bits)
+    qb = q.affine_calibrate(jax.random.normal(k2, (k, n)), bits)
+    aq = q.affine_quantize(jax.random.normal(k1, (m, k)), qa)
+    bq = q.affine_quantize(jax.random.normal(k2, (k, n)), qb)
+    fn = ops.int8_affine_matmul if bits == 8 else ops.int4_affine_matmul
+    c = fn(aq, bq, qa.zero_point, qb.zero_point, k, backend=backend)
+    gt = ((np.asarray(aq) - int(qa.zero_point))
+          @ (np.asarray(bq) - int(qb.zero_point)))
+    np.testing.assert_array_equal(np.asarray(c), gt)
+
+
+def test_no_direct_affine_kernel_imports_outside_kernels():
+    """API contract: int4/int8 kernel modules are internal — no consumer
+    outside repro/kernels/ imports them directly, everything routes
+    through ops.qmm / the repro.kernels facade."""
+    import pathlib
+    import re
+
+    src = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+    offenders = []
+    for py in src.rglob("*.py"):
+        rel = py.relative_to(src)
+        if rel.parts[0] == "kernels":
+            continue
+        text = py.read_text()
+        if re.search(r"kernels\.(int4_matmul|int8_matmul)\b", text) or \
+                re.search(r"\bfused_qmm\b", text):
+            offenders.append(str(rel))
+    assert offenders == []
+
+
+# ---------------------------------------------------------------------------
+# policy: any registered (mode, backend) assignable per layer class
+# ---------------------------------------------------------------------------
+
+def test_policy_backend_for_overrides_and_validates():
+    p = QuantPolicy(name="t", attn_proj=QuantMode.TNN,
+                    ffn_proj=QuantMode.TNN, backend="xla",
+                    ffn_backend="indexed")
+    assert p.backend_for("attn_proj") == "xla"
+    assert p.backend_for("ffn_proj") == "indexed"
+    assert p.validate() is p
+    bad = QuantPolicy(name="b", ffn_proj=QuantMode.BNN,
+                      ffn_backend="neon")
+    with pytest.raises(KeyError, match="neon"):
+        bad.validate()
+    # float classes never dispatch through the registry: any backend OK
+    assert QuantPolicy(name="f", head_backend="neon").validate()
+
+
+def test_builtin_policies_cover_new_backends():
+    assert POLICIES["tnn_indexed"].backend == "indexed"
+    assert POLICIES["tnn_mixed"].backend_for("ffn_proj") == "indexed"
+    assert POLICIES["tnn_mixed"].backend_for("attn_proj") == "xla"
+    assert POLICIES["int8"].for_class("ffn_proj") == QuantMode.INT8
+    for p in POLICIES.values():
+        assert p.validate() is p
+
+
+def test_qlinear_rides_policy_backend(rng):
+    """A QuantLinear built with backend="indexed" serves packed inference
+    through the indexed cell with QAT-identical numerics."""
+    from repro.core.qlinear import QuantLinear
+
+    layer = QuantLinear(64, 12, mode=QuantMode.TNN, use_bias=True,
+                        backend="indexed")
+    params = layer.init(rng)
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 4, 64))
+    y_qat = layer.apply(params, x)
+    y_packed = layer.apply_packed(layer.pack(params), x)
+    np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_qat),
+                               rtol=1e-5, atol=1e-5)

@@ -7,9 +7,12 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quantize as q
-from repro.kernels import ops, ref
-from repro.kernels.int4_matmul import (
-    pack_nibbles_rows, pack_nibbles_cols, int4_matmul_pallas,
+from repro.kernels import (
+    int4_matmul_pallas,
+    ops,
+    pack_nibbles_cols,
+    pack_nibbles_rows,
+    ref,
 )
 
 

@@ -91,13 +91,22 @@ def test_registry_declares_tunables():
     for mode in MODES:
         for backend, fused in (("pallas", True), ("pallas", False),
                                ("xla", True), ("xla", False),
-                               ("dense", True)):
+                               ("dense", True),
+                               ("indexed", True), ("indexed", False)):
             assert registry.lookup(mode, backend,
                                    fused=fused).tunable is not None
         # only the materializing dense oracle (unfused) has no blocking
         assert registry.lookup(mode, "dense", fused=False).tunable is None
+    # affine cells: every fused entry declares a space (the no-opt-out
+    # invariant); the unfused integer cores have no tunable blocking
+    for mode in (QuantMode.INT8, QuantMode.INT4):
+        for backend in ("xla", "pallas"):
+            assert registry.lookup(mode, backend,
+                                   fused=True).tunable is not None
+            assert registry.lookup(mode, backend,
+                                   fused=False).tunable is None
     table = registry.capability_table()
-    assert "pallas" in table and "tunable" in table
+    assert "pallas" in table and "indexed" in table and "tunable" in table
 
 
 # ---------------------------------------------------------------------------
