@@ -1,0 +1,170 @@
+"""Resilience benchmark family: two deterministic CI-gated indicators
+(docs/resilience.md), following the bench_obs 0/1-indicator pattern.
+
+Both gated metrics are decision outcomes encoded in the ``speedup``
+field the perf families use (baseline 1.0, floor 0.75 — any violation
+scores 0.0 and trips the gate), so they cannot flake on a noisy runner:
+
+* ``fallback_dispatch`` — a seeded ``kernel.compile`` fault against the
+  pallas backend must degrade ``ops.qmm`` to the xla kernel with output
+  ``array_equal`` to a direct xla dispatch, and the degradation
+  decision must be cached (exactly one fallback for repeated calls).
+  Scores 0.0 when the chain drops results, diverges numerically, or
+  re-attempts the dead backend per call.
+* ``chaos_completion`` — the seeded multi-point fault storm from
+  tests/test_resilience.py (page exhaustion, NaN logits, device loss,
+  stalls) over a 16-request chunked-prefill engine: every request must
+  resolve with a definite status, the queue must drain, and the page
+  pool must reconcile to zero.  Scores 0.0 on any hang, lost request,
+  or leaked page.
+
+The ``report`` subsection (per-point hit/fire counts of the storm)
+carries no "speedup" keys and stays ungated — run-over-run diffable
+context for the two gates.
+
+    PYTHONPATH=src python -m benchmarks.bench_resilience [--json out.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFINITE = {"ok", "expired", "cancelled", "rejected", "numeric_error",
+            "error"}
+STORM = ("pages.exhausted@1+3+6;logits.nan@0;device.loss@2;step.stall@1;"
+         "seed=1234;stall=0.002")
+
+
+def _fallback_dispatch() -> dict:
+    import numpy as np
+    import warnings
+
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.modes import QuantMode
+    from repro.kernels.qtensor import QTensor
+    from repro.resilience import faults
+
+    rng = np.random.default_rng(11)
+    qt = QTensor.from_dense(
+        jnp.asarray(rng.standard_normal((96, 32)).astype(np.float32)),
+        QuantMode.TNN)
+    x = jnp.asarray(rng.standard_normal((5, 96)).astype(np.float32))
+    want = np.asarray(ops.qmm(x, qt, backend="xla"))
+
+    prev = faults.active()
+    ops.reset_fallbacks()
+    faults.arm(faults.parse_plan("kernel.compile@0?backend=pallas"))
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            got = np.asarray(ops.qmm(x, qt, backend="pallas"))
+            again = np.asarray(ops.qmm(x, qt, backend="pallas"))
+        decided = ops.fallback_decisions().get(
+            ("qmm", QuantMode.TNN, "pallas"))
+        fires = faults.active().fires["kernel.compile"]
+    finally:
+        faults.disarm()
+        ops.reset_fallbacks()
+        if prev is not None:
+            faults.arm(prev)
+    ok = (np.array_equal(got, want) and np.array_equal(again, want)
+          and decided == "xla" and fires == 1)
+    return {"speedup": 1.0 if ok else 0.0,   # gated indicator (see doc)
+            "decision": str(decided), "injected_fires": int(fires)}
+
+
+def _chaos_completion(quick: bool) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke
+    from repro.models import model as model_mod
+    from repro.models.common import ShardLayout
+    from repro.resilience import faults
+    from repro.serving import Engine, Request, SamplerConfig, ServeConfig
+
+    layout = ShardLayout(tp=1)
+    cfg = get_smoke("tinyllama-1.1b").with_(kv_cache_dtype="tnn2")
+    params = model_mod.init_lm(jax.random.PRNGKey(1234), cfg, layout)
+    scfg = ServeConfig(num_slots=4, max_len=64, prefill_bucket=8,
+                       page_size=8, prefill_chunk=8,
+                       sampler=SamplerConfig(temperature=0.0))
+
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    prev = faults.active()
+    faults.arm(faults.parse_plan(STORM))
+    try:
+        eng = Engine(params, cfg, layout, scfg, seed=0, clock=clock)
+        rng = np.random.default_rng(7)
+        n_req = 8 if quick else 16
+        for uid in range(n_req):
+            plen = [8, 16][uid % 2]
+            eng.submit(Request(uid=uid,
+                               prompt=rng.integers(0, cfg.vocab_size, plen),
+                               max_new_tokens=4))
+        results = eng.run(max_steps=400)
+        report = faults.active().report()
+    finally:
+        faults.disarm()
+        if prev is not None:
+            faults.arm(prev)
+
+    resolved = sorted(results) == list(range(n_req))
+    definite = {r.status for r in results.values()} <= DEFINITE
+    drained = (not eng._sched.queue
+               and all(u == -1 for u in eng._sched.slot_uid))
+    pages_zero = all(s["used"] == 0 and s["free"] == s["total"]
+                     for s in eng.page_stats())
+    eng.close()
+    ok = resolved and definite and drained and pages_zero
+    return {"speedup": 1.0 if ok else 0.0,   # gated indicator
+            "resolved": bool(resolved), "definite": bool(definite),
+            "drained": bool(drained), "pages_zero": bool(pages_zero),
+            "statuses": sorted({r.status for r in results.values()}),
+            "report": report}
+
+
+def run(quick: bool = True) -> dict:
+    """Return the ``resilience`` section for BENCH_results.json."""
+    results = {}
+
+    f = _fallback_dispatch()
+    results["fallback_dispatch"] = f
+    print(f"  kernel fallback dispatch: decision={f['decision']} "
+          f"fires={f['injected_fires']} -> "
+          f"{'PASS' if f['speedup'] else 'FAIL'} [gated]")
+
+    c = _chaos_completion(quick)
+    results["chaos_completion"] = c
+    print(f"  chaos storm completion: statuses={c['statuses']} "
+          f"drained={c['drained']} pages_zero={c['pages_zero']} -> "
+          f"{'PASS' if c['speedup'] else 'FAIL'} [gated]")
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.bench_resilience", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    res = run(quick=not args.full)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -70,7 +70,12 @@ BASELINE_CAPS = {"fused": 1.15, "conv": 1.15, "tuned": 1.0,
                  # tune-cache second-run hit and steady-state decode
                  # retrace-free — pass IS 1.0, so the cap is the value
                  # and any violation (0.0) trips the gate
-                 "obs": 1.0}
+                 "obs": 1.0,
+                 # deterministic 0/1 indicators
+                 # (benchmarks/bench_resilience.py): kernel fallback
+                 # bit-identity and chaos-storm completion — pass IS
+                 # 1.0, any violation (0.0) trips the gate
+                 "resilience": 1.0}
 
 
 def extract_metrics(results: Dict) -> Dict[str, float]:
@@ -100,12 +105,16 @@ def extract_metrics(results: Dict) -> Dict[str, float]:
       second-run hit, steady-state decode retrace-free) — see
       benchmarks/bench_obs.py (its ``counters`` rollup carries no
       "speedup" field and stays ungated);
+    * ``resilience``       — 0/1 chaos/degradation invariants (kernel
+      fallback bit-identity, chaos-storm completion) — see
+      benchmarks/bench_resilience.py (its ``report`` context carries no
+      "speedup" field and stays ungated);
     * ``conv``/``conv_dense`` — fused-im2col vs materializing
       conv2d_packed per (layer, mode), default and dense backends.
     """
     out: Dict[str, float] = {}
     for family in ("fused", "dense_fused", "dense_crossover", "indexed",
-                   "sharded", "serving", "obs"):
+                   "sharded", "serving", "obs", "resilience"):
         for key, d in (results.get(family) or {}).items():
             if isinstance(d, dict) and "speedup" in d:
                 out[f"{family}/{key}"] = float(d["speedup"])
@@ -161,7 +170,7 @@ def _set_metric(doc: Dict, name: str, value: float) -> None:
     """Write one flattened metric name back into a results document."""
     family, rest = name.split("/", 1)
     if family in ("fused", "dense_fused", "dense_crossover", "indexed",
-                  "sharded", "serving", "obs"):
+                  "sharded", "serving", "obs", "resilience"):
         doc[family][rest]["speedup"] = value
     elif family == "tuned":
         doc["tuned_vs_default"][rest]["speedup"] = value

@@ -36,24 +36,24 @@ def main():
 
     results = {}
 
-    print("\n[1/10] Table II analogue — microkernel operation model")
+    print("\n[1/11] Table II analogue — microkernel operation model")
     from benchmarks import bench_microkernel
     results["microkernel"] = bench_microkernel.run()
 
-    print("\n[2/10] Table III analogue — matmul speed-ratio matrix")
+    print("\n[2/11] Table III analogue — matmul speed-ratio matrix")
     from benchmarks import bench_matmul
     results["table3"] = bench_matmul.run(quick=quick)
     results["fused"] = bench_matmul.run_fused(quick=quick)
 
-    print("\n[3/10] Dense-backend MXU fusion (in-VMEM unpack kernels)")
+    print("\n[3/11] Dense-backend MXU fusion (in-VMEM unpack kernels)")
     results["dense_fused"] = bench_matmul.run_dense(quick=quick)
     results["dense_crossover"] = bench_matmul.run_dense_crossover(quick=quick)
 
-    print("\n[4/10] Indexed-redundancy crossover (RSR segment-index "
+    print("\n[4/11] Indexed-redundancy crossover (RSR segment-index "
           "kernels)")
     results["indexed"] = bench_matmul.run_indexed_crossover(quick=quick)
 
-    print("\n[5/10] GeMM-based convolution")
+    print("\n[5/11] GeMM-based convolution")
     from benchmarks import bench_conv
     results["conv"] = bench_conv.run(quick=quick)
     # dense-backend gated columns only (QAT columns are backend-free and
@@ -61,22 +61,26 @@ def main():
     results["conv_dense"] = bench_conv.run(quick=quick, backend="dense",
                                            qat=False)
 
-    print("\n[6/10] Autotuned vs default kernel tiling (repro.tune)")
+    print("\n[6/11] Autotuned vs default kernel tiling (repro.tune)")
     results["tuned_vs_default"] = bench_matmul.run_tuned(quick=quick)
 
-    print("\n[7/10] Sharded qmm — integer-psum reduction at 2/4/8 devices")
+    print("\n[7/11] Sharded qmm — integer-psum reduction at 2/4/8 devices")
     from benchmarks import bench_sharded
     results["sharded"] = bench_sharded.run(quick=quick)
 
-    print("\n[8/10] Serving — paged ternary KV cache (HBM ratio + tokens/s)")
+    print("\n[8/11] Serving — paged ternary KV cache (HBM ratio + tokens/s)")
     from benchmarks import bench_serving
     results["serving"] = bench_serving.run(quick=quick)
 
-    print("\n[9/10] Observability — deterministic obs gates (repro.obs)")
+    print("\n[9/11] Observability — deterministic obs gates (repro.obs)")
     from benchmarks import bench_obs
     results["obs"] = bench_obs.run(quick=quick)
 
-    print("\n[10/10] Roofline report (from dry-run artifacts, if present)")
+    print("\n[10/11] Resilience — deterministic chaos/fallback gates")
+    from benchmarks import bench_resilience
+    results["resilience"] = bench_resilience.run(quick=quick)
+
+    print("\n[11/11] Roofline report (from dry-run artifacts, if present)")
     from benchmarks import roofline
     try:
         rows = roofline.run(mesh="pod")

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import enum
 
-__all__ = ["QuantMode", "DEFAULT_BACKEND"]
+__all__ = ["QuantMode", "DEFAULT_BACKEND", "accumulator_bound"]
 
 # Default kernel backend for every dispatch entry point (see ops.py for
 # the backend semantics); lives here so call-signature defaults resolve
@@ -30,3 +30,34 @@ class QuantMode(str, enum.Enum):
     @property
     def is_float(self) -> bool:
         return self in (QuantMode.F32, QuantMode.BF16)
+
+
+def accumulator_bound(mode: QuantMode):
+    """Largest reduction depth k a mode's narrowest registered
+    accumulator holds exactly, or None for the float modes (no integer
+    accumulation).
+
+    The paper's AArch64 kernels accumulate popcounts in 16-bit lanes and
+    the mesh reduction guards its wire dtype per shard
+    (``qmm_mesh.psum_accum_dtype``: int16 while ``2k < 2**15``), but a
+    single-device pack never validated the FULL depth.  The binding
+    bound per mode:
+
+    * low-bit (bnn/tnn/tbn) — the dense backend feeds ±1/0 products to
+      the MXU with float32 accumulation, exact only while every partial
+      sum stays an exact f32 integer: ``|acc| <= 2**24``.
+    * int8 — the affine eq. (3) core dots u8 grids in int32; worst case
+      per element is 255*255, so ``k <= (2**31 - 1) // 255**2`` (33025).
+    * int4 — u4 grids, worst case 15*15 per element.
+
+    Pack time (``QTensor.from_dense`` / ``ops.pack_weights``) rejects a
+    deeper k with a clear error instead of letting a kernel silently
+    wrap/round at inference.
+    """
+    if mode.is_lowbit:
+        return 2**24
+    if mode == QuantMode.INT8:
+        return (2**31 - 1) // (255 * 255)
+    if mode == QuantMode.INT4:
+        return (2**31 - 1) // (15 * 15)
+    return None

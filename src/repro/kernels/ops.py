@@ -58,6 +58,7 @@ from repro.kernels.qtensor import PAYLOAD_KEYS, QTensor
 from repro.tune import cache as tune_cache
 from repro.tune.space import AFFINE_SPACE, PALLAS_SPACE, XLA_SPACE
 from repro import obs
+from repro.resilience import faults
 
 from repro.core import encoding, quantize
 from repro.kernels import ref as kref
@@ -603,6 +604,76 @@ _QMM_DISPATCH_CTR = obs.get_registry().counter(
     labels=("mode", "backend", "layout"))
 
 
+# ---------------------------------------------------------------------------
+# Graceful-degradation fallback chain (docs/resilience.md): when a
+# backend fails to build/lower — or the fault plane injects
+# "kernel.compile" — dispatch walks pallas -> xla -> dense oracle
+# instead of propagating.  The landed decision is cached per
+# (op, mode, requested backend) ~ per KernelSpec, so the hot path never
+# retries a dead backend per call: after the first degradation every
+# subsequent call is one dict lookup straight to the surviving backend.
+# All fallback targets are bit-exact with each other (the tier-1 suite
+# pins fused == unfused == dense-oracle for every low-bit mode), so
+# degrading changes latency, never numerics.
+# ---------------------------------------------------------------------------
+
+_FALLBACK_CTR = obs.get_registry().counter(
+    "repro_kernel_fallback_total",
+    "kernel dispatch degradations by (op, mode, from_backend, "
+    "to_backend); fires once per cached decision, never per call",
+    labels=("op", "mode", "from_backend", "to_backend"))
+
+# (op, mode, requested backend) -> effective backend ("oracle" = the
+# materializing pure-XLA reference path, the chain's last resort).
+_FB_DECISION: Dict[Tuple[str, QuantMode, str], str] = {}
+
+_GEMM_CHAIN = {"pallas": "xla", "dense": "xla", "indexed": "xla",
+               "xla": "oracle"}
+_CONV_CHAIN = {"pallas": "xla", "dense": "xla", "xla": "oracle"}
+_AFFINE_CHAIN = {"pallas": "xla"}   # the xla cell IS the reference
+
+
+def _fallback_next(mode: QuantMode, backend: str, *,
+                   conv: bool = False) -> Optional[str]:
+    """Next backend in the degradation chain, or None (chain exhausted
+    / mode has no chain — float modes never enter one)."""
+    if mode.is_lowbit:
+        chain = _CONV_CHAIN if conv else _GEMM_CHAIN
+    elif mode in (QuantMode.INT8, QuantMode.INT4):
+        chain = _AFFINE_CHAIN
+    else:
+        return None
+    return chain.get(backend)
+
+
+def fallback_decisions() -> Dict[Tuple[str, QuantMode, str], str]:
+    """Snapshot of the cached degradation decisions (tests/triage)."""
+    return dict(_FB_DECISION)
+
+
+def reset_fallbacks() -> None:
+    """Drop every cached degradation decision (tests; or after an
+    operator fixes the underlying backend and wants retries)."""
+    _FB_DECISION.clear()
+
+
+def _note_fallback(op: str, mode: QuantMode, requested: str,
+                   from_b: str, to_b: str, err: Exception) -> None:
+    import warnings
+
+    _FB_DECISION[(op, mode, requested)] = to_b
+    _FALLBACK_CTR.inc(op=op, mode=mode.value, from_backend=from_b,
+                      to_backend=to_b)
+    faults.emit_event("kernel_fallback", op=op, mode=mode.value,
+                      requested=requested, from_backend=from_b,
+                      to_backend=to_b,
+                      error=f"{type(err).__name__}: {err}")
+    warnings.warn(
+        f"{op} backend {from_b!r} failed for mode={mode.value} "
+        f"({type(err).__name__}: {err}); degrading to {to_b!r} and "
+        f"caching the decision (ops.reset_fallbacks() retries)")
+
+
 def qmm_trace_count(mode: QuantMode, backend: str = DEFAULT_BACKEND) -> int:
     """Deprecated read-through alias: use
     ``obs.get_registry().get("repro_qmm_traces_total")`` directly."""
@@ -637,6 +708,26 @@ def _qmm_jit(x, qt: QTensor, backend: str, interpret: bool,
     extra = {"payload": qt.payload} if spec.payload_aware else {}
     return spec.fn(a_pl, _b_planes(qt, mode), k, row, col, b2,
                    interpret=interpret, tiles=tiles, **extra)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _qmm_oracle_jit(x, qt: QTensor, interpret: bool, act_stats=None):
+    """The chain's last resort: the materializing dense oracle kernel
+    ((mode, "dense", fused=False) — unpack the whole payload in HBM,
+    one XLA dot) + the eq. (2) epilogue in plain jnp.  No Pallas, no
+    scan carrying an epilogue — bit-identical to every fused path."""
+    _QMM_TRACE_CTR.inc(mode=qt.mode.value, backend="oracle")  # trace time
+    m, k = x.shape
+    n = qt.out_features
+    mode = qt.mode
+    xa = quantize_activations(x.astype(jnp.float32), mode, stats=act_stats)
+    spec = registry.lookup(mode, "dense", fused=False)
+    a_pl = tuple(xa[kk] for kk in _A_KEYS[mode])
+    acc = spec.fn(a_pl, _b_planes(qt, mode), k, interpret=interpret)
+    row = _as_row_scale(xa["scale"], m)
+    col = _as_col_vec(qt.scale, n)
+    b2 = None if qt.bias is None else _as_col_vec(qt.bias, n)
+    return _scale_epilogue_f32(acc, row, col, b2)
 
 
 def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
@@ -722,9 +813,10 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
         # layers) falls back to the reference cell, preserving the old
         # anything-but-pallas -> reference behavior.
         backend = _affine_backend(qt.mode, backend, fused=True)
+    requested = backend
+    backend = _FB_DECISION.get(("qmm", qt.mode, requested), requested)
     _QMM_DISPATCH_CTR.inc(mode=qt.mode.value, backend=backend,
                           layout=registry.LAYOUT_GEMM)
-    tiles = None
     if qt.is_lowbit:
         from repro.parallel import qmm_mesh, sharding
 
@@ -732,28 +824,47 @@ def qmm(x: jnp.ndarray, qt: QTensor, *, backend: Optional[str] = None,
         if ctx is not None:
             plan = qmm_mesh.shard_plan(qt, ctx)
             if plan is not None:
+                # The mesh path keeps the requested backend: the chain
+                # is single-device scope and "oracle" is not a registry
+                # cell the sharded kernels can consume.
                 return qmm_mesh.qmm_sharded(x, qt, plan, ctx.mesh,
-                                            backend=backend,
+                                            backend=requested,
                                             interpret=interpret,
                                             act_stats=act_stats)
-    if qt.is_lowbit or qt.mode in (QuantMode.INT8, QuantMode.INT4):
-        if tune_cache.get_policy() == "on_first_use":
-            # Tune this shape before resolving, so even the very first
-            # call dispatches tuned tiles — a warm plan cache makes this
-            # a pure dict lookup per call.
-            from repro.tune import tuner
-            tuner.ensure_plan(qt.mode, backend, fused=True,
-                              m=int(x.shape[0]), n=qt.out_features,
-                              k=qt.k_valid, interpret=interpret)
-        # Resolve the blocking OUTSIDE the jitted body and pass it as a
-        # static argument: the plan is part of the jit cache key, so a
-        # plan-cache update retraces (tuned tiles really take effect)
-        # while a stable plan keeps hitting one trace per shape.
-        tiles = tune_cache.plan_for(qt.mode, backend, fused=True,
-                                    m=int(x.shape[0]), n=qt.out_features,
-                                    k=qt.k_valid).tiles
-    return _qmm_jit(x, qt, backend=backend, interpret=interpret,
-                    tiles=tiles, act_stats=act_stats)
+    while True:
+        try:
+            faults.maybe_raise("kernel.compile", op="qmm",
+                               mode=qt.mode.value, backend=backend)
+            if backend == "oracle":
+                return _qmm_oracle_jit(x, qt, interpret=interpret,
+                                       act_stats=act_stats)
+            tiles = None
+            if qt.is_lowbit or qt.mode in (QuantMode.INT8, QuantMode.INT4):
+                if tune_cache.get_policy() == "on_first_use":
+                    # Tune this shape before resolving, so even the very
+                    # first call dispatches tuned tiles — a warm plan
+                    # cache makes this a pure dict lookup per call.
+                    from repro.tune import tuner
+                    tuner.ensure_plan(qt.mode, backend, fused=True,
+                                      m=int(x.shape[0]), n=qt.out_features,
+                                      k=qt.k_valid, interpret=interpret)
+                # Resolve the blocking OUTSIDE the jitted body and pass
+                # it as a static argument: the plan is part of the jit
+                # cache key, so a plan-cache update retraces (tuned
+                # tiles really take effect) while a stable plan keeps
+                # hitting one trace per shape.
+                tiles = tune_cache.plan_for(qt.mode, backend, fused=True,
+                                            m=int(x.shape[0]),
+                                            n=qt.out_features,
+                                            k=qt.k_valid).tiles
+            return _qmm_jit(x, qt, backend=backend, interpret=interpret,
+                            tiles=tiles, act_stats=act_stats)
+        except Exception as e:
+            nxt = _fallback_next(qt.mode, backend)
+            if nxt is None:
+                raise
+            _note_fallback("qmm", qt.mode, requested, backend, nxt, e)
+            backend = nxt
 
 
 # ---------------------------------------------------------------------------
@@ -804,6 +915,24 @@ def _qconv_jit(x, qt: QTensor, act_stats, backend: str, stride: int,
     return spec.fn(x.astype(jnp.float32), _conv_fused.conv_weight_planes(qt),
                    qt.geometry, stride, padding, act_stats, col, b2,
                    interpret=interpret, tiles=tiles)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "padding", "interpret"))
+def _qconv_oracle_jit(x, qt: QTensor, act_stats, stride: int, padding: str,
+                      interpret: bool):
+    """Conv chain last resort: materialize the im2col patch matrix and
+    run the gemm oracle on it — bit-identical to the fused-im2col
+    kernels (per-tensor quantization commutes with patch gathering)."""
+    from repro.core.conv import im2col   # lazy: core.conv imports ops
+
+    _QCONV_TRACE_CTR.inc(mode=qt.mode.value, backend="oracle")  # trace time
+    kh, kw_, cin, cout = qt.geometry
+    patches, (b, oh, ow) = im2col(x.astype(jnp.float32), kh, kw_,
+                                  stride, padding)
+    y = _qmm_oracle_jit(patches, qt, interpret=interpret,
+                        act_stats=act_stats)
+    return y.reshape(b, oh, ow, cout)
 
 
 def qconv(x: jnp.ndarray, qt: QTensor, *, stride: int = 1,
@@ -870,6 +999,8 @@ def qconv(x: jnp.ndarray, qt: QTensor, *, stride: int = 1,
         raise ValueError(f"channel mismatch: x has Cin={x.shape[-1]} but "
                          f"QTensor geometry is {qt.geometry}")
     backend = backend or DEFAULT_BACKEND
+    requested = backend
+    backend = _FB_DECISION.get(("qconv", qt.mode, requested), requested)
     _QCONV_DISPATCH_CTR.inc(mode=qt.mode.value, backend=backend,
                             layout=registry.LAYOUT_IM2COL)
     from repro.kernels import conv_fused
@@ -883,26 +1014,45 @@ def qconv(x: jnp.ndarray, qt: QTensor, *, stride: int = 1,
     if ctx is not None:
         plan = qmm_mesh.shard_plan_conv(qt, ctx)
         if plan is not None:
+            # Mesh path keeps the requested backend (chain is
+            # single-device scope, see qmm).
             return qmm_mesh.qconv_sharded(x, qt, plan, ctx.mesh, act_stats,
-                                          backend=backend, stride=stride,
+                                          backend=requested, stride=stride,
                                           padding=padding,
                                           interpret=interpret)
     m, n, k, tag = conv_fused.conv_problem_dims(x.shape, qt.geometry,
                                                 stride, padding)
-    if tune_cache.get_policy() == "on_first_use":
-        from repro.tune import tuner
-        tuner.ensure_plan(qt.mode, backend, fused=True,
-                          interpret=interpret,
-                          conv=tuner.ConvProblem.from_input(
-                              x.shape, qt.geometry, stride, padding))
-    # Like qmm: resolve the plan OUTSIDE the jitted body and pass the
-    # tiles as a static argument, so a plan-cache update retraces while
-    # a stable plan keeps hitting one trace per conv geometry.
-    tiles = tune_cache.plan_for(qt.mode, backend, fused=True, m=m, n=n,
-                                k=k, layout=registry.LAYOUT_IM2COL,
-                                geom=tag).tiles
-    return _qconv_jit(x, qt, act_stats, backend=backend, stride=stride,
-                      padding=padding, interpret=interpret, tiles=tiles)
+    while True:
+        try:
+            faults.maybe_raise("kernel.compile", op="qconv",
+                               mode=qt.mode.value, backend=backend)
+            if backend == "oracle":
+                return _qconv_oracle_jit(x, qt, act_stats, stride=stride,
+                                         padding=padding,
+                                         interpret=interpret)
+            if tune_cache.get_policy() == "on_first_use":
+                from repro.tune import tuner
+                tuner.ensure_plan(qt.mode, backend, fused=True,
+                                  interpret=interpret,
+                                  conv=tuner.ConvProblem.from_input(
+                                      x.shape, qt.geometry, stride, padding))
+            # Like qmm: resolve the plan OUTSIDE the jitted body and
+            # pass the tiles as a static argument, so a plan-cache
+            # update retraces while a stable plan keeps hitting one
+            # trace per conv geometry.
+            tiles = tune_cache.plan_for(qt.mode, backend, fused=True,
+                                        m=m, n=n, k=k,
+                                        layout=registry.LAYOUT_IM2COL,
+                                        geom=tag).tiles
+            return _qconv_jit(x, qt, act_stats, backend=backend,
+                              stride=stride, padding=padding,
+                              interpret=interpret, tiles=tiles)
+        except Exception as e:
+            nxt = _fallback_next(qt.mode, backend, conv=True)
+            if nxt is None:
+                raise
+            _note_fallback("qconv", qt.mode, requested, backend, nxt, e)
+            backend = nxt
 
 
 def fused_qmm(x: jnp.ndarray, wb, mode: Optional[QuantMode] = None,

@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.modes import QuantMode
+from repro.kernels.modes import QuantMode, accumulator_bound
 
 # NOTE: repro.core is imported lazily inside the pack/unpack methods.
 # core/__init__ -> qlinear -> kernels.ops -> THIS module is a cycle; a
@@ -212,6 +212,15 @@ class QTensor:
 
         k, n = w.shape
         shape = (int(k), int(n))
+        bound = accumulator_bound(mode)
+        if bound is not None and shape[0] > bound:
+            raise ValueError(
+                f"reduction depth k={shape[0]} exceeds the {mode.value} "
+                f"accumulator bound of {bound} "
+                f"(modes.accumulator_bound): the narrowest registered "
+                f"kernel accumulator for this mode would overflow at "
+                f"inference; split the contraction (e.g. shard k across "
+                f"a mesh) instead of packing it whole")
         if mode in (QuantMode.F32, QuantMode.BF16):
             dt = jnp.float32 if mode == QuantMode.F32 else jnp.bfloat16
             return cls(payload={"w": w.astype(dt)}, scale=None, mode=mode,

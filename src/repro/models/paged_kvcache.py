@@ -62,13 +62,24 @@ import numpy as np
 
 from repro.core.encoding import pack_ternary, packed_width, unpack_bits
 from repro.models.common import ModelConfig, ShardLayout
+from repro.resilience import faults
 
 __all__ = [
     "INVALID_POS", "SCRATCH_PAGE", "is_paged", "entry_geometry",
     "init_paged_caches", "paged_logical_axes", "ternarize_tokens",
-    "append_tokens", "page_view", "PageAllocator", "EntryPager",
-    "make_pagers", "sync_page_tables", "reset_pages", "tree_nbytes",
+    "append_tokens", "page_view", "PageAllocator", "PagePoolExhausted",
+    "EntryPager", "make_pagers", "sync_page_tables", "reset_pages",
+    "tree_nbytes",
 ]
+
+
+class PagePoolExhausted(RuntimeError):
+    """Page allocation failed: not enough free pages for the request.
+
+    A typed subclass so the scheduler can catch exhaustion specifically
+    (preempt + backoff re-admission, docs/resilience.md) while every
+    other allocator invariant violation (double free, foreign free)
+    still propagates as a plain RuntimeError."""
 
 # Canonical here (kvcache.py re-exports it) to keep the import graph
 # acyclic: kvcache -> attention -> paged_kvcache.
@@ -280,8 +291,12 @@ class PageAllocator:
         return len(self._used)
 
     def alloc(self, n: int = 1) -> List[int]:
+        if faults.fire("pages.exhausted", want=n):
+            raise PagePoolExhausted(
+                f"page pool exhausted (injected): want {n}, have "
+                f"{len(self._free)} free of {self.n_pages - 1}")
         if n > len(self._free):
-            raise RuntimeError(
+            raise PagePoolExhausted(
                 f"page pool exhausted: want {n}, have {len(self._free)} "
                 f"free of {self.n_pages - 1}")
         out = [self._free.pop() for _ in range(n)]

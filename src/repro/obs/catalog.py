@@ -42,6 +42,17 @@ CATALOG: Dict[str, Dict] = {
     "repro_tune_measure_seconds": {
         "type": "histogram", "labels": (),
         "help": "on-device candidate measurement latency per ensure_plan"},
+    # ---- resilience plane (process registry) ----
+    "repro_faults_injected_total": {
+        "type": "counter", "labels": ("point",),
+        "help": "deterministic fault injections fired, by injection point"},
+    "repro_kernel_fallback_total": {
+        "type": "counter",
+        "labels": ("op", "mode", "from_backend", "to_backend"),
+        "help": "kernel backend degradations taken by the fallback chain"},
+    "repro_tune_contained_total": {
+        "type": "counter", "labels": ("site",),
+        "help": "tuner/plan-cache failures contained to defaults, by site"},
     # ---- mesh / sharded path (process registry) ----
     "repro_mesh_psum_total": {
         "type": "counter", "labels": ("mode", "acc_dtype"),
@@ -58,10 +69,18 @@ CATALOG: Dict[str, Dict] = {
         "help": "requests admitted from queue into a slot"},
     "repro_engine_evictions_total": {
         "type": "counter", "labels": ("cause",),
-        "help": "slot evictions by cause (done | expired | cancelled)"},
+        "help": "slot evictions by cause (done | expired | cancelled | "
+                "numeric_error | error)"},
     "repro_engine_queue_drops_total": {
         "type": "counter", "labels": ("cause",),
-        "help": "requests resolved while still queued (expired | cancelled)"},
+        "help": "requests resolved without a slot (expired | cancelled | "
+                "rejected)"},
+    "repro_engine_preemptions_total": {
+        "type": "counter", "labels": ("cause",),
+        "help": "slot preemptions returned to queue, by cause"},
+    "repro_engine_step_errors_total": {
+        "type": "counter", "labels": (),
+        "help": "scheduler steps that raised and were quarantined"},
     "repro_engine_queue_depth": {
         "type": "gauge", "labels": (),
         "help": "queued (unadmitted) requests after the latest tick"},

@@ -1,0 +1,38 @@
+"""Resilience plane: deterministic fault injection + graceful
+degradation for the serving stack (docs/resilience.md).
+
+Two halves live here and in the subsystems they harden:
+
+* :mod:`repro.resilience.faults` — the seeded, deterministic
+  fault-injection plane.  Production code calls ``faults.fire(point)`` /
+  ``faults.maybe_raise(point)`` at named injection points; a disarmed
+  plane is a single ``is None`` check, an armed :class:`FaultPlan`
+  decides per-hit whether the point fires.
+* The graceful-degradation consumers: the kernel fallback chain in
+  :mod:`repro.kernels.ops`, tune plan-cache containment in
+  :mod:`repro.tune`, and scheduler backpressure / preemption / numeric
+  quarantine in :mod:`repro.serving.scheduler`.
+
+The chaos harness (``tests/test_resilience.py``) arms storm plans over
+a real ChunkedScheduler engine and asserts every request terminates
+with a definite status while page/obs accounting reconciles exactly.
+"""
+
+from repro.resilience.faults import (  # noqa: F401
+    POINTS,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    active,
+    arm,
+    disarm,
+    fire,
+    maybe_raise,
+    maybe_stall,
+    parse_plan,
+    plan_from_env,
+)
+
+__all__ = ["POINTS", "FaultPlan", "FaultSpec", "InjectedFault", "active",
+           "arm", "disarm", "fire", "maybe_raise", "maybe_stall",
+           "parse_plan", "plan_from_env"]

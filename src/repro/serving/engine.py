@@ -116,6 +116,21 @@ class ServeConfig:
     # (launch.mesh.make_serve_mesh).  None = single-device serving.
     mesh: Optional[Any] = None
     mesh_rules: str = "serve_lowbit"
+    # Backpressure (docs/resilience.md): bound the submit queue — a
+    # submit past the bound resolves immediately with status "rejected"
+    # (Result recorded, queue_drop counted, never enqueued).  None =
+    # unbounded, the pre-resilience behavior.
+    max_queue: Optional[int] = None
+    # Page-exhaustion preemption returns the victim request to the
+    # queue with capped exponential backoff: retry r waits
+    # min(retry_backoff_s * 2**(r-1), retry_backoff_cap_s) before
+    # becoming admissible again.
+    retry_backoff_s: float = 0.05
+    retry_backoff_cap_s: float = 1.0
+    # NaN/Inf decode guard: a live row whose logits go non-finite is
+    # quarantined and its request finishes as "numeric_error" instead
+    # of sampling garbage forever.
+    numeric_guard: bool = True
 
 
 # Request / Result (with deadline / cancel() / status) live in
@@ -400,7 +415,12 @@ class Engine:
                                       m=m, n=n_l, k=k_l, save=False)
             problems = problems or seen
         if problems:
-            tune_cache.get_cache().save()
+            try:
+                tune_cache.get_cache().save()
+            except Exception as e:
+                # Tuned plans stay live in memory; a failed persist
+                # must not fail the engine build (docs/resilience.md).
+                tune_cache.contained("save", e)
 
     def submit(self, req: Request):
         self._sched.submit(req)
@@ -453,11 +473,21 @@ class Engine:
     # --------------------------------------------------------------- run
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Result]:
+        """Drive the scheduler until every request resolves (or
+        ``max_steps``).  A step that raises is QUARANTINED instead of
+        killing the loop: every in-flight slot finishes with status
+        "error" (pages released) and the loop continues with the
+        remaining queue — one poisoned batch cannot take down the
+        requests behind it.  ``Engine.step()`` stays raising for
+        callers that drive ticks themselves."""
         steps = 0
         with self._mesh_scope():
             while (self.queue or any(u != -1 for u in self.slot_uid)) \
                     and steps < max_steps:
-                self._sched.step()
+                try:
+                    self._sched.step()
+                except Exception as e:
+                    self._sched.quarantine(e)
                 steps += 1
         return self.results
 
@@ -476,6 +506,13 @@ class Engine:
         * flush and close the obs event-log sink (after the final
           ``engine_close`` record), so a crash-free shutdown always
           leaves a complete JSONL file.  Emits after close are dropped.
+
+        Closing an engine whose step raised mid-flight additionally
+        releases every page the stranded slots still hold (exactly
+        once — the ``_closed`` guard covers the whole sequence), so a
+        quarantine-then-close sequence always balances the page pool
+        back to zero.  The ``engine_close`` record reports the
+        in-flight count as it stood BEFORE that release.
         """
         if self._closed:
             return
@@ -483,10 +520,13 @@ class Engine:
         if self.scfg.pack_params and self.scfg.autotune == "on_first_use":
             from repro.tune import cache as tune_cache
             tune_cache.set_policy("off")
+        in_flight = sum(1 for u in self.slot_uid if u != -1)
+        with self._mesh_scope():
+            self._sched.shutdown()
         self.obs.events.emit(
             "engine_close",
             results=len(self.results),
-            in_flight=sum(1 for u in self.slot_uid if u != -1))
+            in_flight=in_flight)
         self.obs.close()
 
     def __enter__(self):
@@ -569,4 +609,20 @@ class Engine:
             "rebuild", ok=True, new_engine=new_eng.obs.engine_id,
             mesh=list(map(int, new_mesh.devices.shape)),
             latency_s=round(_time.perf_counter() - t0, 6))
+        # Migrate unfinished work: queued requests and in-flight slot
+        # occupants restart FROM SCRATCH on the new engine (their
+        # partial decode state lived in the lost mesh's caches; decode
+        # is deterministic at temperature 0, so re-running reproduces
+        # the same tokens).  Already-resolved Results stay with the old
+        # engine.
+        migrated = []
+        for req in self._sched.unfinished():
+            req.retries = 0
+            req.not_before = None
+            new_eng.submit(req)
+            migrated.append(req.uid)
+        if migrated:
+            self.obs.events.emit("migrate", count=len(migrated),
+                                 uids=sorted(migrated),
+                                 new_engine=new_eng.obs.engine_id)
         return new_eng

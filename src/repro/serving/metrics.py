@@ -52,12 +52,21 @@ class EngineMetrics:
             "requests admitted from queue into a slot")
         self.evictions = r.counter(
             "repro_engine_evictions_total",
-            "slot evictions by cause (done | expired | cancelled)",
+            "slot evictions by cause (done | expired | cancelled | "
+            "numeric_error | error)",
             labels=("cause",))
         self.queue_drops = r.counter(
             "repro_engine_queue_drops_total",
-            "requests resolved while still queued (expired | cancelled)",
+            "requests resolved without a slot (expired | cancelled | "
+            "rejected)",
             labels=("cause",))
+        self.preemptions = r.counter(
+            "repro_engine_preemptions_total",
+            "slot preemptions returned to queue, by cause",
+            labels=("cause",))
+        self.step_errors = r.counter(
+            "repro_engine_step_errors_total",
+            "scheduler steps that raised and were quarantined")
         self.queue_depth = r.gauge(
             "repro_engine_queue_depth",
             "queued (unadmitted) requests after the latest tick")
@@ -148,6 +157,27 @@ class EngineMetrics:
         self.queue_drops.inc(cause=status)
         self.events.emit("queue_drop", uid=uid, status=status)
         self._submit_ts.pop(uid, None)
+
+    def on_preempt(self, uid: int, cause: str, retries: int,
+                   delay_s: float) -> None:
+        """A slot-holding request was bumped back to the queue (pages
+        reclaimed); it retries after ``delay_s`` on the engine clock."""
+        if not self.enabled:
+            return
+        self.preemptions.inc(cause=cause)
+        self.events.emit("preempt", uid=uid, cause=cause,
+                         retries=retries, delay_s=round(delay_s, 6))
+        # TTFT keeps measuring from the ORIGINAL submit; a preempted
+        # request's first token really did take that long to arrive.
+
+    def on_step_error(self, exc: BaseException, in_flight: int) -> None:
+        """A scheduler step raised; in-flight requests are being
+        quarantined to status "error" by the caller."""
+        if not self.enabled:
+            return
+        self.step_errors.inc()
+        self.events.emit("step_error", error=type(exc).__name__,
+                         detail=str(exc)[:200], in_flight=in_flight)
 
     def tick(self, queue_depth: int, live: int, page_stats=()) -> None:
         """Per-step rollup: occupancy gauges + page-pool mirror."""

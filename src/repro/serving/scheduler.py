@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.models import paged_kvcache as paged
 from repro.models.kvcache import INVALID_POS
+from repro.resilience import faults
 
 __all__ = ["Request", "Result", "Scheduler", "BucketScheduler",
            "ChunkedScheduler"]
@@ -56,6 +57,12 @@ class Request:
     # engine was built with an injected clock); None = wait forever.
     deadline: Optional[float] = None
     cancelled: bool = False
+    # Preemption bookkeeping (docs/resilience.md): how often this
+    # request was bumped from a slot (page exhaustion), and the
+    # engine-clock instant before which admission must not retry it
+    # (capped exponential backoff; None = admissible now).
+    retries: int = 0
+    not_before: Optional[float] = None
 
     def cancel(self) -> None:
         """Withdraw the request: evicted (queued or running) on the next
@@ -67,7 +74,11 @@ class Request:
 class Result:
     uid: int
     tokens: List[int]
-    status: str = "ok"            # "ok" | "expired" | "cancelled"
+    # "ok" | "expired" | "cancelled" | "rejected" (backpressure /
+    # overlong prompt — never ran) | "numeric_error" (NaN/Inf logits
+    # quarantine) | "error" (step exception quarantine).  Every status
+    # is DEFINITE: a submitted request always ends in exactly one.
+    status: str = "ok"
 
 
 def _tree_set_row(tree, row_tree, b: int):
@@ -108,6 +119,12 @@ class Scheduler:
     # ------------------------------------------------------------ lifecycle
 
     def submit(self, req: Request) -> None:
+        scfg = self.eng.scfg
+        if scfg.max_queue is not None and len(self.queue) >= scfg.max_queue:
+            # Backpressure: the request never enters the system.  A
+            # definite Result is still minted so callers always get one.
+            self._reject(req)
+            return
         self.queue.append(req)
         self.eng.obs.on_submit(req.uid)
 
@@ -115,7 +132,11 @@ class Scheduler:
         """One tick: expire/cancel, admit+prefill, decode.  Returns True
         while any request is queued or in flight."""
         self.expire()
+        faults.maybe_stall("step.stall")
         self.admit_once()
+        # Fired between admission and decode so in-flight slots exist
+        # when the loss lands — the hardest spot to recover from.
+        faults.maybe_raise("device.loss")
         self.decode_once()
         self.eng.obs.tick(len(self.queue),
                           sum(1 for u in self.slot_uid if u != -1),
@@ -174,6 +195,81 @@ class Scheduler:
             self.logit_trace.setdefault(uid, []).append(
                 np.asarray(row, np.float32).copy())
 
+    # ------------------------------------------------------- degradation
+
+    def _reject(self, req: Request) -> None:
+        """Resolve a request as "rejected" without it ever holding a slot
+        or a page (queue overflow, overlong prompt)."""
+        self.results[req.uid] = Result(req.uid, [], status="rejected")
+        self.eng.obs.on_queue_drop(req.uid, "rejected")
+
+    def _pop_ready(self) -> Optional[Request]:
+        """Pop the first queued request whose backoff window has passed.
+
+        Requests still inside ``not_before`` are rotated to the back (so
+        one backing-off head never starves the rest); returns None when
+        the queue is empty or everything is waiting out a backoff.
+        """
+        now: Optional[float] = None
+        for _ in range(len(self.queue)):
+            req = self.queue[0]
+            if req.not_before is not None:
+                if now is None:
+                    now = self.clock()
+                if now < req.not_before:
+                    self.queue.rotate(-1)
+                    continue
+                req.not_before = None
+            return self.queue.popleft()
+        return None
+
+    def preempt(self, b: int, cause: str = "page_exhausted") -> None:
+        """Bump slot ``b``'s request back to the queue (no Result): pages
+        are reclaimed now and admission retries it after a capped
+        exponential backoff.  Partial decode output is discarded — a
+        retried request replays from its prompt, so results stay
+        deterministic rather than resuming from reclaimed state."""
+        scfg = self.eng.scfg
+        req = self.slot_req[b]
+        req.retries += 1
+        delay = min(scfg.retry_backoff_s * (2 ** (req.retries - 1)),
+                    scfg.retry_backoff_cap_s)
+        req.not_before = self.clock() + delay
+        self.eng.obs.on_preempt(req.uid, cause, req.retries, delay)
+        self.slot_uid[b] = -1
+        self.slot_tokens[b] = []
+        self.slot_req[b] = None
+        self.release(b)
+        self.queue.append(req)
+
+    def quarantine(self, exc: BaseException) -> None:
+        """Containment for a step() that raised (``Engine.run``): every
+        in-flight request resolves as "error" and its pages come back, so
+        the queue keeps draining on later ticks instead of wedging."""
+        in_flight = sum(1 for u in self.slot_uid if u != -1)
+        self.eng.obs.on_step_error(exc, in_flight)
+        for b in range(len(self.slot_uid)):
+            if self.slot_uid[b] != -1:
+                self.finish(b, status="error")
+
+    def shutdown(self) -> None:
+        """Engine.close() path: release every occupied slot's resources
+        WITHOUT minting Results (close abandons work, it doesn't resolve
+        it — ``unfinished()`` is how callers migrate the remainder)."""
+        for b in range(len(self.slot_uid)):
+            if self.slot_uid[b] != -1:
+                self.slot_uid[b] = -1
+                self.slot_tokens[b] = []
+                self.slot_req[b] = None
+                self.release(b)
+
+    def unfinished(self) -> List[Request]:
+        """Queued plus in-flight requests, admission order first — what
+        ``Engine.rebuild_after_loss`` migrates to the replacement."""
+        out = list(self.queue)
+        out.extend(r for r in self.slot_req if r is not None)
+        return out
+
     def admit_once(self) -> None:
         raise NotImplementedError
 
@@ -192,11 +288,22 @@ class BucketScheduler(Scheduler):
     def admit_once(self) -> None:
         eng = self.eng
         for b in range(eng.scfg.num_slots):
-            if self.slot_uid[b] != -1 or not self.queue:
+            if self.slot_uid[b] != -1:
                 continue
-            req = self.queue.popleft()
-            eng.obs.on_admit(req.uid)
+            req = self._pop_ready()
+            if req is None:
+                break
             prompt = np.asarray(req.prompt, np.int32)
+            if len(prompt) > eng._buckets()[-1]:
+                self._reject(req)
+                continue
+            eng.obs.on_admit(req.uid)
+            # Claim the slot BEFORE any device work so a prefill that
+            # raises still resolves through quarantine() instead of
+            # silently losing the popped request.
+            self.slot_uid[b] = req.uid
+            self.slot_req[b] = req
+            self.slot_tokens[b] = []
             bucket = next(s for s in eng._buckets() if s >= len(prompt))
             padded = np.zeros(bucket, np.int32)
             padded[-len(prompt):] = prompt      # right-aligned, left pad 0s
@@ -216,16 +323,18 @@ class BucketScheduler(Scheduler):
             eng.caches = [
                 _tree_set_row(full, row, b)
                 for full, row in zip(eng.caches, row_caches)]
-            self.slot_uid[b] = req.uid
-            self.slot_req[b] = req
             self.slot_pos[b] = bucket
             self.slot_remaining[b] = min(
                 req.max_new_tokens, eng.scfg.max_len - bucket)
-            first = int(np.argmax(np.asarray(logits)[0, -1]))
-            self.trace(req.uid, np.asarray(logits)[0, -1])
+            lg_row = np.asarray(logits)[0, -1]
+            eng.obs.on_prefill_tokens(len(prompt))
+            if eng.scfg.numeric_guard and not np.isfinite(lg_row).all():
+                self.finish(b, status="numeric_error")
+                continue
+            first = int(np.argmax(lg_row))
+            self.trace(req.uid, lg_row)
             self.slot_tokens[b] = [first]
             self.last_token[b] = first
-            eng.obs.on_prefill_tokens(len(prompt))
             eng.obs.on_first_token(req.uid)
 
     def decode_once(self) -> None:
@@ -239,12 +348,22 @@ class BucketScheduler(Scheduler):
         eng.key, sub = jax.random.split(eng.key)
         nxt, last_logits, eng.caches = eng.serve_step(
             eng.params, eng.caches, toks, step, sub)
+        if faults.fire("logits.nan", op="decode", path="bucket"):
+            last_logits = last_logits.at[live[0]].set(jnp.nan)
+        fin = None
+        if eng.scfg.numeric_guard:
+            fin = np.asarray(jnp.all(jnp.isfinite(last_logits), axis=-1))
         nxt = np.asarray(nxt)
         if self.logit_trace is not None:
             lg = np.asarray(last_logits)
             for b in live:
                 self.trace(self.slot_uid[b], lg[b])
         for b in live:
+            if fin is not None and not fin[b]:
+                # Poisoned logits: the sampled token is garbage — resolve
+                # the stream instead of emitting NaN-derived tokens.
+                self.finish(b, status="numeric_error")
+                continue
             self.slot_tokens[b].append(int(nxt[b]))
             self.last_token[b] = nxt[b]
             self.slot_pos[b] += 1
@@ -302,14 +421,17 @@ class ChunkedScheduler(Scheduler):
     def admit_once(self) -> None:
         scfg = self.eng.scfg
         for b in range(scfg.num_slots):
-            if self.slot_uid[b] != -1 or not self.queue:
+            if self.slot_uid[b] != -1:
                 continue
-            req = self.queue.popleft()
+            req = self._pop_ready()
+            if req is None:
+                break
             prompt = np.asarray(req.prompt, np.int32).reshape(-1)
             if len(prompt) >= scfg.max_len:
-                raise ValueError(
-                    f"prompt of {len(prompt)} tokens does not fit "
-                    f"max_len={scfg.max_len} (need room to decode)")
+                # Needs room to decode at least one token: a definite
+                # "rejected" Result, not an exception out of step().
+                self._reject(req)
+                continue
             self.eng.obs.on_admit(req.uid)
             self.slot_uid[b] = req.uid
             self.slot_req[b] = req
@@ -329,16 +451,28 @@ class ChunkedScheduler(Scheduler):
             return
         toks = np.zeros((scfg.num_slots, chunk), np.int32)
         step2 = np.zeros((scfg.num_slots, 2), np.int32)
+        live = []
         for b in rows:
             done = int(self.slot_done[b])
             n = min(chunk, len(self.slot_prompt[b]) - done)
+            try:
+                self._ensure(b, done + n)
+            except paged.PagePoolExhausted:
+                self.preempt(b, "page_exhausted")
+                continue
             toks[b, :n] = self.slot_prompt[b][done:done + n]
             step2[b] = (done, n)
-            self._ensure(b, done + n)
+            live.append(b)
+        rows = live
+        if not rows:
+            return
         self._sync()
         logits, self.eng.caches = self.eng.chunk_step(
             self.eng.params, self.eng.caches, jnp.asarray(toks),
             jnp.asarray(step2))
+        if faults.fire("logits.nan", op="prefill", path="chunked"):
+            b0 = rows[0]
+            logits = logits.at[b0, int(step2[b0, 1]) - 1].set(jnp.nan)
         logits_np = None
         for b in rows:
             n = int(step2[b, 1])
@@ -351,6 +485,10 @@ class ChunkedScheduler(Scheduler):
             # REAL chunk position (matches the bucket path's argmax)
             if logits_np is None:
                 logits_np = np.asarray(logits)
+            if (scfg.numeric_guard
+                    and not np.isfinite(logits_np[b, n - 1]).all()):
+                self.finish(b, status="numeric_error")
+                continue
             first = int(np.argmax(logits_np[b, n - 1]))
             self.trace(self.slot_uid[b], logits_np[b, n - 1])
             self.slot_phase[b] = "decode"
@@ -372,21 +510,38 @@ class ChunkedScheduler(Scheduler):
         if not rows:
             return
         step = np.full(scfg.num_slots, -1, np.int32)
+        live = []
         for b in rows:
+            try:
+                self._ensure(b, int(self.slot_pos[b]) + 1)
+            except paged.PagePoolExhausted:
+                self.preempt(b, "page_exhausted")
+                continue
             step[b] = self.slot_pos[b]
-            self._ensure(b, int(self.slot_pos[b]) + 1)
+            live.append(b)
+        rows = live
+        if not rows:
+            return
         self._sync()
         toks = jnp.asarray(np.where(step >= 0, self.last_token, 0)
                            .astype(np.int32)[:, None])
         self.eng.key, sub = jax.random.split(self.eng.key)
         nxt, last_logits, self.eng.caches = self.eng.serve_step(
             self.eng.params, self.eng.caches, toks, jnp.asarray(step), sub)
+        if faults.fire("logits.nan", op="decode", path="chunked"):
+            last_logits = last_logits.at[rows[0]].set(jnp.nan)
+        fin = None
+        if scfg.numeric_guard:
+            fin = np.asarray(jnp.all(jnp.isfinite(last_logits), axis=-1))
         nxt = np.asarray(nxt)
         if self.logit_trace is not None:
             lg = np.asarray(last_logits)
             for b in rows:
                 self.trace(self.slot_uid[b], lg[b])
         for b in rows:
+            if fin is not None and not fin[b]:
+                self.finish(b, status="numeric_error")
+                continue
             self.slot_tokens[b].append(int(nxt[b]))
             self.last_token[b] = nxt[b]
             self.slot_pos[b] += 1

@@ -31,16 +31,20 @@ variable, else ``~/.cache/repro/tune_plans.json``.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import glob
 import json
 import os
 import tempfile
+import time
 import warnings
 from typing import Dict, Optional
 
 from repro.kernels._matmul_common import DEFAULT_TILES, TileConfig
 from repro.kernels.modes import QuantMode
 from repro import obs
+from repro.resilience import faults
 
 __all__ = ["Plan", "PlanCache", "plan_key", "bucket_m", "device_kind",
            "default_cache_path", "get_cache", "set_cache_path",
@@ -161,6 +165,49 @@ def default_cache_path() -> str:
                         "tune_plans.json")
 
 
+@contextlib.contextmanager
+def _save_lock(path: str):
+    """Advisory inter-process writer lock for one cache file: flock on
+    ``<path>.lock``.  Two processes tuning ``on_first_use`` against the
+    same cache serialize their load-merge-replace sections instead of
+    overwriting each other's freshly tuned plans (atomic rename alone
+    only protects a SINGLE writer from torn reads).  Best-effort: where
+    ``fcntl`` is unavailable the lock degrades to a no-op and atomic
+    rename remains the only guarantee."""
+    try:
+        import fcntl
+    except ImportError:                        # non-POSIX: degrade
+        yield
+        return
+    lock_path = path + ".lock"
+    os.makedirs(os.path.dirname(os.path.abspath(lock_path)) or ".",
+                exist_ok=True)
+    with open(lock_path, "a") as lf:
+        fcntl.flock(lf, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lf, fcntl.LOCK_UN)
+
+
+def _cleanup_stale_tmp(path: str, max_age_s: float = 300.0) -> None:
+    """Remove ``.tune_plans.*.tmp`` litter a crashed writer left next to
+    ``path``.  Age-gated so an in-flight writer's temp file (seconds
+    old) is never yanked from under it; best-effort on every OS error."""
+    dirname = os.path.dirname(os.path.abspath(path)) or "."
+    try:
+        stale = glob.glob(os.path.join(dirname, ".tune_plans.*.tmp"))
+    except OSError:
+        return
+    now = time.time()
+    for tmp in stale:
+        try:
+            if now - os.path.getmtime(tmp) > max_age_s:
+                os.unlink(tmp)
+        except OSError:
+            continue
+
+
 class PlanCache:
     """In-memory plan table backed by one atomic JSON file."""
 
@@ -172,14 +219,19 @@ class PlanCache:
     # -- persistence ---------------------------------------------------------
 
     def load(self) -> "PlanCache":
-        """(Re)read the backing file.  A missing or corrupt file yields
-        an empty cache (with a warning for corruption) — lookups then
-        fall back to DEFAULT_TILES, they never fail."""
+        """(Re)read the backing file.  A missing or corrupt file — or
+        ANY other read failure — yields an empty cache (with a warning)
+        — lookups then fall back to DEFAULT_TILES, they never fail."""
         self._plans = {}
         self._loaded = True
+        _cleanup_stale_tmp(self.path)
         try:
+            if faults.fire("plan_cache.io", op="load", path=self.path):
+                raise OSError("injected plan-cache read failure")
             with open(self.path, "r") as f:
                 raw = json.load(f)
+            if faults.fire("plan_cache.corrupt", path=self.path):
+                raise ValueError("injected plan-cache corruption")
             if not isinstance(raw, dict) or "plans" not in raw:
                 raise ValueError("missing 'plans' table")
             for key, d in raw["plans"].items():
@@ -190,7 +242,7 @@ class PlanCache:
                 self._plans[key] = plan
         except FileNotFoundError:
             pass
-        except (ValueError, KeyError, TypeError, OSError) as e:
+        except Exception as e:
             warnings.warn(
                 f"corrupt tune plan cache at {self.path} ({e}); ignoring "
                 f"it and falling back to DEFAULT_TILES", stacklevel=2)
@@ -200,32 +252,41 @@ class PlanCache:
     def save(self) -> None:
         """Atomic write: temp file in the destination directory, fsync,
         ``os.replace``.  A crash at any point leaves the previous cache
-        file fully intact."""
+        file fully intact.  Writers serialize on the advisory
+        ``<path>.lock`` and MERGE the on-disk table under the lock, so
+        two processes tuning different problems against one cache file
+        union their plans instead of last-writer-wins dropping one
+        side's work (this process's plans win any per-key conflict)."""
         # Saving a never-read cache must not wipe existing plans on disk
         # — load first (the read paths all do; keep save symmetric).
         self._ensure_loaded()
-        payload = {
-            "version": SCHEMA_VERSION,
-            "plans": {k: p.to_json()
-                      for k, p in sorted(self._plans.items())},
-        }
+        if faults.fire("plan_cache.io", op="save", path=self.path):
+            raise OSError("injected plan-cache write failure")
         dirname = os.path.dirname(os.path.abspath(self.path)) or "."
         os.makedirs(dirname, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(prefix=".tune_plans.", suffix=".tmp",
-                                   dir=dirname)
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=2, sort_keys=True)
-                f.write("\n")
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, self.path)
-        except BaseException:
+        with _save_lock(self.path):
+            disk = PlanCache(self.path).load()._plans
+            self._plans = {**disk, **self._plans}
+            payload = {
+                "version": SCHEMA_VERSION,
+                "plans": {k: p.to_json()
+                          for k, p in sorted(self._plans.items())},
+            }
+            fd, tmp = tempfile.mkstemp(prefix=".tune_plans.",
+                                       suffix=".tmp", dir=dirname)
             try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=2, sort_keys=True)
+                    f.write("\n")
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
 
     # -- table ---------------------------------------------------------------
 
@@ -294,6 +355,23 @@ _LOOKUP_CTR = obs.get_registry().counter(
 _RESOLVE_HIST = obs.get_registry().histogram(
     "repro_tune_plan_resolve_seconds",
     "plan_for resolution latency (pure lookup, no measuring)")
+_CONTAIN_CTR = obs.get_registry().counter(
+    "repro_tune_contained_total",
+    "tune-plane failures contained to DEFAULT_TILES by site "
+    "(plan_for | ensure_plan | save)",
+    labels=("site",))
+
+
+def contained(site: str, err: Exception) -> None:
+    """Record one contained tune-plane failure (counter + obs event +
+    warning) — the hard-failure containment contract: nothing in the
+    tune plane may ever take a dispatch down (docs/resilience.md)."""
+    _CONTAIN_CTR.inc(site=site)
+    faults.emit_event("tune_contained", site=site,
+                      error=f"{type(err).__name__}: {err}")
+    warnings.warn(f"tune {site} failed ({type(err).__name__}: {err}); "
+                  f"contained — falling back to DEFAULT_TILES",
+                  stacklevel=3)
 
 
 def plan_for(mode: QuantMode, backend: str, *, fused: bool,
@@ -305,12 +383,29 @@ def plan_for(mode: QuantMode, backend: str, *, fused: bool,
     (shape-bucket, cache content), so repeated traces of the same shape
     resolve to the same blocking and the jit cache keeps hitting."""
     with _RESOLVE_HIST.time():
-        key = plan_key(mode, backend, fused, device_kind(), bucket_m(m),
-                       n, k, layout=layout, geom=geom)
-        hit = get_cache().get(key)
+        try:
+            key = plan_key(mode, backend, fused, device_kind(),
+                           bucket_m(m), n, k, layout=layout, geom=geom)
+            hit = get_cache().get(key)
+        except Exception as e:
+            # Containment: a broken cache (or a dying device_kind
+            # query) must resolve to the seed blocking, never propagate
+            # into kernel dispatch.
+            contained("plan_for", e)
+            hit = None
         if hit is not None:
             _LOOKUP_CTR.inc(result="hit")
             return hit
         _LOOKUP_CTR.inc(result="default")
-        return default_plan(mode, backend, fused, m, n, k, layout=layout,
-                            geom=geom)
+        try:
+            return default_plan(mode, backend, fused, m, n, k,
+                                layout=layout, geom=geom)
+        except Exception as e:
+            # Even device_kind() failing inside the fallback stays
+            # contained: hand back the seed tiles with an unknown
+            # device tag.
+            contained("plan_for", e)
+            return Plan(mode=mode, backend=backend, fused=fused,
+                        device_kind="unknown", m_bucket=bucket_m(m),
+                        n=n, k=k, tiles=DEFAULT_TILES[mode.value],
+                        source="default", layout=layout, geom=geom)

@@ -270,30 +270,46 @@ def ensure_plan(mode: QuantMode, backend: str, *, fused: bool = True,
         layout = registry.LAYOUT_IM2COL
     if m is None or n is None or k is None:
         raise ValueError("ensure_plan needs m, n, k (or a conv= problem)")
-    cache = plan_cache.get_cache()
-    key = plan_cache.plan_key(mode, backend, fused,
-                              plan_cache.device_kind(),
-                              plan_cache.bucket_m(m), n, k,
-                              layout=layout, geom=geom)
-    hit = cache.get(key)
-    if hit is not None:
-        _ENSURE_CTR.inc(result="hit")
-        return hit, False
-    _ENSURE_CTR.inc(result="measured")
-    with _MEASURE_HIST.time():
-        if conv is not None:
-            plan, report = tune_one(mode, backend, fused=fused, conv=conv,
-                                    reps=reps, warmup=warmup, seed=seed,
-                                    interpret=interpret)
-        else:
-            plan, report = tune_one(mode, backend, fused=fused, m=m, n=n,
-                                    k=k, reps=reps, warmup=warmup,
-                                    seed=seed, interpret=interpret)
-    if reports is not None:
-        reports[plan.key] = report
-    cache.put(plan)
+    # Hard-failure containment (docs/resilience.md): past argument
+    # validation, NOTHING in the cache-or-measure path may propagate
+    # into kernel dispatch — a broken cache file, a failed measurement,
+    # or a failed save all resolve to the DEFAULT_TILES plan.
+    try:
+        cache = plan_cache.get_cache()
+        key = plan_cache.plan_key(mode, backend, fused,
+                                  plan_cache.device_kind(),
+                                  plan_cache.bucket_m(m), n, k,
+                                  layout=layout, geom=geom)
+        hit = cache.get(key)
+        if hit is not None:
+            _ENSURE_CTR.inc(result="hit")
+            return hit, False
+        _ENSURE_CTR.inc(result="measured")
+        with _MEASURE_HIST.time():
+            if conv is not None:
+                plan, report = tune_one(mode, backend, fused=fused,
+                                        conv=conv, reps=reps,
+                                        warmup=warmup, seed=seed,
+                                        interpret=interpret)
+            else:
+                plan, report = tune_one(mode, backend, fused=fused, m=m,
+                                        n=n, k=k, reps=reps,
+                                        warmup=warmup, seed=seed,
+                                        interpret=interpret)
+        if reports is not None:
+            reports[plan.key] = report
+        cache.put(plan)
+    except Exception as e:
+        plan_cache.contained("ensure_plan", e)
+        return plan_cache.plan_for(mode, backend, fused=fused, m=m, n=n,
+                                   k=k, layout=layout, geom=geom), False
     if save:
-        cache.save()
+        try:
+            cache.save()
+        except Exception as e:
+            # The tuned plan is live in memory either way; a failed
+            # persist must not fail the dispatch that triggered tuning.
+            plan_cache.contained("save", e)
     return plan, True
 
 
@@ -346,7 +362,12 @@ def tune_shapes(shapes: Iterable[Tuple[int, int, int]],
             for backend in backends:
                 _one(mode, backend, registry.LAYOUT_IM2COL, conv=prob)
     cache = plan_cache.get_cache()
-    cache.save()
+    try:
+        cache.save()
+    except Exception as e:
+        # Sweep results stay live in the in-memory cache; a failed
+        # persist is contained (the sweep itself succeeded).
+        plan_cache.contained("save", e)
     return plans, stats, reports
 
 

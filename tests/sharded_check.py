@@ -206,6 +206,59 @@ def _engine():
     assert _decode(eng2, prompts) == single, "rebuilt decode diverged"
 
 
+@check("watchdog_rebuild_inflight")
+def _engine_inflight():
+    # Watchdog -> rebuild WITH WORK IN FLIGHT: the old engine is killed
+    # mid-serve (some requests queued, some mid-decode) and every
+    # unfinished request must migrate to the rebuilt engine and resolve
+    # there with a definite status and the single-device tokens.
+    cfg = get_smoke("tinyllama-1.1b").with_(
+        dtype=jnp.float32, quant_policy="tnn", d_model=128, d_ff=256)
+    layout = ShardLayout(tp=1)
+    params = model_mod.init_lm(jax.random.PRNGKey(0), cfg, layout)
+    base = dict(num_slots=2, max_len=16, prefill_bucket=8,
+                sampler=SamplerConfig(temperature=0.0), pack_params=True)
+    prompts = [[3, 1, 4], [1, 5, 9, 2], [2, 7, 1], [8, 2, 8, 1]]
+
+    single = _decode(Engine(params, cfg, layout, ServeConfig(**base),
+                            seed=0), prompts)
+    eng = Engine(params, cfg, layout,
+                 ServeConfig(**base, mesh=_mesh()), seed=0)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=np.asarray(p),
+                           max_new_tokens=4))
+    # A few ticks: 2 slots busy decoding, 2 requests still queued.
+    for _ in range(2):
+        eng.step()
+    assert any(u != -1 for u in eng._sched.slot_uid)
+    assert eng._sched.queue
+
+    # Fake-clock watchdog declares device 7 dead...
+    t = [0.0]
+    wd = eng.make_watchdog(WatchdogConfig(dead_after_s=5.0),
+                           clock=lambda: t[0])
+    for h in range(7):
+        wd.heartbeat(h, 0.1)
+    t[0] = 10.0
+    for h in range(7):
+        wd.heartbeat(h, 0.1)
+    assert wd.check().dead == [7]
+
+    # ...and the rebuild carries every unfinished request across.
+    dead_dev = list(eng.scfg.mesh.devices.flat)[7]
+    migrated = {r.uid for r in eng._sched.unfinished()}
+    eng2 = eng.rebuild_after_loss([dead_dev])
+    assert migrated == {r.uid for r in list(eng2._sched.queue)}, \
+        (migrated, [r.uid for r in eng2._sched.queue])
+    res = eng2.run()
+    assert sorted(res) == sorted(migrated), (sorted(res), migrated)
+    for uid, r in res.items():
+        assert r.status == "ok", (uid, r.status)
+        assert r.tokens == single[uid], uid
+    eng.close()
+    eng2.close()
+
+
 def main():
     for name, outcome in REPORT.items():
         if outcome != "ok":

@@ -1,0 +1,523 @@
+"""Chaos harness + resilience plane (repro.resilience, docs/resilience.md).
+
+Four layers:
+
+* fault-plane units — plan grammar, seeded determinism, context
+  matching, zero-overhead disarmed semantics;
+* degradation units — kernel fallback chain (bit-identical to the
+  degraded-to backend, decision cached), tuner/plan-cache containment,
+  accumulator-bound guard, concurrent plan-cache writers;
+* the CHAOS STORM e2e — a seeded multi-point fault plan over a
+  16-request ChunkedScheduler run: no hangs, every request resolves
+  with a definite status, pages and obs counters reconcile exactly,
+  and the same plan replays the same outcome (fake clock);
+* teardown — Engine.close() idempotency with faults mid-run.
+
+The CI chaos job runs this file with ``REPRO_FAULTS`` armed (the storm
+test prefers the env plan when set) and ``repro.obs --check`` over the
+resulting event log.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_smoke
+from repro.kernels import ops
+from repro.kernels.modes import QuantMode, accumulator_bound
+from repro.kernels.qtensor import QTensor
+from repro.models import model as model_mod
+from repro.models.common import ShardLayout
+from repro.resilience import faults
+from repro.serving import Engine, Request, SamplerConfig, ServeConfig
+from repro.tune import cache as plan_cache
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+LAYOUT = ShardLayout(tp=1)
+
+# Every status the scheduler may mint; the storm asserts membership.
+DEFINITE = {"ok", "expired", "cancelled", "rejected", "numeric_error",
+            "error"}
+
+# The built-in storm (used when CI doesn't inject its own REPRO_FAULTS):
+# four distinct fault types against the 16-request run below.
+STORM = ("pages.exhausted@1+3+6;logits.nan@0;device.loss@2;step.stall@1;"
+         "seed=1234;stall=0.002")
+
+
+@pytest.fixture(autouse=True)
+def clean_plane():
+    """Each test starts disarmed with an empty fallback decision cache;
+    an env-armed plan (the CI chaos job) is restored afterwards."""
+    prev = faults.active()
+    faults.disarm()
+    ops.reset_fallbacks()
+    yield
+    faults.disarm()
+    ops.reset_fallbacks()
+    if prev is not None:
+        faults.arm(prev)
+
+
+@pytest.fixture()
+def obs_on():
+    was = obs.obs_enabled()
+    obs.set_enabled(True)
+    yield
+    obs.set_enabled(was)
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke("tinyllama-1.1b")
+    params = model_mod.init_lm(jax.random.PRNGKey(1234), cfg, LAYOUT)
+    return cfg, params
+
+
+class FakeClock:
+    """Deterministic engine clock: +1s per read, so backoff windows and
+    replays do not depend on wall time."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def _engine(smoke, scfg=None, clock=None):
+    cfg, params = smoke
+    scfg = scfg or ServeConfig(
+        num_slots=4, max_len=64, prefill_bucket=8, page_size=8,
+        prefill_chunk=8, sampler=SamplerConfig(temperature=0.0))
+    return Engine(params, cfg.with_(kv_cache_dtype="tnn2"), LAYOUT, scfg,
+                  seed=0, clock=clock)
+
+
+def _prompts(cfg, n=16):
+    rng = np.random.default_rng(7)
+    return [rng.integers(0, cfg.vocab_size, ln)
+            for ln in ([8, 16, 8, 16, 8, 8, 16, 8] * 2)[:n]]
+
+
+# ------------------------------------------------------ fault plane units
+
+def test_parse_plan_grammar():
+    plan = faults.parse_plan(
+        "kernel.compile@0+4?backend=pallas&op=qmm;logits.nan:0.25;"
+        "seed=9;stall=0.5")
+    assert plan.seed == 9 and plan.stall_s == 0.5
+    spec = plan.specs["kernel.compile"]
+    assert spec.hits == (0, 4)
+    assert spec.match == {"backend": "pallas", "op": "qmm"}
+    assert plan.specs["logits.nan"].rate == 0.25
+
+
+def test_parse_plan_rejects_unknown_point_and_bad_match():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        faults.parse_plan("kernel.compiel@0")
+    with pytest.raises(ValueError, match="match clause"):
+        faults.parse_plan("kernel.compile@0?backend")
+    with pytest.raises(ValueError, match="rate"):
+        faults.parse_plan("logits.nan:1.5")
+    assert faults.parse_plan("seed=3;stall=0.1") is None
+
+
+def test_rate_stream_is_seed_deterministic():
+    def firing(seed):
+        plan = faults.FaultPlan(
+            [faults.FaultSpec("logits.nan", rate=0.5)], seed=seed)
+        return [plan.should_fire("logits.nan", {}) >= 0
+                for _ in range(200)]
+
+    assert firing(7) == firing(7)
+    assert firing(7) != firing(8)
+
+
+def test_match_filter_only_counts_matching_hits():
+    plan = faults.arm(faults.parse_plan(
+        "kernel.compile@0?backend=pallas"))
+    assert not faults.fire("kernel.compile", backend="xla")
+    assert plan.hits["kernel.compile"] == 0       # non-match: not a hit
+    assert faults.fire("kernel.compile", backend="pallas")
+    assert not faults.fire("kernel.compile", backend="pallas")
+    assert plan.report()["kernel.compile"] == {"hits": 2, "fires": 1}
+
+
+def test_max_fires_caps_rate_spec():
+    plan = faults.arm(faults.FaultPlan(
+        [faults.FaultSpec("step.stall", rate=1.0, max_fires=2)]))
+    fired = sum(faults.fire("step.stall") for _ in range(10))
+    assert fired == 2 and plan.fires["step.stall"] == 2
+
+
+def test_disarmed_is_inert_and_armed_validates_points():
+    assert faults.active() is None
+    # Disarmed: any name short-circuits to False before validation —
+    # the zero-overhead contract of the instrumented hot paths.
+    assert not faults.fire("kernel.compile", backend="pallas")
+    assert faults.maybe_raise("device.loss") is None
+    faults.arm(faults.parse_plan("device.loss@0"))
+    with pytest.raises(ValueError, match="unknown fault point"):
+        faults.fire("no.such.point")
+    with pytest.raises(faults.InjectedFault, match="device.loss"):
+        faults.maybe_raise("device.loss")
+
+
+def test_env_arming_in_fresh_process():
+    env = {**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu",
+           "REPRO_FAULTS": "pages.exhausted@0;seed=3"}
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.resilience import faults; "
+         "p = faults.active(); "
+         "print(sorted(p.specs), p.seed)"],
+        env=env, capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "['pages.exhausted'] 3" in out.stdout
+    # Malformed env warns and stays disarmed instead of killing imports.
+    env["REPRO_FAULTS"] = "not.a.point@0"
+    out = subprocess.run(
+        [sys.executable, "-W", "error::UserWarning", "-c",
+         "import warnings; warnings.simplefilter('always');\n"
+         "from repro.resilience import faults\n"
+         "print(faults.active() is None)"],
+        env=env, capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "True" in out.stdout
+
+
+# ------------------------------------------------- kernel fallback chain
+
+def _qt(mode=QuantMode.TNN, k=96, n=32):
+    rng = np.random.default_rng(11)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    return QTensor.from_dense(jnp.asarray(w), mode)
+
+
+def test_qmm_fallback_is_bit_identical_and_cached(obs_on):
+    qt = _qt()
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((5, 96)).astype(np.float32))
+    want = np.asarray(ops.qmm(x, qt, backend="xla"))
+    ctr = obs.get_registry().counter(
+        "repro_kernel_fallback_total",
+        labels=("op", "mode", "from_backend", "to_backend"))
+    before = ctr.total()
+
+    faults.arm(faults.parse_plan("kernel.compile@0?backend=pallas"))
+    with pytest.warns(UserWarning, match="degrading to"):
+        got = np.asarray(ops.qmm(x, qt, backend="pallas"))
+    assert np.array_equal(got, want)
+    assert ops.fallback_decisions()[("qmm", QuantMode.TNN, "pallas")] \
+        == "xla"
+    assert ctr.total() == before + 1
+    # The decision is CACHED: the next dispatch goes straight to the
+    # degraded backend without re-attempting (no new fallback count).
+    again = np.asarray(ops.qmm(x, qt, backend="pallas"))
+    assert np.array_equal(again, want)
+    assert ctr.total() == before + 1
+    ops.reset_fallbacks()
+    faults.disarm()
+    assert ops.fallback_decisions() == {}
+
+
+def test_qmm_degrades_to_dense_oracle_when_xla_fails():
+    qt = _qt()
+    x = jnp.asarray(np.random.default_rng(1)
+                    .standard_normal((4, 96)).astype(np.float32))
+    want = np.asarray(ops.qmm(x, qt, backend="xla"))
+    faults.arm(faults.parse_plan("kernel.compile@0?backend=xla"))
+    with pytest.warns(UserWarning, match="degrading to"):
+        got = np.asarray(ops.qmm(x, qt, backend="xla"))
+    assert np.array_equal(got, want)     # oracle == fused, exactly
+    assert ops.fallback_decisions()[("qmm", QuantMode.TNN, "xla")] \
+        == "oracle"
+
+
+def test_qmm_chain_exhaustion_propagates():
+    qt = _qt()
+    x = jnp.zeros((2, 96), jnp.float32)
+    # rate=1.0 with no match: every backend attempt (incl. the oracle)
+    # fails -> the original failure reaches the caller.
+    faults.arm(faults.parse_plan("kernel.compile:1.0"))
+    with pytest.raises(faults.InjectedFault), pytest.warns(UserWarning):
+        ops.qmm(x, qt, backend="pallas")
+
+
+def test_qconv_fallback_is_bit_identical():
+    from repro.core.conv import pack_conv_filters
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((3, 3, 4, 8)).astype(np.float32)
+    qt = pack_conv_filters(jnp.asarray(w), QuantMode.TNN)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 4)).astype(np.float32))
+    want = np.asarray(ops.qconv(x, qt, backend="xla"))
+    faults.arm(faults.parse_plan("kernel.compile@0?backend=xla&op=qconv"))
+    with pytest.warns(UserWarning, match="degrading to"):
+        got = np.asarray(ops.qconv(x, qt, backend="xla"))
+    assert np.array_equal(got, want)
+    assert ops.fallback_decisions()[("qconv", QuantMode.TNN, "xla")] \
+        == "oracle"
+
+
+# ------------------------------------------- tuner / plan-cache hardening
+
+def test_plan_for_contains_cache_io_failure(obs_on, tmp_path):
+    plan_cache.set_cache_path(str(tmp_path / "plans.json"))
+    try:
+        ctr = obs.get_registry().counter("repro_tune_contained_total",
+                                         labels=("site",))
+        before = ctr.total()
+        faults.arm(faults.parse_plan("plan_cache.io:1.0"))
+        with pytest.warns(UserWarning):
+            plan = plan_cache.plan_for(QuantMode.TNN, "pallas",
+                                       fused=True, m=8, n=64, k=128)
+        assert plan.source == "default"
+        assert plan.tiles == plan_cache.DEFAULT_TILES["tnn"]
+        assert ctr.total() >= before  # load is self-contained; never raises
+    finally:
+        faults.disarm()
+        plan_cache.set_cache_path(None)
+
+
+def test_ensure_plan_survives_cache_save_failure(obs_on, tmp_path):
+    from repro.tune import tuner
+    plan_cache.set_cache_path(str(tmp_path / "plans.json"))
+    try:
+        faults.arm(faults.parse_plan("plan_cache.io:1.0?op=save"))
+        with pytest.warns(UserWarning):
+            plan, measured = tuner.ensure_plan(
+                QuantMode.TNN, "xla", m=4, n=32, k=64, reps=1, warmup=0)
+        assert plan.tiles is not None
+        ctr = obs.get_registry().counter("repro_tune_contained_total",
+                                         labels=("site",))
+        assert ctr.value(site="save") >= 1
+    finally:
+        faults.disarm()
+        plan_cache.set_cache_path(None)
+
+
+def test_corrupt_cache_file_contained_to_defaults(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text("{not json")
+    with pytest.warns(UserWarning, match="corrupt tune plan cache"):
+        cache = plan_cache.PlanCache(str(path)).load()
+    assert len(cache) == 0
+
+
+def test_stale_tmp_files_cleaned_on_load(tmp_path):
+    path = tmp_path / "plans.json"
+    stale = tmp_path / ".tune_plans.dead.tmp"
+    fresh = tmp_path / ".tune_plans.live.tmp"
+    stale.write_text("x")
+    fresh.write_text("x")
+    old = os.path.getmtime(stale) - 3600
+    os.utime(stale, (old, old))
+    plan_cache.PlanCache(str(path)).load()
+    assert not stale.exists()          # abandoned writer's litter
+    assert fresh.exists()              # an active writer's tmp survives
+
+
+_WRITER = """
+import sys
+from repro.kernels.modes import QuantMode
+from repro.tune import cache
+c = cache.PlanCache(sys.argv[1])
+c.load()
+c.put(cache.default_plan(QuantMode.TNN, "pallas", True,
+                         8, int(sys.argv[2]), 128))
+c.save()
+"""
+
+
+def test_two_process_writers_union_their_plans(tmp_path):
+    """save() merges under the advisory file lock: two processes
+    writing different plans to one cache file keep BOTH."""
+    path = str(tmp_path / "plans.json")
+    env = {**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"}
+    procs = [subprocess.Popen([sys.executable, "-c", _WRITER, path, n],
+                              env=env, stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE)
+             for n in ("64", "96")]
+    for p in procs:
+        _, err = p.communicate(timeout=300)
+        assert p.returncode == 0, err.decode()
+    plans = plan_cache.PlanCache(path).load().plans()
+    ns = sorted(pl.n for pl in plans.values())
+    assert ns == [64, 96], plans.keys()
+
+
+# ------------------------------------------------ accumulator-bound guard
+
+def test_accumulator_bounds_per_mode():
+    assert accumulator_bound(QuantMode.TNN) == 2 ** 24
+    assert accumulator_bound(QuantMode.BNN) == 2 ** 24
+    assert accumulator_bound(QuantMode.INT8) == (2 ** 31 - 1) // (255 * 255)
+    assert accumulator_bound(QuantMode.F32) is None
+
+
+def test_from_dense_rejects_overflow_depth():
+    bound = accumulator_bound(QuantMode.INT8)
+    ok = jnp.zeros((bound, 4), jnp.float32)
+    QTensor.from_dense(ok, QuantMode.INT8)          # boundary: fine
+    bad = jnp.zeros((bound + 1, 4), jnp.float32)
+    with pytest.raises(ValueError, match="accumulator bound"):
+        QTensor.from_dense(bad, QuantMode.INT8)
+    # Low-bit guard trips before any packing work happens.
+    huge = jnp.zeros((2 ** 24 + 1, 1), jnp.float32)
+    with pytest.raises(ValueError, match="accumulator bound"):
+        QTensor.from_dense(huge, QuantMode.TNN)
+
+
+# ----------------------------------------------------------- chaos storm
+
+def _storm_run(smoke, plan_text):
+    """One seeded chaos run: 16 requests through a 4-slot paged engine
+    with the plan armed; returns (results, engine, report)."""
+    cfg, _ = smoke
+    faults.arm(faults.parse_plan(plan_text))
+    eng = _engine(smoke, clock=FakeClock())
+    for uid, p in enumerate(_prompts(cfg)):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+    results = eng.run(max_steps=400)
+    report = faults.active().report()
+    faults.disarm()
+    return results, eng, report
+
+
+def test_chaos_storm_resolves_everything(smoke, obs_on):
+    """The tentpole acceptance: a multi-point seeded fault storm over a
+    16-request ChunkedScheduler run — no hangs, every request gets a
+    definite status, pages and obs counters reconcile exactly."""
+    plan_text = os.environ.get(faults.ENV_FAULTS) or STORM
+    results, eng, report = _storm_run(smoke, plan_text)
+
+    # Every submitted request resolved with a definite status.
+    assert sorted(results) == list(range(16))
+    assert {r.status for r in results.values()} <= DEFINITE
+    # No zombies: queue drained, slots free, pages reconciled to zero.
+    assert not eng._sched.queue
+    assert all(u == -1 for u in eng._sched.slot_uid)
+    for s in eng.page_stats():
+        assert s["used"] == 0 and s["free"] == s["total"]
+    # Obs reconciliation: every Result is exactly one eviction or drop.
+    snap = eng.obs.snapshot()["metrics"]
+
+    def total(name):
+        m = snap.get(name, {"series": []})
+        return sum(s["value"] for s in m["series"])
+
+    assert total("repro_engine_evictions_total") \
+        + total("repro_engine_queue_drops_total") == 16
+    # The storm really stormed (>= 4 distinct points for the built-in
+    # plan; an env-injected CI plan must fire at least one).
+    fired = {p for p, c in report.items() if c["fires"]}
+    assert len(fired) >= (4 if plan_text == STORM else 1), report
+    eng.close()
+
+
+def test_chaos_storm_replays_identically(smoke, obs_on):
+    """Same plan + same seed + fake clock -> bit-identical outcome."""
+    a, eng_a, rep_a = _storm_run(smoke, STORM)
+    b, eng_b, rep_b = _storm_run(smoke, STORM)
+    assert rep_a == rep_b
+    assert {u: (r.status, r.tokens) for u, r in a.items()} \
+        == {u: (r.status, r.tokens) for u, r in b.items()}
+    eng_a.close()
+    eng_b.close()
+
+
+def test_fault_free_replay_is_bit_identical(smoke):
+    """Disarmed, the instrumented paths change nothing run over run —
+    and every request streams to 'ok'."""
+    cfg, _ = smoke
+    outs = []
+    for _ in range(2):
+        eng = _engine(smoke, clock=FakeClock())
+        for uid, p in enumerate(_prompts(cfg, n=8)):
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+        res = eng.run()
+        outs.append({u: (r.status, r.tokens) for u, r in res.items()})
+        assert all(s == "ok" for s, _ in outs[-1].values())
+        eng.close()
+    assert outs[0] == outs[1]
+
+
+def test_backpressure_rejects_past_queue_bound(smoke, obs_on):
+    cfg, _ = smoke
+    scfg = ServeConfig(num_slots=2, max_len=64, prefill_bucket=8,
+                       page_size=8, prefill_chunk=8, max_queue=3,
+                       sampler=SamplerConfig(temperature=0.0))
+    eng = _engine(smoke, scfg=scfg)
+    for uid, p in enumerate(_prompts(cfg, n=6)):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=2))
+    # 3 queued, 3 rejected immediately with a definite Result.
+    rejected = [u for u, r in eng.results.items() if r.status == "rejected"]
+    assert rejected == [3, 4, 5]
+    res = eng.run()
+    assert sorted(res) == list(range(6))
+    assert [res[u].status for u in range(3)] == ["ok"] * 3
+    eng.close()
+
+
+def test_preemption_retries_to_completion(smoke, obs_on):
+    """Injected page exhaustion preempts victims back to the queue;
+    with backoff (fake clock) they re-admit and finish 'ok'."""
+    cfg, _ = smoke
+    faults.arm(faults.parse_plan("pages.exhausted@1+2;seed=5"))
+    eng = _engine(smoke, clock=FakeClock())
+    for uid, p in enumerate(_prompts(cfg, n=4)):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=3))
+    res = eng.run(max_steps=200)
+    faults.disarm()
+    assert sorted(res) == [0, 1, 2, 3]
+    assert all(r.status == "ok" for r in res.values())
+    snap = eng.obs.snapshot()["metrics"]
+    pre = snap["repro_engine_preemptions_total"]["series"]
+    assert sum(s["value"] for s in pre) == 2
+    assert pre[0]["labels"] == {"cause": "page_exhausted"}
+    for s in eng.page_stats():
+        assert s["used"] == 0
+    eng.close()
+
+
+# ----------------------------------------------------- teardown semantics
+
+def test_close_idempotent_under_faults(smoke, obs_on, tmp_path,
+                                       monkeypatch):
+    """close() after a quarantined step — then close() again — flushes
+    the obs sink once and releases pages exactly once."""
+    events = tmp_path / "events.jsonl"
+    monkeypatch.setenv("REPRO_OBS_EVENTS", str(events))
+    faults.arm(faults.parse_plan("device.loss@1;seed=2"))
+    eng = _engine(smoke, clock=FakeClock())
+    cfg, _ = smoke
+    for uid, p in enumerate(_prompts(cfg, n=4)):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=3))
+    res = eng.run(max_steps=100)       # hits the injected device loss
+    assert "error" in {r.status for r in res.values()}
+    faults.disarm()
+    # Leave fresh work IN FLIGHT so close() really has pages to drop.
+    for uid, p in enumerate(_prompts(cfg, n=2)):
+        eng.submit(Request(uid=100 + uid, prompt=p, max_new_tokens=3))
+    eng.step()
+    assert any(u != -1 for u in eng._sched.slot_uid)
+    eng.close()
+    eng.close()                        # must be a no-op, not a crash
+    for s in eng.page_stats():
+        assert s["used"] == 0 and s["free"] == s["total"]
+    lines = [json.loads(ln) for ln in events.read_text().splitlines()]
+    closes = [ln for ln in lines
+              if ln.get("kind") == "engine_close"
+              and ln.get("engine") == eng.obs.engine_id]
+    assert len(closes) == 1, closes
+    errs = [ln for ln in lines if ln.get("kind") == "step_error"]
+    assert len(errs) == 1 and errs[0]["error"] == "InjectedFault"

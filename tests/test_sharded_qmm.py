@@ -138,3 +138,11 @@ def test_k_shard_reduction_psums_integers(sharded_report):
 def test_sharded_qconv_matches_single_device_oracle(sharded_report):
     assert sharded_report["qconv_sharded_matches_oracle"] == "ok", \
         sharded_report["qconv_sharded_matches_oracle"]
+
+
+def test_watchdog_rebuild_migrates_inflight_requests(sharded_report):
+    """Rebuild with work in flight: queued + mid-decode requests all
+    migrate to the new engine and resolve there with status "ok" and
+    the single-device tokens (docs/resilience.md)."""
+    assert sharded_report["watchdog_rebuild_inflight"] == "ok", \
+        sharded_report["watchdog_rebuild_inflight"]
